@@ -1,0 +1,39 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (SimConfig, build_paper_hosts, build_paper_network,
+                        get_policy, init_sim, paper_workload, run_sim,
+                        summarize)
+from repro.core.datacenter import scaled_hosts
+from repro.core.network import SpineLeafSpec, build_network, set_link_params
+
+POLICIES = ["firstfit", "round", "performance_first", "jobgroup"]
+
+
+def run_policy(name: str, cfg: SimConfig | None = None, bw=None, loss=None,
+               seed: int = 0, n_hosts: int = 20):
+    cfg = cfg or SimConfig()
+    hosts = (build_paper_hosts() if n_hosts == 20
+             else scaled_hosts(n_hosts, max(4, n_hosts // 5)))
+    spec = SpineLeafSpec(n_spine=2, n_leaf=max(4, n_hosts // 5),
+                         n_hosts=n_hosts)
+    net = build_network(spec)
+    if bw is not None or loss is not None:
+        net = set_link_params(net, bw=bw, loss=loss)
+    sim0 = init_sim(hosts, paper_workload(cfg, seed=seed), net, seed=seed)
+    t0 = time.time()
+    final, metrics = run_sim(sim0, cfg, get_policy(name), spec.n_hosts,
+                             spec.n_nodes, cfg.horizon)
+    final.t.block_until_ready()
+    wall = time.time() - t0
+    rep = summarize(final, metrics)
+    rep["wall_s"] = wall
+    return rep, metrics
+
+
+def series(metrics, field):
+    return np.asarray(getattr(metrics, field))

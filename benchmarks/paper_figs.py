@@ -1,0 +1,151 @@
+"""Paper-figure benchmarks (DCSim §4.1): one function per figure.
+
+Each returns (rows, derived) where rows are CSV-able dicts and ``derived``
+is the one-line claim check recorded in EXPERIMENTS.md §Paper-validation.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import POLICIES, run_policy, series
+from repro.core import SimConfig
+
+
+def fig4_datacenter():
+    """Queues + overloaded hosts per policy (paper Fig 4)."""
+    rows, claims = [], []
+    peak_dep = {}
+    for p in POLICIES:
+        rep, m = run_policy(p)
+        over = series(m, "n_overloaded")
+        rows.append({
+            "policy": p,
+            "peak_deployed": rep["peak_deployed"],
+            "overloaded_first8s": int(over[:8].sum()),
+            "t_first_overload": int(np.argmax(over > 0)) if (over > 0).any()
+            else -1,
+            "completed": rep["n_completed"],
+        })
+        peak_dep[p] = rep["peak_deployed"]
+    claims.append(("running queue saturates ~120",
+                   100 < max(peak_dep.values()) < 150))
+    _, m_rd = run_policy("round")
+    claims.append(("Round zero overload 0-8s",
+                   series(m_rd, "n_overloaded")[:8].max() == 0))
+    return rows, claims
+
+
+def fig5_network():
+    """Avg container communication time vs link bw / loss (paper Fig 5)."""
+    rows = []
+    comm = {}
+    for bw, loss in [(1000.0, 0.0), (600.0, 0.0), (200.0, 0.0),
+                     (1000.0, 0.01), (1000.0, 0.02), (200.0, 0.02)]:
+        for p in POLICIES:
+            rep, _ = run_policy(p, bw=bw, loss=loss)
+            rows.append({"policy": p, "bw_mbps": bw, "loss": loss,
+                         "avg_comm_time": round(rep["avg_comm_time"], 3)})
+            comm[(p, bw, loss)] = rep["avg_comm_time"]
+    worst = (200.0, 0.02)
+    claims = [
+        ("JobGroup lowest comm time @200Mbps/2%",
+         comm[("jobgroup", *worst)] == min(comm[(p, *worst)]
+                                           for p in POLICIES)),
+        ("Round highest comm time @200Mbps/2%",
+         comm[("round", *worst)] == max(comm[(p, *worst)]
+                                        for p in POLICIES)),
+        ("comm time rises as bw drops (firstfit)",
+         comm[("firstfit", 200.0, 0.0)] > comm[("firstfit", 1000.0, 0.0)]),
+        ("comm time rises with loss (firstfit)",
+         comm[("firstfit", 1000.0, 0.02)] > comm[("firstfit", 1000.0, 0.0)]),
+    ]
+    return rows, claims
+
+
+def fig6_scheduling():
+    """Arrivals vs scheduling decisions per round (paper Fig 6)."""
+    rows, claims = [], []
+    for p in POLICIES:
+        rep, m = run_policy(p)
+        arr = series(m, "new_arrivals")
+        dec = series(m, "decisions")
+        rows.append({
+            "policy": p,
+            "arrivals_total": int(arr.sum()),
+            "decisions_total": int(dec.sum()),
+            "decisions_0_10s": int(dec[:10].sum()),
+            "arrivals_0_10s": int(arr[:10].sum()),
+            "t_last_decision": int(np.max(np.nonzero(dec)[0])),
+        })
+    # early capacity: decisions track arrivals in the first 10 s
+    r0 = rows[0]
+    claims.append(("decisions~arrivals while capacity lasts (<=10s)",
+                   abs(r0["decisions_0_10s"] - r0["arrivals_0_10s"])
+                   <= max(6, int(0.15 * max(r0["arrivals_0_10s"], 1)))))
+    claims.append(("decisions stop once workload drains",
+                   all(r["t_last_decision"] < 90 for r in rows)))
+    return rows, claims
+
+
+def fig7_migration():
+    """OverloadMigrate migration timeline (paper Fig 7)."""
+    rep, m = run_policy("overload_migrate")
+    mig = series(m, "migrations")
+    rows = [{"window": "0-40s", "migrations": int(mig[:40].sum())},
+            {"window": "40-60s", "migrations": int(mig[40:60].sum())},
+            {"window": "60s+", "migrations": int(mig[60:].sum())},
+            {"window": "total", "migrations": int(mig.sum())}]
+    claims = [("migrations happen", mig.sum() > 0),
+              ("migration stops once overload clears",
+               mig[80:].sum() == 0)]
+    return rows, claims
+
+
+def fig8_system():
+    """Average container runtime vs link loss (paper Fig 8)."""
+    rows = []
+    rt = {}
+    for loss in (0.0, 0.01, 0.02):
+        for p in POLICIES:
+            rep, _ = run_policy(p, loss=loss)
+            rows.append({"policy": p, "loss": loss,
+                         "avg_runtime": round(rep["avg_runtime"], 2),
+                         "total_cost": round(rep["total_cost"], 0)})
+            rt[(p, loss)] = rep["avg_runtime"]
+    claims = [
+        ("JobGroup lowest avg runtime @2% loss",
+         rt[("jobgroup", 0.02)] == min(rt[(p, 0.02)] for p in POLICIES)),
+        ("Round worst avg runtime @2% loss",
+         rt[("round", 0.02)] == max(rt[(p, 0.02)] for p in POLICIES)),
+        ("loss widens the gap",
+         (rt[("round", 0.02)] - rt[("jobgroup", 0.02)])
+         > (rt[("round", 0.0)] - rt[("jobgroup", 0.0)])),
+    ]
+    return rows, claims
+
+
+def fig9_10_variance():
+    """Stretched workload: queue drain + utilization variance (Figs 9/10)."""
+    rows, claims = [], []
+    var = {}
+    for window, label in [(36.0, "36s"), (100.0, "100s")]:
+        cfg = SimConfig(arrival_window=window,
+                        horizon=160 if window > 50 else 120)
+        for p in POLICIES:
+            rep, m = run_policy(p, cfg=cfg)
+            rows.append({"policy": p, "arrival_window": label,
+                         "mean_util_variance":
+                             round(rep["mean_util_variance"], 5),
+                         "peak_waiting": int(series(m, "n_inactive").max()),
+                         "completed": rep["n_completed"]})
+            var[(p, label)] = rep["mean_util_variance"]
+    claims.append(
+        ("Round & JobGroup lowest util variance @100s",
+         sorted(POLICIES, key=lambda p: var[(p, "100s")])[:2]
+         in ([a, b] for a in ("round", "jobgroup")
+             for b in ("round", "jobgroup") if a != b)))
+    w36 = [r["peak_waiting"] for r in rows if r["arrival_window"] == "36s"]
+    w100 = [r["peak_waiting"] for r in rows if r["arrival_window"] == "100s"]
+    claims.append(("stretched arrivals shrink the waiting queue",
+                   max(w100) < max(w36)))
+    return rows, claims

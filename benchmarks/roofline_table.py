@@ -1,0 +1,54 @@
+"""§Roofline feed: formats experiments/dryrun_results.json into the
+per-(arch x shape x mesh) table used by EXPERIMENTS.md."""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "dryrun_results.json")
+
+
+def load(mesh: str = "single"):
+    with open(RESULTS) as f:
+        rows = json.load(f)
+    return [r for r in rows if r["mesh"] == mesh]
+
+
+def roofline_rows(mesh: str = "single"):
+    rows = []
+    for r in sorted(load(mesh), key=lambda r: (r["arch"], r["shape"])):
+        if r["status"] == "skipped":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "mesh": mesh, "status": "skipped"})
+            continue
+        if r["status"] != "ok":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "mesh": mesh, "status": "ERROR"})
+            continue
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": mesh,
+            "status": "ok",
+            "t_compute_s": round(r["t_compute"], 4),
+            "t_memory_s": round(r["t_memory"], 4),
+            "t_collective_s": round(r["t_collective"], 4),
+            "bottleneck": r["bottleneck"],
+            "model_flops": f"{r['model_flops']:.3e}",
+            "useful_ratio": r["useful_ratio"],
+            "coll_gib_per_dev": round(r["coll_bytes_per_dev"] / 2**30, 2),
+        })
+    return rows
+
+
+def run_table():
+    rows = roofline_rows("single")
+    ok = [r for r in rows if r["status"] == "ok"]
+    n_skip = sum(r["status"] == "skipped" for r in rows)
+    bounds = {}
+    for r in ok:
+        bounds[r["bottleneck"]] = bounds.get(r["bottleneck"], 0) + 1
+    claims = [
+        ("cells compiled", f"{len(ok)} ok / {n_skip} documented skips"),
+        ("bottleneck mix", str(bounds)),
+    ]
+    return rows, claims

@@ -1,0 +1,66 @@
+"""Computing + networking integration, end to end (the paper's thesis).
+
+Takes REAL per-step compute/communication profiles from the multi-pod
+dry-run (experiments/dryrun_results.json), converts them into DCSim jobs
+via repro.core.bridge, and compares a computing-only scheduler
+(performance_first) against the computing+networking scheduler (jobgroup)
+on the paper's heterogeneous testbed.
+
+    PYTHONPATH=src python examples/schedule_training_cluster.py
+"""
+import os
+import sys
+sys.path.insert(0, "src")
+
+from repro.core import (SimConfig, build_paper_hosts, build_paper_network,
+                        get_policy, init_sim, run_sim, summarize)
+from repro.core.bridge import MLJobSpec, jobs_from_results, workload_from_jobs
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "dryrun_results.json")
+
+
+def fallback_jobs():
+    """Analytic job mix if the dry-run results are absent."""
+    return [
+        MLJobSpec("smollm-360m", "train_4k", 6, 10, 1.5e14, 5e9, 4.0),
+        MLJobSpec("qwen2.5-3b", "train_4k", 6, 10, 1.2e14, 7e9, 8.0),
+        MLJobSpec("olmoe-1b-7b", "train_4k", 6, 10, 6e13, 9e9, 8.0),
+    ]
+
+
+def main() -> None:
+    jobs = (jobs_from_results(RESULTS, n_workers=6, steps=10)
+            if os.path.exists(RESULTS) else fallback_jobs())
+    print(f"scheduling {len(jobs)} ML jobs "
+          f"({sum(j.n_workers for j in jobs)} containers):")
+    for j in jobs:
+        print(f"  {j.arch:20s} {j.flops_per_step:9.2e} FLOP/step/worker  "
+              f"{j.coll_bytes_per_step/2**30:6.2f} GiB/step collectives")
+
+    cfg = SimConfig(horizon=220, max_containers_per_host=10)
+    hosts = build_paper_hosts()
+    spec, net = build_paper_network(cfg, bw=10000.0)
+
+    print(f"\n{'policy':20s} {'completed':>9s} {'avg_runtime':>11s} "
+          f"{'avg_comm':>9s} {'cost':>8s}")
+    results = {}
+    for policy in ["performance_first", "jobgroup"]:
+        conts = workload_from_jobs(jobs, cfg)
+        sim0 = init_sim(hosts, conts, net)
+        final, metrics = run_sim(sim0, cfg, get_policy(policy),
+                                 spec.n_hosts, spec.n_nodes, cfg.horizon)
+        rep = summarize(final, metrics)
+        results[policy] = rep
+        print(f"{policy:20s} {rep['n_completed']:9d} "
+              f"{rep['avg_runtime']:11.2f} {rep['avg_comm_time']:9.2f} "
+              f"{rep['total_cost']:8.0f}")
+
+    speedup = (results["performance_first"]["avg_runtime"]
+               / max(results["jobgroup"]["avg_runtime"], 1e-9))
+    print(f"\ncomputing+networking scheduling runs ML jobs "
+          f"{speedup:.2f}x faster than computing-only placement")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Perf hillclimb driver: probe roofline terms for config variants of the
+three chosen cells (EXPERIMENTS.md §Perf).
+
+    PYTHONPATH=src python experiments/hillclimb.py [--cell NAME]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+
+from repro.configs import SHAPES, get_config
+from repro.launch.dryrun import probe_costs
+from repro.launch.mesh import make_production_mesh
+from repro.train.step import StepConfig
+
+OUT = os.path.join(os.path.dirname(__file__), "hillclimb_results.json")
+
+# cell -> list of (variant-name, config-overrides)
+CELLS = {
+    # worst useful-ratio cell: 15 heads don't divide model=16 -> S^2 logits
+    # replicated on every model shard
+    "smollm_prefill": ("smollm-360m", "prefill_32k", [
+        ("baseline", {}),
+        ("sp_attn", {"seq_parallel": "attn"}),
+        ("sp_full", {"seq_parallel": "full"}),
+    ]),
+    # most collective-bound cell (24H % 16 != 0 as well)
+    "phi4_prefill": ("phi4-mini-3.8b", "prefill_32k", [
+        ("baseline", {}),
+        ("sp_attn", {"seq_parallel": "attn"}),
+        ("sp_full", {"seq_parallel": "full"}),
+    ]),
+    # the paper-representative cell: flagship MoE training step
+    "deepseek_train": ("deepseek-v2-236b", "train_4k", [
+        ("baseline", {}),
+        # iteration 2: bf16 rope (apply_rope no longer leaks f32 q/k) +
+        # explicit head-sharding constraints inside MLA prefill
+        ("rope_bf16+mla_headshard", {}),
+        ("moe_a2a", {"moe_impl": "a2a"}),
+        ("sp_full", {"seq_parallel": "full"}),
+        ("moe_a2a+sp_full", {"moe_impl": "a2a", "seq_parallel": "full"}),
+    ]),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default=None)
+    args = ap.parse_args()
+
+    results = []
+    if os.path.exists(OUT):
+        results = json.load(open(OUT))
+    done = {(r["cell"], r["variant"]) for r in results}
+
+    mesh = make_production_mesh()
+    cells = {args.cell: CELLS[args.cell]} if args.cell else CELLS
+    for cell, (arch, shape_name, variants) in cells.items():
+        for vname, overrides in variants:
+            if (cell, vname) in done:
+                print(f"[cached] {cell}/{vname}")
+                continue
+            cfg = dataclasses.replace(get_config(arch), **overrides)
+            t0 = time.time()
+            try:
+                terms = probe_costs(cfg, SHAPES[shape_name], mesh,
+                                    StepConfig())
+                row = {
+                    "cell": cell, "variant": vname, "arch": arch,
+                    "shape": shape_name,
+                    "t_compute": terms.t_compute,
+                    "t_memory": terms.t_memory,
+                    "t_collective": terms.t_collective,
+                    "bottleneck": terms.bottleneck,
+                    "useful_ratio": round(terms.useful_ratio, 4),
+                    "flops": terms.flops, "hbm_bytes": terms.hbm_bytes,
+                    "coll_bytes": terms.coll_bytes,
+                    "coll_breakdown": terms.coll_breakdown,
+                    "wall_s": round(time.time() - t0, 1),
+                }
+            except Exception as e:
+                row = {"cell": cell, "variant": vname, "arch": arch,
+                       "shape": shape_name, "error": f"{type(e).__name__}: {e}"}
+            results.append(row)
+            json.dump(results, open(OUT, "w"), indent=1)
+            dom = row.get("bottleneck", "ERR")
+            print(f"[{cell}/{vname}] bound={dom} "
+                  f"t=({row.get('t_compute',0):.3f},{row.get('t_memory',0):.3f},"
+                  f"{row.get('t_collective',0):.3f})s "
+                  f"useful={row.get('useful_ratio')} "
+                  f"({row.get('wall_s','-')}s)", flush=True)
+            jax.clear_caches()
+
+
+if __name__ == "__main__":
+    main()

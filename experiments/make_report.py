@@ -1,0 +1,117 @@
+"""Render the data-driven sections of EXPERIMENTS.md from the result JSONs.
+
+    PYTHONPATH=src python experiments/make_report.py > experiments/tables.md
+"""
+import json
+import os
+
+HERE = os.path.dirname(__file__)
+
+
+def fmt(x, nd=3):
+    return f"{x:.{nd}f}" if isinstance(x, (int, float)) else str(x)
+
+
+NON_TP_HEADS = {"smollm_360m", "phi4_mini_3_8b", "minitron_4b"}
+MOE = {"deepseek_v2_236b", "olmoe_1b_7b"}
+SSM = {"mamba2_1_3b", "zamba2_1_2b"}
+
+
+def fix_hint(r) -> str:
+    """One sentence: what would move the dominant term down (§Roofline)."""
+    arch, shape, dom = r["arch"], r["shape"], r["bottleneck"]
+    if shape.startswith("decode") or shape.startswith("long"):
+        if dom == "collective":
+            return ("batch more decode steps per dispatch; keep cache "
+                    "T-sharded to skip the per-step gather")
+        return ("decode is cache-bandwidth bound by construction; raise "
+                "arithmetic intensity by batching requests")
+    if arch in NON_TP_HEADS:
+        return ("seq_parallel=full: heads don't divide the model axis, so "
+                "the baseline replicates attention 16x (measured 15.8x / "
+                "3.8x wins, §Perf)")
+    if arch in MOE and dom in ("memory", "collective"):
+        return ("moe_impl=a2a (+sp_full): removes replicated dispatch and "
+                "the full-token combine psum (measured 1.9x, §Perf)")
+    if arch in SSM and dom == "memory":
+        return ("smaller ssm_chunk or the Pallas ssd_scan kernel keeps the "
+                "[Q,Q] dual-form block in VMEM instead of HBM round-trips")
+    if dom == "collective":
+        return ("seq_parallel=full converts TP output psums into bf16 "
+                "weight gathers (measured 29.6x on phi4, §Perf)")
+    if dom == "memory":
+        return ("flash-attention Pallas lowering avoids materializing "
+                "S^2 logits; CPU-fusion bias also overstates this term")
+    return "compute-bound: already near the useful-flops ceiling for " \
+           "this shape"
+
+
+def dryrun_tables():
+    rows = json.load(open(os.path.join(HERE, "dryrun_results.json")))
+    for mesh in ("single", "multi"):
+        sel = sorted((r for r in rows if r["mesh"] == mesh),
+                     key=lambda r: (r["arch"], r["shape"]))
+        print(f"\n### Dry-run — {'16x16 (256 chips)' if mesh == 'single' else '2x16x16 (512 chips, 2 pods)'}\n")
+        print("| arch | shape | status | bottleneck | t_compute (s) | "
+              "t_memory (s) | t_collective (s) | useful | coll GiB/dev | "
+              "what moves the dominant term |")
+        print("|---|---|---|---|---|---|---|---|---|---|")
+        for r in sel:
+            if r["status"] != "ok":
+                print(f"| {r['arch']} | {r['shape']} | {r['status']} | "
+                      f"{r.get('reason', r.get('error',''))[:60]} | | | | | | |")
+                continue
+            print(f"| {r['arch']} | {r['shape']} | ok | {r['bottleneck']} | "
+                  f"{fmt(r['t_compute'], 4)} | {fmt(r['t_memory'], 3)} | "
+                  f"{fmt(r['t_collective'], 3)} | {fmt(r['useful_ratio'])} | "
+                  f"{fmt(r['coll_bytes_per_dev'] / 2**30, 1)} | "
+                  f"{fix_hint(r)} |")
+
+
+def hillclimb_table():
+    path = os.path.join(HERE, "hillclimb_results.json")
+    if not os.path.exists(path):
+        return
+    rows = json.load(open(path))
+    print("\n### Perf hillclimb\n")
+    print("| cell | variant | bottleneck | t_compute | t_memory | "
+          "t_collective | useful | dominant-term Δ |")
+    print("|---|---|---|---|---|---|---|---|")
+    base = {}
+    for r in rows:
+        if "error" in r:
+            print(f"| {r['cell']} | {r['variant']} | ERROR "
+                  f"{r['error'][:50]} | | | | | |")
+            continue
+        dom = max(r["t_compute"], r["t_memory"], r["t_collective"])
+        if r["variant"] == "baseline":
+            base[r["cell"]] = dom
+        delta = (f"{base[r['cell']] / dom:.1f}x better"
+                 if r["cell"] in base and dom > 0 else "-")
+        print(f"| {r['cell']} | {r['variant']} | {r['bottleneck']} | "
+              f"{fmt(r['t_compute'])} | {fmt(r['t_memory'])} | "
+              f"{fmt(r['t_collective'])} | {fmt(r['useful_ratio'], 4)} | "
+              f"{delta} |")
+
+
+def bench_table():
+    path = os.path.join(HERE, "bench_rows.json")
+    if not os.path.exists(path):
+        return
+    rows = json.load(open(path))
+    print("\n### Benchmark rows (paper figures)\n")
+    for name, rs in rows.items():
+        print(f"\n**{name}** — {len(rs)} rows")
+        if not rs:
+            continue
+        keys = list(rs[0].keys())
+        print("| " + " | ".join(keys) + " |")
+        print("|" + "---|" * len(keys))
+        for r in rs[:30]:
+            print("| " + " | ".join(str(r.get(k, "")) for k in keys) + " |")
+
+
+if __name__ == "__main__":
+    dryrun_tables()
+    hillclimb_table()
+    bench_table()

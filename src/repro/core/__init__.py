@@ -1,0 +1,10 @@
+# DCSim-JAX: the paper's computing+networking-integrated container-scheduling
+# simulator as one compiled JAX program (see DESIGN.md §2 for the mapping).
+from repro.core.datacenter import (  # noqa: F401
+    PAPER_HOST_CATEGORIES, HostCategory, SimConfig, build_paper_hosts,
+    build_paper_network, scaled_hosts,
+)
+from repro.core.engine import init_sim, run_sim, run_sim_vmapped  # noqa: F401
+from repro.core.report import summarize, timeseries, to_csv  # noqa: F401
+from repro.core.scheduling import Policy, get_policy, list_policies, register  # noqa: F401
+from repro.core.workload import paper_workload, trace_workload  # noqa: F401

@@ -1,0 +1,108 @@
+"""Data center module (paper §3.3): hosts + config (paper Tables 5/6)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core import network
+from repro.core.types import HostState, make_hosts
+
+
+@dataclasses.dataclass(frozen=True)
+class HostCategory:
+    """One row of paper Table 5."""
+
+    count: int
+    cpu_cores: int      # cores; capacity = cores * 100 (percent units)
+    cpu_speed: float
+    mem_gb: int
+    mem_speed: float
+    gpu_count: int      # GPUs; capacity = gpus * 100 (percent units)
+    gpu_speed: float
+    price: float
+
+
+# Paper Table 5 — four heterogeneous host classes, five hosts each.
+PAPER_HOST_CATEGORIES: tuple[HostCategory, ...] = (
+    HostCategory(5, 80, 1.0, 128, 1.0, 8, 1.0, 1.0),
+    HostCategory(5, 80, 2.0, 128, 2.0, 8, 2.0, 1.5),
+    HostCategory(5, 80, 3.0, 128, 3.0, 8, 3.0, 3.0),
+    HostCategory(5, 80, 4.0, 128, 4.0, 8, 4.0, 5.0),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    """Simulator parameters (paper Table 6, INI-config equivalent)."""
+
+    # workload
+    n_jobs: int = 100
+    n_tasks: int = 300
+    n_containers: int = 300
+    duration_range: tuple[float, float] = (20.0, 30.0)
+    cpu_req_range: tuple[float, float] = (100.0, 1700.0)   # percent
+    mem_req_range: tuple[float, float] = (1.0, 32.0)       # GB
+    gpu_req_range: tuple[float, float] = (50.0, 200.0)     # percent
+    n_comms_range: tuple[int, int] = (1, 5)
+    comm_kb_range: tuple[float, float] = (100.0, 102400.0)  # KB per comm
+    arrival_window: float = 36.0   # jobs arrive uniformly in [0, window)
+    # simulator
+    delay_update_interval: int = 10   # ticks between delay-matrix refreshes
+    max_retries: int = 3              # iperf retransmission cap
+    congestion_threshold: float = 0.2
+    max_containers_per_host: int = 10  # network nodes allocated per host
+    overload_threshold: float = 0.7
+    idle_threshold: float = 0.3
+    # engine
+    horizon: int = 120                # simulated seconds
+    placements_per_tick: int = 64     # inner scheduling scan length
+    migrations_per_tick: int = 8
+    waterfill_rounds: int = 8
+    delay_mode: str = "path"          # 'path' | 'fw'
+    fw_use_kernel: bool = False
+    stall_rate_floor: float = 50.0    # KB/s under which a flow is 'stalled'
+    mig_kb_per_gb: float = 1024.0     # migration bytes per GB of memory req
+    queue_coef: float = 0.5
+
+
+def build_paper_hosts(categories: Sequence[HostCategory] = PAPER_HOST_CATEGORIES,
+                      n_leaf: int = 4) -> HostState:
+    rows_cap, rows_speed, price = [], [], []
+    for cat in categories:
+        for _ in range(cat.count):
+            rows_cap.append([cat.cpu_cores * 100.0, float(cat.mem_gb),
+                             cat.gpu_count * 100.0])
+            rows_speed.append([cat.cpu_speed, cat.mem_speed, cat.gpu_speed])
+            price.append(cat.price)
+    cap = np.asarray(rows_cap, np.float32)
+    speed = np.asarray(rows_speed, np.float32)
+    price_a = np.asarray(price, np.float32)
+    H = cap.shape[0]
+    leaf = (np.arange(H) % n_leaf).astype(np.int32)
+    return make_hosts(cap, speed, price_a, leaf)
+
+
+def scaled_hosts(n_hosts: int, n_leaf: int,
+                 categories: Sequence[HostCategory] = PAPER_HOST_CATEGORIES
+                 ) -> HostState:
+    """Round-robin the paper's categories up to ``n_hosts`` (Table 7 sweeps)."""
+    per = max(1, n_hosts // len(categories))
+    cats = []
+    for cat in categories:
+        cats.append(dataclasses.replace(cat, count=per))
+    # remainder goes to the first category
+    rem = n_hosts - per * len(categories)
+    if rem > 0:
+        cats[0] = dataclasses.replace(cats[0], count=per + rem)
+    return build_paper_hosts(tuple(cats), n_leaf=n_leaf)
+
+
+def build_paper_network(cfg: SimConfig, n_hosts: int = 20, n_spine: int = 2,
+                        n_leaf: int = 4, bw: float = 1000.0,
+                        loss: float = 0.0):
+    spec = network.SpineLeafSpec(
+        n_spine=n_spine, n_leaf=n_leaf, n_hosts=n_hosts,
+        host_leaf_bw=bw, leaf_spine_bw=bw, loss=loss)
+    return spec, network.build_network(spec)

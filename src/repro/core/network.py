@@ -1,0 +1,259 @@
+"""Network simulation module (paper §3.4), tensor-native.
+
+Mininet's emulated fabric is replaced by an analytic flow-level model that
+reproduces the quantities the paper *measures*:
+
+* ``ping``-refreshed delay matrix  -> min-plus Floyd-Warshall over the
+  congestion-adjusted link-delay graph (Pallas kernel on TPU; jnp ref here).
+* ``iperf`` transfers under (bw, delay, loss) -> per-flow rate =
+  min(max-min-fair share via progressive filling, Mathis TCP bound
+  MSS / (RTT * sqrt(p))).
+* bounded retransmissions -> flows stalled below a rate floor accrue retries
+  and fail after ``max_retries`` ticks (paper: failed traffic is handed back
+  to the scheduling module).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import NetState
+
+INF = jnp.float32(1e9)
+MBPS_TO_KBPS = 125.0  # 1 Mbps = 125 KB/s
+LOCAL_RATE_KBPS = 4.0e6  # same-host "loopback" transfer rate
+
+
+# ---------------------------------------------------------------------------
+# Topology construction (spine-leaf, paper Fig 3)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SpineLeafSpec:
+    n_spine: int = 2
+    n_leaf: int = 4
+    n_hosts: int = 20
+    host_leaf_bw: float = 1000.0   # Mbps
+    leaf_spine_bw: float = 1000.0  # Mbps
+    link_delay_ms: float = 0.05    # per-link base delay
+    loss: float = 0.0              # per-link packet loss fraction
+
+    @property
+    def n_nodes(self) -> int:
+        return self.n_hosts + self.n_leaf + self.n_spine
+
+    @property
+    def n_links(self) -> int:
+        return self.n_hosts + self.n_leaf * self.n_spine
+
+
+def build_network(spec: SpineLeafSpec) -> NetState:
+    """Build link tables + deterministic ECMP paths for a spine-leaf fabric.
+
+    Node numbering: hosts [0, H), leaves [H, H+L), spines [H+L, H+L+S).
+    Link numbering: host-leaf links [0, H) (link i connects host i to its
+    leaf), then leaf-spine links H + l * S + s.
+    """
+    H, L, S = spec.n_hosts, spec.n_leaf, spec.n_spine
+    E = spec.n_links
+
+    host_leaf = np.arange(H) % L                      # host -> leaf id
+    link_u = np.zeros(E, np.int32)
+    link_v = np.zeros(E, np.int32)
+    link_bw = np.zeros(E, np.float32)
+    # host-leaf links
+    link_u[:H] = np.arange(H)
+    link_v[:H] = H + host_leaf
+    link_bw[:H] = spec.host_leaf_bw
+    # leaf-spine links
+    for leaf in range(L):
+        for s in range(S):
+            e = H + leaf * S + s
+            link_u[e] = H + leaf
+            link_v[e] = H + L + s
+            link_bw[e] = spec.leaf_spine_bw
+
+    # Deterministic ECMP: pair (i, j) hashes onto spine (i + j) % S.
+    path_links = np.full((H, H, 4), -1, np.int32)
+    path_nlinks = np.zeros((H, H), np.int32)
+    for i in range(H):
+        for j in range(H):
+            if i == j:
+                continue
+            li, lj = host_leaf[i], host_leaf[j]
+            if li == lj:
+                path_links[i, j, :2] = [i, j]
+                path_nlinks[i, j] = 2
+            else:
+                s = (i + j) % S
+                path_links[i, j] = [i, H + li * S + s, H + lj * S + s, j]
+                path_nlinks[i, j] = 4
+
+    base_delay = np.full(E, spec.link_delay_ms, np.float32)
+    loss = np.full(E, spec.loss, np.float32)
+    delay0 = path_delay_matrix(
+        jnp.asarray(base_delay), jnp.asarray(path_links))
+    return NetState(
+        link_bw=jnp.asarray(link_bw),
+        link_delay=jnp.asarray(base_delay),
+        link_loss=jnp.asarray(loss),
+        link_u=jnp.asarray(link_u),
+        link_v=jnp.asarray(link_v),
+        path_links=jnp.asarray(path_links),
+        path_nlinks=jnp.asarray(path_nlinks),
+        link_util=jnp.zeros((E,), jnp.float32),
+        delay_matrix=delay0,
+    )
+
+
+def set_link_params(net: NetState, bw: float | None = None,
+                    loss: float | None = None) -> NetState:
+    """Override bandwidth / loss on every link (paper Fig 5/8 sweeps)."""
+    if bw is not None:
+        net = net._replace(link_bw=jnp.full_like(net.link_bw, bw))
+    if loss is not None:
+        net = net._replace(link_loss=jnp.full_like(net.link_loss, loss))
+    return net
+
+
+# ---------------------------------------------------------------------------
+# Delay model
+# ---------------------------------------------------------------------------
+def congested_link_delay(net: NetState, q_coef: float = 0.5,
+                         max_q: float = 20.0) -> jnp.ndarray:
+    """Per-link delay = base + M/M/1-style queueing term from utilization."""
+    u = jnp.clip(net.link_util, 0.0, 0.97)
+    return net.link_delay + jnp.minimum(q_coef * u / (1.0 - u), max_q)
+
+
+def path_delay_matrix(link_delay: jnp.ndarray,
+                      path_links: jnp.ndarray) -> jnp.ndarray:
+    """Host-to-host delay along the fixed ECMP path (fast path, 'path' mode)."""
+    padded = jnp.concatenate([link_delay, jnp.zeros((1,), link_delay.dtype)])
+    d = padded[path_links].sum(axis=-1)          # [-1] pad indexes the 0
+    return d
+
+
+def adjacency_from_links(net: NetState, link_delay: jnp.ndarray,
+                         n_nodes: int) -> jnp.ndarray:
+    """Symmetric node-graph adjacency with link delays; INF where no edge."""
+    A = jnp.full((n_nodes, n_nodes), INF, jnp.float32)
+    A = A.at[jnp.arange(n_nodes), jnp.arange(n_nodes)].set(0.0)
+    A = A.at[net.link_u, net.link_v].min(link_delay)
+    A = A.at[net.link_v, net.link_u].min(link_delay)
+    return A
+
+
+def floyd_warshall_ref(A: jnp.ndarray) -> jnp.ndarray:
+    """Pure-jnp min-plus APSP (oracle for the Pallas kernel)."""
+    n = A.shape[0]
+
+    def body(D, k):
+        D = jnp.minimum(D, D[:, k, None] + D[None, k, :])
+        return D, None
+
+    D, _ = jax.lax.scan(body, A, jnp.arange(n))
+    return D
+
+
+def update_delay_matrix(net: NetState, n_hosts: int, n_nodes: int,
+                        mode: str = "path", use_kernel: bool = False,
+                        q_coef: float = 0.5) -> NetState:
+    """Refresh the paper's delay_matrix from current congestion.
+
+    mode='path'  — sum link delays along the fixed ECMP path (O(H^2)).
+    mode='fw'    — full APSP over the node graph (the SDN-controller view);
+                   uses the Pallas blocked kernel when ``use_kernel``.
+    """
+    d_link = congested_link_delay(net, q_coef=q_coef)
+    if mode == "path":
+        D = path_delay_matrix(d_link, net.path_links)
+    else:
+        A = adjacency_from_links(net, d_link, n_nodes)
+        if use_kernel:
+            from repro.kernels.fw_minplus import ops as fw_ops
+            D_full = fw_ops.floyd_warshall(A)
+        else:
+            D_full = floyd_warshall_ref(A)
+        D = D_full[:n_hosts, :n_hosts]
+    return net._replace(delay_matrix=D)
+
+
+# ---------------------------------------------------------------------------
+# Flow-level rate allocation
+# ---------------------------------------------------------------------------
+def path_membership(path_links: jnp.ndarray, src: jnp.ndarray,
+                    dst: jnp.ndarray, n_links: int) -> jnp.ndarray:
+    """[F, E] bool: does flow f traverse link e. Same-host flows hit no link."""
+    links = path_links[src, dst]                      # [F, 4]
+    return (links[:, :, None] == jnp.arange(n_links)[None, None, :]).any(1)
+
+
+def max_min_fair_rates(member: jnp.ndarray, active: jnp.ndarray,
+                       link_bw_kbps: jnp.ndarray,
+                       n_rounds: int = 8) -> jnp.ndarray:
+    """Progressive-filling max-min fair allocation, fixed rounds, jit-safe.
+
+    Each round saturates (at least) the globally most contended link and
+    freezes the flows crossing it at their fair share.
+    """
+    F = member.shape[0]
+    member_f = member.astype(jnp.float32) * active[:, None]
+
+    def round_body(carry, _):
+        alloc, frozen, cap_rem = carry
+        unfrozen = active & ~frozen
+        live = member_f * unfrozen[:, None].astype(jnp.float32)
+        cnt = live.sum(0)                                      # [E]
+        share = jnp.where(cnt > 0, cap_rem / jnp.maximum(cnt, 1.0), INF)
+        # per-flow bound = min share along its path (INF for no-link flows)
+        bound = jnp.where(member, share[None, :], INF).min(1)  # [F]
+        bound = jnp.where(unfrozen, bound, INF)
+        m = bound.min()
+        newly = unfrozen & (bound <= m * 1.000001 + 1e-6)
+        new_alloc = jnp.where(newly, jnp.minimum(bound, LOCAL_RATE_KBPS), alloc)
+        used = (member_f * (newly * new_alloc)[:, None]).sum(0)
+        return (new_alloc, frozen | newly, jnp.maximum(cap_rem - used, 0.0)), None
+
+    alloc0 = jnp.where(active, LOCAL_RATE_KBPS, 0.0)  # no-link flows: local bw
+    init = (alloc0, active & ~member.any(1), link_bw_kbps)
+    (alloc, frozen, _), _ = jax.lax.scan(round_body, init, None, length=n_rounds)
+    # leftovers (rounds exhausted): give current bound
+    return jnp.where(active, alloc, 0.0)
+
+
+def mathis_cap(delay_matrix: jnp.ndarray, link_loss: jnp.ndarray,
+               member: jnp.ndarray, src: jnp.ndarray, dst: jnp.ndarray,
+               mss_kb: float = 1.46, c_mathis: float = 1.22) -> jnp.ndarray:
+    """TCP throughput ceiling under loss: C * MSS / (RTT * sqrt(p)) [KB/s]."""
+    # path loss: 1 - prod(1 - loss_e)
+    log_keep = jnp.where(member, jnp.log1p(-jnp.clip(link_loss, 0, 0.99))[None, :], 0.0)
+    p = 1.0 - jnp.exp(log_keep.sum(1))
+    rtt_ms = 2.0 * delay_matrix[src, dst]
+    rtt_s = jnp.maximum(rtt_ms, 1e-2) * 1e-3
+    cap = c_mathis * mss_kb / (rtt_s * jnp.sqrt(jnp.maximum(p, 1e-12)))
+    return jnp.where(p > 1e-9, cap, INF)
+
+
+def flow_rates(net: NetState, src: jnp.ndarray, dst: jnp.ndarray,
+               active: jnp.ndarray, n_rounds: int = 8
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Allocate KB/s to each (src_host -> dst_host) flow; also new link util.
+
+    Returns (rates [F], link_util [E]).
+    """
+    E = net.link_bw.shape[0]
+    src_c = jnp.clip(src, 0, None)
+    dst_c = jnp.clip(dst, 0, None)
+    member = path_membership(net.path_links, src_c, dst_c, E)
+    member = member & active[:, None]
+    bw_kbps = net.link_bw * MBPS_TO_KBPS
+    fair = max_min_fair_rates(member, active, bw_kbps, n_rounds)
+    tcp = mathis_cap(net.delay_matrix, net.link_loss, member, src_c, dst_c)
+    rates = jnp.minimum(fair, tcp) * active
+    load = (member.astype(jnp.float32) * rates[:, None]).sum(0)  # KB/s per link
+    util = jnp.where(bw_kbps > 0, load / jnp.maximum(bw_kbps, 1e-6), 0.0)
+    return rates, jnp.clip(util, 0.0, 1.0)

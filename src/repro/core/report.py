@@ -1,0 +1,62 @@
+"""Analysis-report module (paper §3.7): end-of-run evaluation metrics.
+
+The paper reports average container response time, average container
+runtime, and total cost; plus the per-tick series used in Figs 4-10.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import numpy as np
+
+from repro.core.types import STATUS_COMPLETED, SimState, TickMetrics
+
+
+def summarize(final: SimState, metrics: TickMetrics) -> Dict[str, Any]:
+    ct = final.containers
+    status = np.asarray(ct.status)
+    completed = status == STATUS_COMPLETED
+    born = np.isfinite(np.asarray(ct.submit_t))
+    started = np.asarray(ct.start_t) >= 0
+
+    submit = np.asarray(ct.submit_t)
+    start = np.asarray(ct.start_t)
+    finish = np.asarray(ct.finish_t)
+
+    resp = np.where(started & born, start - submit, np.nan)
+    runtime = np.where(completed, finish - submit, np.nan)
+    exec_time = np.where(completed, finish - start, np.nan)
+
+    def nanmean(x):
+        x = x[np.isfinite(x)]
+        return float(x.mean()) if x.size else float("nan")
+
+    return {
+        "n_containers": int(born.sum()),
+        "n_completed": int(completed.sum()),
+        "completion_rate": float(completed.sum() / max(born.sum(), 1)),
+        "avg_response_time": nanmean(resp),
+        "avg_runtime": nanmean(runtime),           # submit -> finish
+        "avg_exec_time": nanmean(exec_time),       # deploy -> finish
+        "avg_comm_time": float(np.asarray(ct.comm_time)[born].mean()),
+        "total_cost": float(final.total_cost),
+        "total_migrations": int(np.asarray(ct.n_migrations).sum()),
+        "mean_util_variance": float(np.asarray(metrics.util_variance).mean()),
+        "peak_running": int(np.asarray(metrics.n_running).max()),
+        "peak_deployed": int(np.asarray(metrics.n_deployed).max()),
+        "peak_overloaded": int(np.asarray(metrics.n_overloaded).max()),
+        "final_t": float(final.t),
+    }
+
+
+def timeseries(metrics: TickMetrics) -> Dict[str, np.ndarray]:
+    """Stacked per-tick series as a plain dict of numpy arrays (CSV-ready)."""
+    return {k: np.asarray(v) for k, v in metrics._asdict().items()}
+
+
+def to_csv(metrics: TickMetrics, path: str) -> None:
+    ts = timeseries(metrics)
+    keys = list(ts.keys())
+    rows = np.stack([ts[k].astype(np.float64) for k in keys], axis=1)
+    header = ",".join(keys)
+    np.savetxt(path, rows, delimiter=",", header=header, comments="")

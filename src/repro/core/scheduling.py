@@ -1,0 +1,191 @@
+"""Container scheduling module (paper §3.5).
+
+Selection / Placement / Execution interfaces as pure functions over the SoA
+state. All five paper algorithms are implemented; users extend by registering
+a placement (and optionally a migration) function — exactly the paper's
+"flexible and scalable interface for scheduling algorithms".
+
+Placement signature:   place(sim, c_idx) -> (host_idx | -1, new_sched)
+Migration signature:   migrate(sim)      -> (container | -1, dst | -1)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+from repro.core.datacenter import SimConfig
+from repro.core.types import (
+    STATUS_COMMUNICATING, STATUS_INACTIVE, STATUS_MIGRATING, STATUS_RUNNING,
+    STATUS_WAITING, SimState,
+)
+
+BIG = jnp.float32(1e18)
+
+
+# ---------------------------------------------------------------------------
+# Shared predicates
+# ---------------------------------------------------------------------------
+def feasible_mask(sim: SimState, c: jnp.ndarray,
+                  cfg: SimConfig) -> jnp.ndarray:
+    """Hosts that can take container ``c``: resources + net-node cap."""
+    req = sim.containers.req[c]                       # [3]
+    fits = ((sim.hosts.used + req[None, :]) <= sim.hosts.cap).all(axis=1)
+    slots = sim.hosts.n_containers < cfg.max_containers_per_host
+    return fits & slots
+
+
+def schedulable_mask(sim: SimState) -> jnp.ndarray:
+    """Containers eligible for (re)placement: submitted+unscheduled or waiting."""
+    st = sim.containers.status
+    arrived = sim.containers.submit_t <= sim.t
+    return arrived & ((st == STATUS_INACTIVE) | (st == STATUS_WAITING))
+
+
+def select_fifo(sim: SimState) -> jnp.ndarray:
+    """Paper default selection: earliest-submitted schedulable container."""
+    mask = schedulable_mask(sim)
+    C = mask.shape[0]
+    key = jnp.where(mask, sim.containers.submit_t * C + jnp.arange(C), BIG)
+    c = jnp.argmin(key)
+    return jnp.where(mask.any(), c, -1)
+
+
+def _first_true(order_key: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Index minimizing order_key among mask; -1 if mask empty."""
+    key = jnp.where(mask, order_key, BIG)
+    return jnp.where(mask.any(), jnp.argmin(key), -1)
+
+
+# ---------------------------------------------------------------------------
+# Placement strategies (paper §3.5 algorithms 2-5)
+# ---------------------------------------------------------------------------
+def place_firstfit(sim: SimState, c: jnp.ndarray, cfg: SimConfig):
+    """FirstFit [36]: lowest-numbered host satisfying the constraints."""
+    mask = feasible_mask(sim, c, cfg)
+    H = mask.shape[0]
+    return _first_true(jnp.arange(H, dtype=jnp.float32), mask), sim.sched
+
+
+def place_round(sim: SimState, c: jnp.ndarray, cfg: SimConfig):
+    """Round [37]: first feasible host after the previously chosen one."""
+    mask = feasible_mask(sim, c, cfg)
+    H = mask.shape[0]
+    offset = jnp.mod(jnp.arange(H) - sim.sched.rr_pointer - 1, H)
+    h = _first_true(offset.astype(jnp.float32), mask)
+    new_ptr = jnp.where(h >= 0, h, sim.sched.rr_pointer)
+    return h, sim.sched._replace(rr_pointer=new_ptr)
+
+
+def place_performance_first(sim: SimState, c: jnp.ndarray, cfg: SimConfig):
+    """PerformanceFirst (DRAPS-derived): fastest host for the container's
+    primary resource among feasible hosts."""
+    mask = feasible_mask(sim, c, cfg)
+    ctype = sim.containers.ctype[c]
+    speed = sim.hosts.speed[:, ctype]
+    H = mask.shape[0]
+    # maximize speed -> minimize (-speed); tie-break on host index
+    key = -speed * H + jnp.arange(H, dtype=jnp.float32) * 1e-3
+    return _first_true(key, mask), sim.sched
+
+
+def place_jobgroup(sim: SimState, c: jnp.ndarray, cfg: SimConfig):
+    """JobGroup (CA-WFD-derived): host holding the most dependent containers
+    (same job); if none deployed anywhere, worst-fit on available resources."""
+    mask = feasible_mask(sim, c, cfg)
+    H = mask.shape[0]
+    job = sim.containers.job[c]
+    st = sim.containers.status
+    deployed = ((st == STATUS_RUNNING) | (st == STATUS_COMMUNICATING) |
+                (st == STATUS_MIGRATING))
+    same_job = deployed & (sim.containers.job == job) & (sim.containers.host >= 0)
+    counts = jnp.zeros((H,), jnp.float32).at[
+        jnp.clip(sim.containers.host, 0, H - 1)
+    ].add(same_job.astype(jnp.float32))
+    any_dep = counts.sum() > 0
+    # worst-fit score: total normalized free resources
+    free = (sim.hosts.cap - sim.hosts.used) / jnp.maximum(sim.hosts.cap, 1e-6)
+    avail = free.sum(axis=1)
+    key_dep = -counts * H + jnp.arange(H, dtype=jnp.float32) * 1e-3
+    key_wf = -avail * H + jnp.arange(H, dtype=jnp.float32) * 1e-3
+    key = jnp.where(any_dep, key_dep, key_wf)
+    return _first_true(key, mask), sim.sched
+
+
+# ---------------------------------------------------------------------------
+# OverloadMigrate (paper §3.5 algorithm 1, DRAPS-derived)
+# ---------------------------------------------------------------------------
+def overload_migrate(sim: SimState, cfg: SimConfig):
+    """Pick (container, destination) relieving the most overloaded host.
+
+    * source: host with max over-threshold utilization on any resource;
+    * container: deployed container on it consuming the most of the host's
+      bottleneck resource (and not already migrating/communicating);
+    * destination: feasible host with all utilizations < idle threshold.
+    Returns (-1, -1) when no (source, container, destination) triple exists.
+    """
+    util = sim.hosts.used / jnp.maximum(sim.hosts.cap, 1e-6)   # [H, 3]
+    worst = util.max(axis=1)
+    overloaded = worst > cfg.overload_threshold
+    H = worst.shape[0]
+    src = _first_true(-worst * H + jnp.arange(H, dtype=jnp.float32) * 1e-3,
+                      overloaded)
+    src_c = jnp.clip(src, 0, H - 1)
+    bottleneck = jnp.argmax(util[src_c])                       # resource index
+
+    st = sim.containers.status
+    movable = (st == STATUS_RUNNING) & (sim.containers.host == src_c)
+    usage = sim.containers.req[:, bottleneck]
+    C = movable.shape[0]
+    cont = _first_true(-usage * C + jnp.arange(C, dtype=jnp.float32) * 1e-3,
+                       movable)
+    cont_c = jnp.clip(cont, 0, C - 1)
+
+    req = sim.containers.req[cont_c]
+    fits = ((sim.hosts.used + req[None, :]) <= sim.hosts.cap).all(axis=1)
+    idle = (util < cfg.idle_threshold).all(axis=1)
+    slots = sim.hosts.n_containers < cfg.max_containers_per_host
+    dst_mask = fits & idle & slots & (jnp.arange(H) != src_c)
+    dst = _first_true(jnp.arange(H, dtype=jnp.float32), dst_mask)
+
+    ok = (src >= 0) & (cont >= 0) & (dst >= 0)
+    return jnp.where(ok, cont, -1), jnp.where(ok, dst, -1)
+
+
+# ---------------------------------------------------------------------------
+# Registry (paper: "easy extensibility of container scheduling algorithms")
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    name: str
+    place: Callable  # (sim, c, cfg) -> (host, sched)
+    select: Callable = select_fifo
+    migrate: Callable | None = None  # (sim, cfg) -> (container, dst)
+
+
+_REGISTRY: dict[str, Policy] = {}
+
+
+def register(policy: Policy) -> Policy:
+    _REGISTRY[policy.name] = policy
+    return policy
+
+
+def get_policy(name: str) -> Policy:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown policy {name!r}; known: {sorted(_REGISTRY)}") from None
+
+
+def list_policies() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+register(Policy("firstfit", place_firstfit))
+register(Policy("round", place_round))
+register(Policy("performance_first", place_performance_first))
+register(Policy("jobgroup", place_jobgroup))
+register(Policy("overload_migrate", place_firstfit, migrate=overload_migrate))

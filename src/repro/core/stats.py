@@ -1,0 +1,49 @@
+"""Data collection module (paper §3.7): per-tick metric extraction.
+
+The paper's ``Stat`` class samples host/container/network state once per
+second (``save_stats`` process).  Here each tick's metrics are emitted as the
+``ys`` of the engine's ``lax.scan``, so the full time series materializes as
+stacked arrays with zero Python overhead.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.types import (
+    STATUS_COMMUNICATING, STATUS_COMPLETED, STATUS_INACTIVE, STATUS_MIGRATING,
+    STATUS_RUNNING, STATUS_WAITING, SimState, TickMetrics,
+)
+
+
+def collect(sim: SimState, new_arrivals: jnp.ndarray, decisions: jnp.ndarray,
+            migrations: jnp.ndarray, overload_threshold: float,
+            flow_active: jnp.ndarray, flow_rates: jnp.ndarray) -> TickMetrics:
+    st = sim.containers.status
+    util = sim.hosts.used / jnp.maximum(sim.hosts.cap, 1e-6)      # [H, 3]
+    worst = util.max(axis=1)
+    mean_util = util.mean(axis=1)                                 # per-host
+    n_active_flows = flow_active.sum()
+    mean_rate = jnp.where(
+        n_active_flows > 0,
+        (flow_rates * flow_active).sum() / jnp.maximum(n_active_flows, 1),
+        0.0)
+    count = lambda code: (st == code).sum()
+    return TickMetrics(
+        t=sim.t,
+        n_overloaded=(worst > overload_threshold).sum(),
+        n_inactive=count(STATUS_INACTIVE) + count(STATUS_WAITING),
+        n_running=count(STATUS_RUNNING),
+        n_deployed=(count(STATUS_RUNNING) + count(STATUS_COMMUNICATING)
+                    + count(STATUS_MIGRATING)),
+        n_communicating=count(STATUS_COMMUNICATING),
+        n_waiting=count(STATUS_WAITING),
+        n_completed=count(STATUS_COMPLETED),
+        n_migrating=count(STATUS_MIGRATING),
+        new_arrivals=new_arrivals,
+        decisions=decisions,
+        migrations=migrations,
+        util_variance=jnp.var(mean_util),
+        mean_util=mean_util.mean(),
+        active_flows=n_active_flows,
+        mean_flow_rate=mean_rate,
+    )

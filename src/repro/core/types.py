@@ -1,0 +1,164 @@
+"""Struct-of-arrays state for the DCSim-JAX engine.
+
+The paper's Container/Host/Job Python objects become fixed-capacity tensors
+with masks; the six container states of paper Table 2 map to STATUS_* codes.
+Every field is a leaf of a NamedTuple pytree so the whole simulator state can
+be carried through ``lax.scan`` and ``vmap``-ed over scenarios.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Container lifecycle (paper Table 2)
+# ---------------------------------------------------------------------------
+STATUS_UNBORN = -1        # slot exists but the job has not been submitted yet
+STATUS_INACTIVE = 0       # submitted, not scheduled            (undeployed)
+STATUS_RUNNING = 1        # deployed and executing              (deployed)
+STATUS_COMMUNICATING = 2  # paused on a network transfer        (deployed)
+STATUS_MIGRATING = 3      # being moved to another host         (dep+undep)
+STATUS_WAITING = 4        # suspended after comm/migration fail (undeployed)
+STATUS_COMPLETED = 5      # finished                            (completed)
+
+# Container primary resource types (paper §3.3)
+CTYPE_CPU = 0
+CTYPE_MEM = 1
+CTYPE_GPU = 2
+
+NUM_RESOURCES = 3  # cpu (%), mem (GB), gpu (%)
+
+
+class HostState(NamedTuple):
+    """Heterogeneous hosts (paper Table 5): capacity, *speed* and price."""
+
+    cap: jnp.ndarray       # f32[H, 3]  resource capacity
+    speed: jnp.ndarray     # f32[H, 3]  per-resource processing speed (1..4)
+    price: jnp.ndarray     # f32[H]     $ per busy second
+    used: jnp.ndarray      # f32[H, 3]  currently committed resources
+    n_containers: jnp.ndarray  # i32[H] deployed container count (net-node cap)
+    leaf: jnp.ndarray      # i32[H]     leaf switch this host hangs off
+    busy_time: jnp.ndarray  # f32[H]    accumulated seconds with >=1 container
+
+
+class ContainerState(NamedTuple):
+    """Three-tier Job -> Task -> Container model, SoA over container slots."""
+
+    status: jnp.ndarray        # i32[C] STATUS_*
+    ctype: jnp.ndarray         # i32[C] CTYPE_* (primary resource)
+    req: jnp.ndarray           # f32[C, 3] resource request
+    duration: jnp.ndarray      # f32[C] total work units
+    run_at: jnp.ndarray        # f32[C] executed work units
+    host: jnp.ndarray          # i32[C] current host (-1 undeployed)
+    job: jnp.ndarray           # i32[C] job id
+    task: jnp.ndarray          # i32[C] task id
+    submit_t: jnp.ndarray      # f32[C] arrival time
+    start_t: jnp.ndarray       # f32[C] first deployment time (-1)
+    finish_t: jnp.ndarray      # f32[C] completion time (-1)
+    # --- communication schedule (paper: 1..5 comms of 100..102400 KB) ---
+    n_comms_left: jnp.ndarray  # i32[C] remaining communication events
+    comm_work_gap: jnp.ndarray # f32[C] work units between comm trigger points
+    next_comm_at: jnp.ndarray  # f32[C] work-unit threshold of next comm
+    comm_bytes: jnp.ndarray    # f32[C] KB per communication event
+    comm_bytes_left: jnp.ndarray  # f32[C] KB outstanding on the active comm
+    comm_peer: jnp.ndarray     # i32[C] partner container of active comm (-1)
+    comm_time: jnp.ndarray     # f32[C] accumulated communicating seconds
+    retry: jnp.ndarray         # i32[C] consecutive stalled ticks on the flow
+    # --- migration ---
+    mig_dst: jnp.ndarray       # i32[C] destination host while migrating (-1)
+    mig_bytes_left: jnp.ndarray  # f32[C] KB outstanding on the migration flow
+    n_migrations: jnp.ndarray  # i32[C] how many times this container migrated
+
+
+class NetState(NamedTuple):
+    """Spine-leaf network: static topology tables + dynamic delay matrix.
+
+    Mininet's emulated fabric becomes link tables; the paper's ping-refreshed
+    ``delay_matrix`` (eq. 1) is recomputed from congestion-adjusted link
+    delays by min-plus Floyd-Warshall every ``delay_update_interval`` ticks.
+    """
+
+    # static link tables -------------------------------------------------
+    link_bw: jnp.ndarray      # f32[E] Mbps
+    link_delay: jnp.ndarray   # f32[E] ms base propagation+switching delay
+    link_loss: jnp.ndarray    # f32[E] packet loss fraction
+    # node graph: adjacency (node_u[e], node_v[e]) both directions implied
+    link_u: jnp.ndarray       # i32[E]
+    link_v: jnp.ndarray       # i32[E]
+    # deterministic ECMP path between every host pair (<=4 links, -1 pad)
+    path_links: jnp.ndarray   # i32[H, H, 4]
+    path_nlinks: jnp.ndarray  # i32[H, H]
+    # dynamic ----------------------------------------------------------------
+    link_util: jnp.ndarray    # f32[E] utilization from last tick's flows
+    delay_matrix: jnp.ndarray  # f32[H, H] host-to-host delay (the paper's D)
+
+
+class SchedState(NamedTuple):
+    """Mutable scheduler bookkeeping (e.g. Round pointer)."""
+
+    rr_pointer: jnp.ndarray    # i32[] last host used by Round
+    decisions: jnp.ndarray     # i32[] placement decisions made this tick
+    migrations: jnp.ndarray    # i32[] migrations started this tick
+
+
+class SimState(NamedTuple):
+    t: jnp.ndarray             # f32[] simulation clock (seconds)
+    hosts: HostState
+    containers: ContainerState
+    net: NetState
+    sched: SchedState
+    total_cost: jnp.ndarray    # f32[] accumulated host-price cost
+    rng: jnp.ndarray           # PRNG key for stochastic tie-breaks
+
+
+class TickMetrics(NamedTuple):
+    """Per-tick observables (paper's data-collection module)."""
+
+    t: jnp.ndarray
+    n_overloaded: jnp.ndarray      # hosts with util > overload_threshold
+    n_inactive: jnp.ndarray        # waiting-to-be-scheduled queue size
+    n_running: jnp.ndarray
+    n_deployed: jnp.ndarray        # paper's "running queue": run+comm+migrate
+    n_communicating: jnp.ndarray
+    n_waiting: jnp.ndarray
+    n_completed: jnp.ndarray
+    n_migrating: jnp.ndarray
+    new_arrivals: jnp.ndarray      # containers that arrived this tick
+    decisions: jnp.ndarray         # placements this tick (paper Fig 6)
+    migrations: jnp.ndarray        # migrations started this tick (paper Fig 7)
+    util_variance: jnp.ndarray     # variance of mean host utilization (Fig 10)
+    mean_util: jnp.ndarray
+    active_flows: jnp.ndarray
+    mean_flow_rate: jnp.ndarray    # KB/s over active flows
+
+
+def empty_containers(capacity: int) -> ContainerState:
+    C = capacity
+    f = lambda fill: jnp.full((C,), fill, jnp.float32)
+    i = lambda fill: jnp.full((C,), fill, jnp.int32)
+    return ContainerState(
+        status=i(STATUS_UNBORN), ctype=i(0),
+        req=jnp.zeros((C, NUM_RESOURCES), jnp.float32),
+        duration=f(0.0), run_at=f(0.0), host=i(-1), job=i(-1), task=i(-1),
+        submit_t=f(jnp.inf), start_t=f(-1.0), finish_t=f(-1.0),
+        n_comms_left=i(0), comm_work_gap=f(jnp.inf), next_comm_at=f(jnp.inf),
+        comm_bytes=f(0.0), comm_bytes_left=f(0.0), comm_peer=i(-1),
+        comm_time=f(0.0), retry=i(0), mig_dst=i(-1), mig_bytes_left=f(0.0),
+        n_migrations=i(0),
+    )
+
+
+def make_hosts(cap: np.ndarray, speed: np.ndarray, price: np.ndarray,
+               leaf: np.ndarray) -> HostState:
+    H = cap.shape[0]
+    return HostState(
+        cap=jnp.asarray(cap, jnp.float32),
+        speed=jnp.asarray(speed, jnp.float32),
+        price=jnp.asarray(price, jnp.float32),
+        used=jnp.zeros((H, NUM_RESOURCES), jnp.float32),
+        n_containers=jnp.zeros((H,), jnp.int32),
+        leaf=jnp.asarray(leaf, jnp.int32),
+        busy_time=jnp.zeros((H,), jnp.float32),
+    )

@@ -1,0 +1,119 @@
+"""Workload generation (paper §3.3): Job -> Task -> Container three-tier model.
+
+Two generators:
+* ``paper_workload``     — paper Table 6 synthetic distribution.
+* ``trace_workload``     — Alibaba GPU-trace-shaped generator (job sizes and
+                           inter-arrival follow heavy-tailed draws like
+                           cluster-trace-gpu-v2020), same SoA output.
+
+Both emit a fully-populated ``ContainerState`` with STATUS_UNBORN slots that
+the engine activates when ``t >= submit_t``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.datacenter import SimConfig
+from repro.core.types import ContainerState, empty_containers
+
+
+def _assign_jobs_tasks(rng: np.random.Generator, n_jobs: int, n_tasks: int,
+                       n_containers: int):
+    """Split tasks over jobs and containers over tasks (>=1 each)."""
+    task_job = np.sort(rng.integers(0, n_jobs, size=n_tasks))
+    # guarantee every job has >= 1 task
+    task_job[:n_jobs] = np.arange(n_jobs)
+    task_job = np.sort(task_job)
+    cont_task = np.sort(rng.integers(0, n_tasks, size=n_containers))
+    cont_task[:n_tasks] = np.arange(n_tasks)
+    cont_task = np.sort(cont_task)
+    cont_job = task_job[cont_task]
+    return cont_job.astype(np.int32), cont_task.astype(np.int32)
+
+
+def _fill(state: ContainerState, rng: np.random.Generator, cfg: SimConfig,
+          cont_job: np.ndarray, cont_task: np.ndarray,
+          submit: np.ndarray) -> ContainerState:
+    C = state.status.shape[0]
+    n = cont_job.shape[0]
+    assert n <= C, f"workload ({n}) exceeds container capacity ({C})"
+
+    req = np.zeros((C, 3), np.float32)
+    req[:n, 0] = rng.uniform(*cfg.cpu_req_range, size=n)
+    req[:n, 1] = rng.uniform(*cfg.mem_req_range, size=n)
+    req[:n, 2] = rng.uniform(*cfg.gpu_req_range, size=n)
+    # primary resource type: dominant normalized request (paper §3.3 classes)
+    norm = req[:n] / np.array([[1700.0, 32.0, 200.0]], np.float32)
+    ctype = np.argmax(norm, axis=1).astype(np.int32)
+
+    duration = np.zeros(C, np.float32)
+    duration[:n] = rng.uniform(*cfg.duration_range, size=n)
+    n_comms = np.zeros(C, np.int32)
+    n_comms[:n] = rng.integers(cfg.n_comms_range[0], cfg.n_comms_range[1] + 1,
+                               size=n)
+    comm_kb = np.zeros(C, np.float32)
+    comm_kb[:n] = rng.uniform(*cfg.comm_kb_range, size=n)
+    # communication trigger points spread evenly through the work units
+    gap = np.full(C, np.inf, np.float32)
+    gap[:n] = duration[:n] / (n_comms[:n] + 1)
+    first_at = np.full(C, np.inf, np.float32)
+    first_at[:n] = gap[:n]
+
+    submit_t = np.full(C, np.inf, np.float32)
+    submit_t[:n] = submit
+
+    job = np.full(C, -1, np.int32)
+    task = np.full(C, -1, np.int32)
+    job[:n] = cont_job
+    task[:n] = cont_task
+
+    return state._replace(
+        req=state.req.at[:].set(req),
+        ctype=state.ctype.at[:].set(ctype),
+        duration=state.duration.at[:].set(duration),
+        n_comms_left=state.n_comms_left.at[:].set(n_comms),
+        comm_bytes=state.comm_bytes.at[:].set(comm_kb),
+        comm_work_gap=state.comm_work_gap.at[:].set(gap),
+        next_comm_at=state.next_comm_at.at[:].set(first_at),
+        submit_t=state.submit_t.at[:].set(submit_t),
+        job=state.job.at[:].set(job),
+        task=state.task.at[:].set(task),
+    )
+
+
+def paper_workload(cfg: SimConfig, seed: int = 0,
+                   capacity: int | None = None) -> ContainerState:
+    """Paper Table 6 distribution; jobs arrive uniformly in the window."""
+    rng = np.random.default_rng(seed)
+    C = capacity or cfg.n_containers
+    cont_job, cont_task = _assign_jobs_tasks(
+        rng, cfg.n_jobs, cfg.n_tasks, cfg.n_containers)
+    job_arrival = np.sort(rng.uniform(0.0, cfg.arrival_window,
+                                      size=cfg.n_jobs)).astype(np.float32)
+    submit = job_arrival[cont_job]
+    return _fill(empty_containers(C), rng, cfg, cont_job, cont_task, submit)
+
+
+def trace_workload(cfg: SimConfig, seed: int = 0,
+                   capacity: int | None = None) -> ContainerState:
+    """Alibaba-trace-shaped: lognormal job sizes, exponential inter-arrival."""
+    rng = np.random.default_rng(seed)
+    C = capacity or cfg.n_containers
+    cont_job, cont_task = _assign_jobs_tasks(
+        rng, cfg.n_jobs, cfg.n_tasks, cfg.n_containers)
+    inter = rng.exponential(cfg.arrival_window / max(cfg.n_jobs, 1),
+                            size=cfg.n_jobs)
+    job_arrival = np.cumsum(inter).astype(np.float32)
+    submit = job_arrival[cont_job]
+    state = _fill(empty_containers(C), rng, cfg, cont_job, cont_task, submit)
+    # heavy-tailed durations typical of GPU training jobs
+    import jax.numpy as jnp
+    n = cont_job.shape[0]
+    dur = np.zeros(C, np.float32)
+    dur[:n] = np.clip(rng.lognormal(np.log(25.0), 0.6, size=n), 5.0, 300.0)
+    gap = np.where(dur > 0, dur / (np.asarray(state.n_comms_left) + 1), np.inf)
+    return state._replace(
+        duration=jnp.asarray(dur),
+        comm_work_gap=jnp.asarray(gap.astype(np.float32)),
+        next_comm_at=jnp.asarray(gap.astype(np.float32)),
+    )

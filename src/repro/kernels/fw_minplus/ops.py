@@ -1,0 +1,14 @@
+"""jit'd public wrapper for the blocked Floyd-Warshall kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.fw_minplus.fw_minplus import floyd_warshall as _fw
+
+
+def floyd_warshall(A, bs: int = 128, interpret: bool | None = None):
+    """APSP over adjacency A.  interpret=None auto-selects: compiled Mosaic
+    on TPU, interpreter everywhere else (CPU correctness mode)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _fw(A, bs=bs, interpret=interpret)

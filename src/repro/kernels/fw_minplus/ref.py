@@ -1,0 +1,16 @@
+"""Pure-jnp min-plus Floyd-Warshall oracle."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def floyd_warshall_ref(A: jnp.ndarray) -> jnp.ndarray:
+    """All-pairs shortest paths over adjacency A [n,n] (INF = no edge)."""
+    n = A.shape[0]
+
+    def body(D, k):
+        return jnp.minimum(D, D[:, k, None] + D[None, k, :]), None
+
+    D, _ = jax.lax.scan(body, A, jnp.arange(n))
+    return D

@@ -1,0 +1,40 @@
+"""Public SSD-scan op with custom VJP (bwd = jnp reference recompute)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ssd_scan.ref import ssd_chunked_ref
+from repro.kernels.ssd_scan.ssd_scan import ssd_chunked_kernel
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def _ssd(xs, Bm, Cm, dt, A_log, Q):
+    interpret = jax.default_backend() != "tpu"
+    return ssd_chunked_kernel(xs, Bm, Cm, dt, A_log, Q=Q,
+                              interpret=interpret)
+
+
+def _fwd(xs, Bm, Cm, dt, A_log, Q):
+    return _ssd(xs, Bm, Cm, dt, A_log, Q), (xs, Bm, Cm, dt, A_log)
+
+
+def _bwd(Q, res, g):
+    xs, Bm, Cm, dt, A_log = res
+    _, vjp = jax.vjp(
+        lambda xs, Bm, Cm, dt, A_log: ssd_chunked_ref(xs, Bm, Cm, dt,
+                                                      A_log, Q),
+        xs, Bm, Cm, dt, A_log)
+    return vjp(g)
+
+
+_ssd.defvjp(_fwd, _bwd)
+
+
+def ssd_chunked(xs, Bm, Cm, dt, A_log, Q: int = 256, h0=None):
+    """Kernel-backed SSD.  h0 (decode prefill chaining) falls back to the
+    reference path — the kernel entry is the h0=None training hot path."""
+    if h0 is not None:
+        return ssd_chunked_ref(xs, Bm, Cm, dt, A_log, Q, h0=h0)
+    return _ssd(xs, Bm, Cm, dt, A_log, Q)

@@ -1,0 +1,4 @@
+"""Oracle for the SSD chunk kernel = the model's chunked reference."""
+from __future__ import annotations
+
+from repro.models.ssm import ssd_chunked_ref  # noqa: F401

@@ -1,0 +1,308 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell against the production meshes, with zero device allocation
+(all inputs are ShapeDtypeStructs carrying NamedShardings).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-360m --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Outputs per cell: compiled memory analysis (proves the program fits),
+cost analysis (FLOPs/bytes for the roofline), and the parsed collective
+wire bytes.  Results accumulate in experiments/dryrun_results.json.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, cell_is_runnable, get_config
+from repro.launch import roofline
+from repro.launch.mesh import make_production_mesh
+from repro.models import sharding as shd
+from repro.models import transformer
+from repro.models.config import ModelConfig, ShapeSpec
+from repro.serve.step import make_decode_step, make_prefill_step
+from repro.train.optimizer import OptimizerConfig
+from repro.train.step import StepConfig, init_train_state, make_train_step
+
+RESULTS_PATH = os.path.join(os.path.dirname(__file__),
+                            "../../../experiments/dryrun_results.json")
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins, weak-type-correct, shardable)
+# ---------------------------------------------------------------------------
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, mesh) -> Dict[str, Any]:
+    """Batch ShapeDtypeStructs with NamedShardings for the given cell."""
+    specs = shd.batch_specs(cfg, shape, mesh)
+    B, S = shape.global_batch, shape.seq_len
+
+    def sds(shp, dtype, spec):
+        return jax.ShapeDtypeStruct(shp, dtype,
+                                    sharding=NamedSharding(mesh, spec))
+
+    out: Dict[str, Any] = {}
+    if shape.kind == "decode":
+        out["tokens"] = sds((B, 1), jnp.int32, specs["tokens"])
+        return out
+    if cfg.frontend == "patch_embeds":
+        s_text = S - cfg.n_prefix
+        out["patch_embeds"] = sds((B, cfg.n_prefix, cfg.d_model),
+                                  jnp.bfloat16, specs["patch_embeds"])
+        out["tokens"] = sds((B, s_text), jnp.int32, specs["tokens"])
+        out["labels"] = sds((B, s_text), jnp.int32, specs["labels"])
+    elif cfg.frontend == "frame_embeds":
+        out["frame_embeds"] = sds((B, S, cfg.d_model), jnp.bfloat16,
+                                  specs["frame_embeds"])
+        out["labels"] = sds((B, S), jnp.int32, specs["labels"])
+    else:
+        out["tokens"] = sds((B, S), jnp.int32, specs["tokens"])
+        out["labels"] = sds((B, S), jnp.int32, specs["labels"])
+    if shape.kind == "prefill":
+        out.pop("labels", None)
+    return out
+
+
+def _with_sharding(tree_shapes, tree_specs, mesh):
+    return jax.tree.map(
+        lambda s, spec: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, spec)),
+        tree_shapes, tree_specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def state_specs(cfg: ModelConfig, mesh):
+    """TrainState ShapeDtypeStructs with shardings (no allocation)."""
+    shapes = jax.eval_shape(
+        lambda: init_train_state(cfg, jax.random.PRNGKey(0)))
+    p_spec = shd.param_specs(cfg, shapes.params, mesh)
+    m_spec = shd.param_specs(cfg, shapes.opt.m, mesh)
+    v_spec = shd.param_specs(cfg, shapes.opt.v, mesh)
+    specs = type(shapes)(params=p_spec,
+                         opt=type(shapes.opt)(m=m_spec, v=v_spec,
+                                              step=P()))
+    return _with_sharding(shapes, specs, mesh), specs
+
+
+def params_specs_only(cfg: ModelConfig, mesh):
+    shapes = jax.eval_shape(
+        lambda: transformer.init_params(cfg, jax.random.PRNGKey(0)))
+    spec = shd.param_specs(cfg, shapes, mesh)
+    return _with_sharding(shapes, spec, mesh), spec
+
+
+def cache_specs_in(cfg: ModelConfig, mesh, B: int, T: int):
+    shapes = jax.eval_shape(lambda: transformer.init_cache(cfg, B, T))
+    spec = shd.cache_specs(cfg, shapes, mesh, B)
+    return _with_sharding(shapes, spec, mesh), spec
+
+
+# ---------------------------------------------------------------------------
+# Cell lowering
+# ---------------------------------------------------------------------------
+def lower_cell(cfg: ModelConfig, shape: ShapeSpec, mesh,
+               step_cfg: StepConfig = StepConfig()):
+    """Returns (lowered, n_devices)."""
+    dp = shd.data_axes(mesh)
+    if shape.kind == "train":
+        state_sds, _ = state_specs(cfg, mesh)
+        batch_sds = input_specs(cfg, shape, mesh)
+        step = make_train_step(cfg, OptimizerConfig(), step_cfg,
+                               mesh=mesh, dp=dp)
+        with mesh:
+            lowered = jax.jit(step, donate_argnums=(0,)).lower(
+                state_sds, batch_sds)
+        return lowered
+
+    params_sds, _ = params_specs_only(cfg, mesh)
+    if shape.kind == "prefill":
+        batch_sds = input_specs(cfg, shape, mesh)
+        prefill_step = make_prefill_step(cfg, mesh=mesh, dp=dp)
+        with mesh:
+            lowered = jax.jit(prefill_step).lower(params_sds, batch_sds)
+        return lowered
+
+    # decode: one token against a seq_len-deep cache
+    batch_sds = input_specs(cfg, shape, mesh)
+    cache_sds, _ = cache_specs_in(cfg, mesh, shape.global_batch,
+                                  shape.seq_len)
+    decode = make_decode_step(cfg, mesh=mesh, dp=dp)
+    clen = jax.ShapeDtypeStruct((), jnp.int32,
+                                sharding=NamedSharding(mesh, P()))
+    with mesh:
+        lowered = jax.jit(decode, donate_argnums=(2,)).lower(
+            params_sds, batch_sds["tokens"], cache_sds, clen)
+    return lowered
+
+
+def probe_depths(cfg: ModelConfig) -> tuple:
+    """(k1, k2) unrolled probe depths for cost extrapolation (see
+    roofline.from_probes).  Chosen so the scanned-stack pattern repeats an
+    integer number of times where possible."""
+    if cfg.family == "hybrid":
+        return (cfg.attn_every, 2 * cfg.attn_every)
+    if cfg.first_dense:
+        return (cfg.first_dense + 2, cfg.first_dense + 4)
+    return (2, 4)
+
+
+def probe_costs(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                step_cfg: StepConfig) -> roofline.RooflineTerms:
+    """Two shallow unrolled lowerings -> depth-extrapolated roofline terms."""
+    k1, k2 = probe_depths(cfg)
+    costs = []
+    for k in (k1, k2):
+        cfg_k = dataclasses.replace(cfg, n_layers=k, scan_layers=False)
+        compiled = lower_cell(cfg_k, shape, mesh, step_cfg).compile()
+        costs.append(roofline.raw_costs(compiled, compiled.as_text()))
+        del compiled
+    return roofline.from_probes(costs[0], costs[1], k1, k2, cfg.n_layers,
+                                mesh.size,
+                                roofline.model_flops_for(cfg, shape))
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             step_cfg: StepConfig = StepConfig(),
+             cfg: ModelConfig | None = None) -> Dict[str, Any]:
+    cfg = cfg or get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_is_runnable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    # 1) deploy lowering: full depth, scanned layers -> compile proof +
+    #    memory analysis (the "it fits and it shards" evidence)
+    t0 = time.time()
+    lowered = lower_cell(cfg, shape, mesh, step_cfg)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    # 2) probe lowerings: shallow unrolled -> cost-exact roofline terms
+    hlo = compiled.as_text()
+    terms = probe_costs(cfg, shape, mesh, step_cfg)
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {
+            "argument_size_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_size_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_size_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "generated_code_size_bytes":
+                getattr(mem, "generated_code_size_in_bytes", 0),
+        }
+    except Exception as e:                       # pragma: no cover
+        mem_info = {"error": str(e)}
+
+    n_dev = mesh.size
+    per_dev_gb = ((mem_info.get("argument_size_bytes", 0)
+                   + mem_info.get("temp_size_bytes", 0)) / 2 ** 30)
+    return {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "status": "ok",
+        "n_devices": n_dev,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "flops": terms.flops, "hbm_bytes": terms.hbm_bytes,
+        "coll_bytes_per_dev": terms.coll_bytes,
+        "coll_breakdown": terms.coll_breakdown,
+        "t_compute": terms.t_compute, "t_memory": terms.t_memory,
+        "t_collective": terms.t_collective,
+        "bottleneck": terms.bottleneck,
+        "model_flops": terms.model_flops,
+        "useful_ratio": round(terms.useful_ratio, 4),
+        "memory_analysis": mem_info,
+        "approx_bytes_per_device_gb": round(per_dev_gb, 3),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--sp", default=None, choices=["off", "attn", "full"],
+                    help="seq_parallel override (EXPERIMENTS.md §Perf)")
+    ap.add_argument("--moe", default=None, choices=["psum", "a2a"],
+                    help="MoE dispatch override")
+    ap.add_argument("--out", default=RESULTS_PATH)
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    step_cfg = StepConfig(n_microbatches=args.microbatches)
+
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results
+            if r.get("status") in ("ok", "skipped")}
+
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                key = (arch, shape_name, "multi" if mp else "single")
+                if key in done:
+                    print(f"[cached] {key}")
+                    continue
+                print(f"[dryrun] {key} ...", flush=True)
+                try:
+                    cfg = get_config(arch)
+                    if args.sp:
+                        cfg = dataclasses.replace(cfg, seq_parallel=args.sp)
+                    if args.moe:
+                        cfg = dataclasses.replace(cfg, moe_impl=args.moe)
+                    r = run_cell(arch, shape_name, mp, step_cfg, cfg=cfg)
+                    if args.sp or args.moe:
+                        r["overrides"] = {"sp": args.sp, "moe": args.moe}
+                except Exception as e:
+                    r = {"arch": arch, "shape": shape_name,
+                         "mesh": key[2], "status": "error",
+                         "error": f"{type(e).__name__}: {e}",
+                         "trace": traceback.format_exc()[-2000:]}
+                results = [x for x in results
+                           if (x["arch"], x["shape"], x["mesh"]) != key]
+                results.append(r)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+                status = r["status"]
+                extra = (f" bottleneck={r.get('bottleneck')} "
+                         f"t=({r.get('t_compute', 0):.4f},"
+                         f"{r.get('t_memory', 0):.4f},"
+                         f"{r.get('t_collective', 0):.4f})s "
+                         f"useful={r.get('useful_ratio')}"
+                         if status == "ok" else
+                         r.get("reason", r.get("error", "")))
+                print(f"[{status}] {key} {extra}", flush=True)
+                jax.clear_caches()
+
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"\ndone: {n_ok} ok, {n_skip} skipped, {n_err} errors "
+          f"-> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

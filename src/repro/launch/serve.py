@@ -1,0 +1,69 @@
+"""Batched serving driver: prefill a batch of prompts, decode N tokens.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --reduced \
+        --batch 4 --prompt-len 64 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_reduced
+from repro.launch.mesh import make_mesh_for
+from repro.models import sharding as shd
+from repro.models import transformer
+from repro.serve.step import generate
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    mesh = make_mesh_for(jax.device_count(), args.model_parallel)
+    dp = shd.data_axes(mesh)
+
+    key = jax.random.PRNGKey(args.seed)
+    params = transformer.init_params(cfg, key)
+
+    rng = np.random.default_rng(args.seed)
+    B, S = args.batch, args.prompt_len
+    if cfg.frontend == "patch_embeds":
+        batch = {"patch_embeds": jnp.asarray(
+                     rng.standard_normal((B, cfg.n_prefix, cfg.d_model)),
+                     jnp.bfloat16),
+                 "tokens": jnp.asarray(
+                     rng.integers(0, cfg.vocab, (B, S - cfg.n_prefix)),
+                     jnp.int32)}
+    elif cfg.frontend == "frame_embeds":
+        batch = {"frame_embeds": jnp.asarray(
+            rng.standard_normal((B, S, cfg.d_model)), jnp.bfloat16)}
+    else:
+        batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)),
+                                       jnp.int32)}
+
+    with mesh:
+        t0 = time.time()
+        toks = generate(cfg, params, batch, args.gen, mesh=mesh, dp=dp)
+        toks = np.asarray(toks)
+    dt = time.time() - t0
+    print(f"[serve] {cfg.name}: batch={B} prompt={S} gen={args.gen} "
+          f"in {dt:.2f}s ({B * args.gen / dt:.1f} tok/s)")
+    print("first sequence:", toks[0][:16], "...")
+    assert toks.shape == (B, args.gen)
+    assert (toks >= 0).all() and (toks < cfg.vocab_padded).all()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""DCSim CLI: run the paper's container-scheduling simulation.
+
+    PYTHONPATH=src python -m repro.launch.sim --policy jobgroup --horizon 120
+    PYTHONPATH=src python -m repro.launch.sim --policy all --bw 200 --loss 0.02
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.core import (SimConfig, build_paper_hosts, build_paper_network,
+                        get_policy, init_sim, list_policies, paper_workload,
+                        run_sim, summarize, to_csv, trace_workload)
+from repro.core.network import set_link_params
+
+
+def run_one(policy_name: str, cfg: SimConfig, bw=None, loss=None, seed=0,
+            workload="paper", n_hosts=20, csv=None):
+    hosts = build_paper_hosts()
+    spec, net = build_paper_network(cfg, n_hosts=n_hosts)
+    if bw is not None or loss is not None:
+        net = set_link_params(net, bw=bw, loss=loss)
+    gen = paper_workload if workload == "paper" else trace_workload
+    sim0 = init_sim(hosts, gen(cfg, seed=seed), net, seed=seed)
+    t0 = time.time()
+    final, metrics = run_sim(sim0, cfg, get_policy(policy_name),
+                             spec.n_hosts, spec.n_nodes, cfg.horizon)
+    final.t.block_until_ready()
+    rep = summarize(final, metrics)
+    rep["policy"] = policy_name
+    rep["wall_s"] = round(time.time() - t0, 2)
+    if csv:
+        to_csv(metrics, csv)
+    return rep
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--policy", default="all",
+                    help=f"one of {list_policies()} or 'all'")
+    ap.add_argument("--horizon", type=int, default=120)
+    ap.add_argument("--bw", type=float, default=None, help="link Mbps")
+    ap.add_argument("--loss", type=float, default=None,
+                    help="link loss fraction")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--workload", default="paper",
+                    choices=["paper", "trace"])
+    ap.add_argument("--csv", default=None, help="per-tick metrics CSV path")
+    args = ap.parse_args()
+
+    cfg = SimConfig(horizon=args.horizon)
+    policies = list_policies() if args.policy == "all" else [args.policy]
+    for p in policies:
+        rep = run_one(p, cfg, bw=args.bw, loss=args.loss, seed=args.seed,
+                      workload=args.workload, csv=args.csv)
+        print(json.dumps(rep, indent=None, sort_keys=True))
+
+
+if __name__ == "__main__":
+    main()

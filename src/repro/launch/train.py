@@ -1,0 +1,121 @@
+"""End-to-end training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --reduced \
+        --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+Runs on whatever devices exist (CPU: 1-device mesh with the production axis
+names, so the same sharding code paths execute).  Integrates: deterministic
+data pipeline, AdamW train step, checkpoint cadence + restore-on-start, and
+the fault supervisor (heartbeat + straggler bookkeeping for the launcher).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, get_reduced
+from repro.data.pipeline import DataConfig, make_dataset
+from repro.distributed import checkpoint as ckpt
+from repro.distributed.fault import (FaultConfig, HeartbeatMonitor,
+                                     StragglerDetector, TrainingSupervisor)
+from repro.launch.mesh import make_mesh_for
+from repro.models import sharding as shd
+from repro.train.optimizer import OptimizerConfig
+from repro.train.step import StepConfig, init_train_state, make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-test-sized config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--sp", default=None, choices=["off", "attn", "full"],
+                    help="sequence parallelism (EXPERIMENTS.md §Perf)")
+    ap.add_argument("--moe", default=None, choices=["psum", "a2a"])
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    import dataclasses
+    if args.sp:
+        cfg = dataclasses.replace(cfg, seq_parallel=args.sp)
+    if args.moe:
+        cfg = dataclasses.replace(cfg, moe_impl=args.moe)
+    mesh = make_mesh_for(jax.device_count(), args.model_parallel)
+    dp = shd.data_axes(mesh)
+
+    opt_cfg = OptimizerConfig(lr=args.lr, total_steps=args.steps)
+    step_cfg = StepConfig(n_microbatches=args.microbatches)
+    train_step = make_train_step(cfg, opt_cfg, step_cfg, mesh=mesh, dp=dp)
+
+    state = init_train_state(cfg, jax.random.PRNGKey(args.seed))
+    if mesh.size > 1:
+        p_spec = shd.param_specs(cfg, state.params, mesh)
+        shardings = type(state)(
+            params=shd.to_shardings(p_spec, mesh),
+            opt=type(state.opt)(
+                m=shd.to_shardings(p_spec, mesh),
+                v=shd.to_shardings(p_spec, mesh),
+                step=jax.sharding.NamedSharding(
+                    mesh, jax.sharding.PartitionSpec())))
+        state = jax.device_put(state, shardings)
+
+    data = make_dataset(DataConfig(
+        seq_len=args.seq, global_batch=args.batch, vocab=cfg.vocab,
+        seed=args.seed, frontend=cfg.frontend, n_prefix=cfg.n_prefix,
+        d_model=cfg.d_model))
+
+    start_step = 0
+    if args.ckpt_dir:
+        latest = ckpt.latest_step_dir(args.ckpt_dir)
+        if latest:
+            state, start_step = ckpt.restore_checkpoint(latest, state)
+            print(f"[restore] resumed from {latest} @ step {start_step}")
+
+    def save_fn(step: int) -> None:
+        d = os.path.join(args.ckpt_dir, f"step_{step}")
+        ckpt.save_checkpoint(d, state, step)
+        print(f"[ckpt] saved {d}")
+
+    sup = TrainingSupervisor(FaultConfig(), args.ckpt_every,
+                             save_fn=save_fn, restore_fn=lambda: start_step)
+    monitor = HeartbeatMonitor(["pod0:0"], FaultConfig())
+    straggler = StragglerDetector(FaultConfig())
+
+    step_jit = jax.jit(train_step, donate_argnums=(0,))
+    with mesh:
+        for step in range(start_step, args.steps):
+            t0 = time.time()
+            batch = {k: jax.device_put(v)
+                     for k, v in data.batch_at(step).items()}
+            state, metrics = step_jit(state, batch)
+            loss = float(metrics["loss"])
+            dt = time.time() - t0
+            monitor.beat("pod0:0")
+            straggler.record("pod0:0", dt)
+            if step % args.log_every == 0 or step == args.steps - 1:
+                print(f"step {step:5d}  loss {loss:8.4f}  "
+                      f"lr {float(metrics['lr']):.2e}  "
+                      f"gnorm {float(metrics['grad_norm']):.3f}  "
+                      f"{dt*1e3:7.1f} ms")
+            assert np.isfinite(loss), f"loss diverged at step {step}"
+            if args.ckpt_dir:
+                sup.maybe_checkpoint(step)
+    print("[done] final loss", loss)
+
+
+if __name__ == "__main__":
+    main()

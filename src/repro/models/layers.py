@@ -1,0 +1,188 @@
+"""Shared model building blocks: RMSNorm, RoPE, GQA attention, SwiGLU MLP.
+
+All functions are pure; parameters are plain dicts of jnp arrays.  Matmul
+inputs are cast to bf16 (MXU-native) while reductions (softmax, norms, loss)
+run in f32.  Attention has two implementations selected by config:
+``xla`` (einsum reference, used for CPU dry-runs and as the kernel oracle)
+and ``pallas`` (the flash-attention kernel in ``repro/kernels``).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+BF16 = jnp.bfloat16
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def init_dense(key, d_in: int, d_out: int, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return jax.random.normal(key, (d_in, d_out), F32) * scale
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w.astype(F32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_angles(positions: jnp.ndarray, dim: int,
+                theta: float = 10000.0) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """cos/sin tables for ``positions`` [**shape**] -> [..., dim//2]."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=F32) / dim))
+    ang = positions.astype(F32)[..., None] * inv           # [..., dim/2]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray):
+    """x [..., S, H, D]; cos/sin [S, D/2] (broadcast over batch/heads).
+
+    Returns x.dtype: the f32 cos/sin multiply must NOT leak f32 q/k into
+    attention — that doubles every attention byte moved (HLO-verified:
+    6 GiB f32 [B,H,S,dk] gathers in the deepseek dry-run before this cast).
+    """
+    d_half = x.shape[-1] // 2
+    x1, x2 = x[..., :d_half], x[..., d_half:]
+    c = cos[..., None, :]                                   # [S, 1, D/2]
+    s = sin[..., None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA / MQA / MHA via n_kv_heads)
+# ---------------------------------------------------------------------------
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = True,
+                  q_offset: jnp.ndarray | int = 0,
+                  kv_valid_len: Optional[jnp.ndarray] = None,
+                  scale: Optional[float] = None) -> jnp.ndarray:
+    """Reference attention.  q [B,Sq,Hq,Dk], k [B,Skv,Hkv,Dk], v [B,Skv,Hkv,Dv].
+
+    * ``q_offset``: absolute position of q[0] (decode: cache length).
+    * ``kv_valid_len``: mask out cache slots >= this length.
+    """
+    B, Sq, Hq, Dk = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(Dk)
+
+    qg = q.reshape(B, Sq, Hkv, G, Dk).astype(BF16)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(BF16),
+                        preferred_element_type=F32) * scale
+
+    kv_pos = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        q_pos = jnp.arange(Sq) + q_offset
+        mask &= kv_pos[None, :] <= q_pos[:, None]
+    if kv_valid_len is not None:
+        mask &= kv_pos[None, :] < kv_valid_len
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+
+    att = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", att.astype(BF16), v.astype(BF16),
+                     preferred_element_type=F32)
+    return out.reshape(B, Sq, Hq, v.shape[-1])
+
+
+def attention(q, k, v, *, impl: str = "xla", causal: bool = True,
+              q_offset=0, kv_valid_len=None, scale=None):
+    if impl == "pallas" and q.shape[1] > 1 and kv_valid_len is None:
+        from repro.kernels.flash_attention import ops as fa_ops
+        return fa_ops.flash_attention(q, k, v, causal=causal, scale=scale)
+    return attention_ref(q, k, v, causal=causal, q_offset=q_offset,
+                         kv_valid_len=kv_valid_len, scale=scale)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+def init_mlp(key, d_model: int, d_ff: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": init_dense(k1, d_model, d_ff),
+        "w_up": init_dense(k2, d_model, d_ff),
+        "w_down": init_dense(k3, d_ff, d_model),
+    }
+
+
+def mlp(params, x: jnp.ndarray) -> jnp.ndarray:
+    xb = x.astype(BF16)
+    g = xb @ params["w_gate"].astype(BF16)
+    u = xb @ params["w_up"].astype(BF16)
+    h = jax.nn.silu(g.astype(F32)).astype(BF16) * u
+    return (h @ params["w_down"].astype(BF16)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block (params + forward, cache-aware)
+# ---------------------------------------------------------------------------
+def init_attn(key, d_model: int, n_heads: int, n_kv_heads: int, d_head: int,
+              qkv_bias: bool = False):
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": init_dense(ks[0], d_model, n_heads * d_head),
+        "wk": init_dense(ks[1], d_model, n_kv_heads * d_head),
+        "wv": init_dense(ks[2], d_model, n_kv_heads * d_head),
+        "wo": init_dense(ks[3], n_heads * d_head, d_model),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * d_head,), F32)
+        p["bk"] = jnp.zeros((n_kv_heads * d_head,), F32)
+        p["bv"] = jnp.zeros((n_kv_heads * d_head,), F32)
+    return p
+
+
+def attn_qkv(params, x, n_heads, n_kv_heads, d_head):
+    B, S, _ = x.shape
+    xb = x.astype(BF16)
+    q = xb @ params["wq"].astype(BF16)
+    k = xb @ params["wk"].astype(BF16)
+    v = xb @ params["wv"].astype(BF16)
+    if "bq" in params:
+        q = q + params["bq"].astype(BF16)
+        k = k + params["bk"].astype(BF16)
+        v = v + params["bv"].astype(BF16)
+    return (q.reshape(B, S, n_heads, d_head),
+            k.reshape(B, S, n_kv_heads, d_head),
+            v.reshape(B, S, n_kv_heads, d_head))
+
+
+def attn_block(params, x, *, n_heads, n_kv_heads, d_head, rope_theta,
+               positions, impl="xla", cache_kv=None, cache_len=None):
+    """Full GQA attention with RoPE.
+
+    * train/prefill: ``cache_kv`` None -> causal self-attention over x;
+      returns (out, (k, v)) so prefill can persist the cache.
+    * decode: ``cache_kv`` = (k_cache [B,T,Hkv,D], v_cache) with ``cache_len``
+      valid entries; x is the new token(s); returns (out, (k', v')).
+    """
+    B, S, _ = x.shape
+    q, k, v = attn_qkv(params, x, n_heads, n_kv_heads, d_head)
+    cos, sin = rope_angles(positions, d_head, rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    if cache_kv is None:
+        out = attention(q, k, v, impl=impl, causal=True)
+        new_cache = (k.astype(BF16), v.astype(BF16))
+    else:
+        k_cache, v_cache = cache_kv
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            k_cache, k.astype(k_cache.dtype), cache_len, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            v_cache, v.astype(v_cache.dtype), cache_len, axis=1)
+        out = attention(q, k_cache, v_cache, impl=impl, causal=False,
+                        kv_valid_len=cache_len + S)
+        new_cache = (k_cache, v_cache)
+
+    out = out.reshape(B, S, n_heads * d_head).astype(BF16)
+    return (out @ params["wo"].astype(BF16)).astype(x.dtype), new_cache

@@ -1,0 +1,148 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+KV activations are compressed into a rank-``kv_lora_rank`` latent ``c_kv``
+plus a single shared RoPE key ``k_rope``; the decode cache stores only
+``[c_kv | k_rope]`` (576 dims/token for the 236B config) instead of
+2 * n_heads * d_head.  Queries come from their own low-rank path.
+
+Two execution modes:
+* prefill/train — decompress c_kv to per-head K/V and run standard MHA;
+* decode       — *absorbed* form: fold W_uk into the query and W_uv into the
+  output projection so attention runs directly in the latent space (MQA-like:
+  one 512-dim "value head" shared by all heads).  This is the paper's
+  inference trick and is what makes the 32k/500k caches small.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import BF16, F32, NEG_INF, apply_rope, init_dense, rope_angles
+
+
+def init_mla(key, cfg):
+    ks = jax.random.split(key, 6)
+    H = cfg.n_heads
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    return {
+        "w_dq": init_dense(ks[0], cfg.d_model, cfg.q_lora_rank),
+        "w_uq": init_dense(ks[1], cfg.q_lora_rank, H * qk),
+        "w_dkv": init_dense(ks[2], cfg.d_model,
+                            cfg.kv_lora_rank + cfg.qk_rope_dim),
+        "w_uk": init_dense(ks[3], cfg.kv_lora_rank, H * cfg.qk_nope_dim),
+        "w_uv": init_dense(ks[4], cfg.kv_lora_rank, H * cfg.v_head_dim),
+        "wo": init_dense(ks[5], H * cfg.v_head_dim, cfg.d_model),
+    }
+
+
+def _queries(params, x, cfg, positions):
+    B, S, _ = x.shape
+    H, dn, dr = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    q = (x.astype(BF16) @ params["w_dq"].astype(BF16)
+         ) @ params["w_uq"].astype(BF16)
+    q = q.reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    cos, sin = rope_angles(positions, dr, cfg.rope_theta)
+    return q_nope, apply_rope(q_rope, cos, sin)
+
+
+def _latent(params, x, cfg, positions):
+    """c_kv [B,S,R] and rope'd shared key k_rope [B,S,dr]."""
+    B, S, _ = x.shape
+    R, dr = cfg.kv_lora_rank, cfg.qk_rope_dim
+    ckr = x.astype(BF16) @ params["w_dkv"].astype(BF16)
+    c_kv, k_rope = ckr[..., :R], ckr[..., R:]
+    cos, sin = rope_angles(positions, dr, cfg.rope_theta)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def mla_prefill(params, x, cfg, positions, impl="xla", mesh=None,
+                dp=("data",)):
+    """Standard (decompressed) MHA over the latent KV; returns latent cache.
+
+    q/k/v are explicitly pinned head-sharded over the model axis: without
+    the constraint, a sequence-sharded residual stream makes GSPMD
+    replicate heads and shuttle full [B,H,S,dk] tensors between S- and
+    H-sharded layouts (8 GiB all-to-alls observed; EXPERIMENTS.md §Perf).
+    """
+    from repro.models.layers import attention
+
+    B, S, _ = x.shape
+    H, dn, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.v_head_dim
+    q_nope, q_rope = _queries(params, x, cfg, positions)
+    c_kv, k_rope = _latent(params, x, cfg, positions)
+
+    k_nope = (c_kv @ params["w_uk"].astype(BF16)).reshape(B, S, H, dn)
+    v = (c_kv @ params["w_uv"].astype(BF16)).reshape(B, S, H, dv)
+    # shared rope key broadcast to all heads; fold into one attention call
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :],
+                                (B, S, H, cfg.qk_rope_dim))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+
+    if mesh is not None and mesh.size > 1:
+        msize = dict(mesh.shape).get("model", 1)
+        if msize > 1 and H % msize == 0:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            spec = NamedSharding(mesh, P(dp, None, "model", None))
+            q = jax.lax.with_sharding_constraint(q, spec)
+            k = jax.lax.with_sharding_constraint(k, spec)
+            v = jax.lax.with_sharding_constraint(v, spec)
+
+    scale = 1.0 / math.sqrt(dn + cfg.qk_rope_dim)
+    out = attention(q, k, v, impl=impl, causal=True, scale=scale)
+    out = out.reshape(B, S, H * dv).astype(BF16)
+    if mesh is not None and mesh.size > 1:
+        msize = dict(mesh.shape).get("model", 1)
+        if msize > 1 and H % msize == 0:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            out = jax.lax.with_sharding_constraint(
+                out, NamedSharding(mesh, P(dp, None, "model")))
+    return ((out @ params["wo"].astype(BF16)).astype(x.dtype),
+            (c_kv, k_rope))
+
+
+def mla_decode(params, x, cfg, positions, cache, cache_len):
+    """Absorbed-matrix decode: attention directly over the latent cache.
+
+    cache = (c_kv [B,T,R], k_rope [B,T,dr]); scores
+        q_nope W_uk^T c_kv  +  q_rope k_rope
+    and values are the latent itself, expanded once after the weighted sum.
+    """
+    B, S, _ = x.shape
+    H, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    R = cfg.kv_lora_rank
+
+    q_nope, q_rope = _queries(params, x, cfg, positions)
+    c_new, kr_new = _latent(params, x, cfg, positions)
+    c_cache, kr_cache = cache
+    c_cache = jax.lax.dynamic_update_slice_in_dim(
+        c_cache, c_new.astype(c_cache.dtype), cache_len, axis=1)
+    kr_cache = jax.lax.dynamic_update_slice_in_dim(
+        kr_cache, kr_new.astype(kr_cache.dtype), cache_len, axis=1)
+
+    # absorb W_uk into q:  q_lat [B,S,H,R]
+    w_uk = params["w_uk"].astype(BF16).reshape(R, H, dn)
+    q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk)
+
+    scale = 1.0 / math.sqrt(dn + dr)
+    logits = (jnp.einsum("bshr,btr->bhst", q_lat, c_cache.astype(BF16),
+                         preferred_element_type=F32)
+              + jnp.einsum("bshd,btd->bhst", q_rope, kr_cache.astype(BF16),
+                           preferred_element_type=F32)) * scale
+    T = c_cache.shape[1]
+    valid = jnp.arange(T)[None, :] < (cache_len + S)
+    logits = jnp.where(valid[None, None], logits, NEG_INF)
+    att = jax.nn.softmax(logits, axis=-1)
+
+    # weighted latent sum, then expand through W_uv (absorbed output)
+    o_lat = jnp.einsum("bhst,btr->bshr", att.astype(BF16),
+                       c_cache.astype(BF16))          # [B,S,H,R]
+    w_uv = params["w_uv"].astype(BF16).reshape(R, H, dv)
+    out = jnp.einsum("bshr,rhd->bshd", o_lat, w_uv)
+    out = out.reshape(B, S, H * dv)
+    return ((out @ params["wo"].astype(BF16)).astype(x.dtype),
+            (c_cache, kr_cache))

@@ -1,0 +1,156 @@
+"""Sharding rules: parameter / batch / cache PartitionSpecs per architecture.
+
+Policy (DESIGN.md §5):
+* ``model`` axis carries tensor parallelism (attention heads, d_ff, experts,
+  vocab) whenever the dimension divides evenly; otherwise that tensor falls
+  back to FSDP-only storage sharding.
+* ``data`` axis carries FSDP (parameters + optimizer states sharded on their
+  largest non-TP dim) and the batch.
+* ``pod`` axis (multi-pod mesh) is pure data parallelism: parameters are
+  replicated across pods, so the only cross-pod (DCN) traffic is the gradient
+  all-reduce — batch specs use ``(("pod", "data"), ...)``.
+
+Everything is divisibility-checked against the actual mesh, so the same code
+serves the 16x16 production mesh and the 1-device CPU smoke mesh.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig, ShapeSpec
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if isinstance(name, tuple):
+        out = 1
+        for n in name:
+            out *= _axis_size(mesh, n)
+        return out
+    return mesh.shape[name] if name in mesh.axis_names else 0
+
+
+def _ok(mesh: Mesh, dim: int, axis) -> Any:
+    """axis if ``dim`` divides evenly over it on this mesh, else None."""
+    n = _axis_size(mesh, axis)
+    return axis if n and dim % n == 0 and dim >= n else None
+
+
+def param_specs(cfg: ModelConfig, params: Any, mesh: Mesh) -> Any:
+    """PartitionSpec tree mirroring ``params`` (works on ShapeDtypeStructs)."""
+
+    def leaf_spec(path: Tuple, leaf) -> P:
+        names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        name = names[-1]
+        stacked = ("blocks" in names or "first_blocks" in names)
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        pre = (None,) if stacked else ()
+
+        def spec(*axes):
+            out = []
+            for dim, ax in zip(shape, axes):
+                out.append(_ok(mesh, dim, ax) if ax else None)
+            return P(*pre, *out)
+
+        if name in ("ln1", "ln2", "final_norm", "norm_w", "A_log", "D",
+                    "dt_bias", "conv_b", "bq", "bk", "bv"):
+            return P(*pre, *([None] * len(shape)))
+        if name == "embed":
+            return spec("model", "data")
+        if name == "unembed":
+            return spec("data", "model")
+        if name == "conv_w":
+            return P(*pre, None, None)
+        if name == "router":
+            return spec("data", None)
+        if name in ("w_gate", "w_up"):
+            if len(shape) == 3:                      # experts [E, d, f]
+                return spec("model", "data", None)
+            return spec("data", "model")             # dense MLP [d, ff]
+        if name == "w_down":
+            if len(shape) == 3:                      # experts [E, f, d]
+                return spec("model", None, "data")
+            return spec("model", "data")             # dense MLP [ff, d]
+        if name in ("wq", "wk", "wv"):
+            return spec("data", "model")
+        if name == "wo":
+            return spec("model", "data")
+        if name in ("w_dq", "w_dkv"):
+            return spec("data", "model")
+        if name in ("w_uq", "w_uk", "w_uv"):
+            return spec("data", "model")
+        if name == "in_proj":
+            return spec("data", "model")
+        if name == "out_proj":
+            return spec("model", "data")
+        return P(*pre, *([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh
+                ) -> Dict[str, P]:
+    """PartitionSpecs for every input the shape's step consumes."""
+    dp = data_axes(mesh)
+    B = shape.global_batch
+    bspec = _ok(mesh, B, dp) or _ok(mesh, B, "data")
+    out: Dict[str, P] = {}
+    if cfg.frontend == "patch_embeds":
+        out["patch_embeds"] = P(bspec, None, None)
+        out["tokens"] = P(bspec, None)
+        out["labels"] = P(bspec, None)
+    elif cfg.frontend == "frame_embeds":
+        out["frame_embeds"] = P(bspec, None, None)
+        out["labels"] = P(bspec, None)
+    else:
+        out["tokens"] = P(bspec, None)
+        out["labels"] = P(bspec, None)
+    if shape.kind == "decode":
+        out = {"tokens": P(bspec, None)}
+    return out
+
+
+def cache_specs(cfg: ModelConfig, cache: Any, mesh: Mesh,
+                batch_size: int) -> Any:
+    """Decode-cache specs: batch over data axes; heads over ``model`` when
+    divisible, else the time axis over ``model`` (flash-decoding style)."""
+    dp = data_axes(mesh)
+    bax = _ok(mesh, batch_size, dp) or _ok(mesh, batch_size, "data")
+
+    def leaf_spec(path: Tuple, leaf) -> P:
+        names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        shape = leaf.shape
+        if "ssm" in names:
+            if len(shape) == 5:      # h [L, B, H, P, N]
+                return P(None, bax, _ok(mesh, shape[2], "model"), None, None)
+            return P(None, bax, None, None)       # conv [L, B, W-1, ch]
+        # attention caches: [n, B, T, Hkv, dh] or MLA [n, B, T, R]
+        if len(shape) == 5:
+            hax = _ok(mesh, shape[3], "model")
+            tax = None if hax else _ok(mesh, shape[2], "model")
+            return P(None, bax, tax, hax, None)
+        if len(shape) == 4:          # MLA latent [n, B, T, R]
+            return P(None, bax, _ok(mesh, shape[2], "model"), None)
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache)
+
+
+def to_shardings(spec_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def constrain(x, mesh: Mesh, spec: P):
+    """with_sharding_constraint that no-ops on a 1-device CPU mesh."""
+    if mesh is None or mesh.size == 1:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

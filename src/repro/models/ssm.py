@@ -1,0 +1,174 @@
+"""Mamba2 SSD (state-space duality, arXiv:2405.21060) — chunked form.
+
+The sequence is split into chunks of length Q.  Within a chunk the quadratic
+"attention-like" dual form runs on the MXU; across chunks a tiny recurrence
+carries the SSM state h [B, H, P, N].  Decode is the O(1) recurrent update.
+
+    h_t = a_t * h_{t-1} + dt_t * B_t ⊗ x_t          a_t = exp(-exp(A_log)*dt_t)
+    y_t = C_t · h_t + D * x_t
+
+``ssd_chunked_ref`` is the pure-jnp oracle; ``impl='pallas'`` routes the
+intra-chunk quadratic term through ``repro/kernels/ssd_scan``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import BF16, F32, init_dense, rmsnorm
+
+
+def init_ssm(key, cfg):
+    ks = jax.random.split(key, 5)
+    d, di, st, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    conv_ch = di + 2 * st
+    return {
+        "in_proj": init_dense(ks[0], d, 2 * di + 2 * st + H),
+        "conv_w": jax.random.normal(ks[1], (cfg.conv_width, conv_ch), F32) * 0.1,
+        "conv_b": jnp.zeros((conv_ch,), F32),
+        "A_log": jnp.zeros((H,), F32),            # A = -exp(A_log) = -1
+        "D": jnp.ones((H,), F32),
+        "dt_bias": jnp.zeros((H,), F32),
+        "norm_w": jnp.ones((di,), F32),
+        "out_proj": init_dense(ks[2], di, d),
+    }
+
+
+def _split_proj(params, x, cfg):
+    """in_proj -> gate z [.., di], conv channels (xs, B, C), dt [.., H]."""
+    di, st, H = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    zxbcdt = (x.astype(BF16) @ params["in_proj"].astype(BF16)).astype(F32)
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di:di + di + 2 * st]
+    dt_raw = zxbcdt[..., di + di + 2 * st:]
+    dt = jax.nn.softplus(dt_raw + params["dt_bias"])
+    return z, xBC, dt
+
+
+def _causal_conv(params, xBC, cfg, conv_state=None):
+    """Depthwise causal conv over the (xs|B|C) channels.
+
+    train/prefill: conv_state None, pads with zeros on the left.
+    decode: conv_state [B, W-1, ch] holds the trailing context; returns the
+    rolled state.
+    """
+    W = cfg.conv_width
+    if conv_state is None:
+        pad = jnp.zeros(xBC.shape[:1] + (W - 1,) + xBC.shape[2:], xBC.dtype)
+        ctx = jnp.concatenate([pad, xBC], axis=1)
+        new_state = ctx[:, -(W - 1):]
+    else:
+        ctx = jnp.concatenate([conv_state.astype(xBC.dtype), xBC], axis=1)
+        new_state = ctx[:, -(W - 1):]
+    out = sum(ctx[:, i:i + xBC.shape[1]] * params["conv_w"][i]
+              for i in range(W))
+    return jax.nn.silu(out + params["conv_b"]), new_state
+
+
+def ssd_chunked_ref(xs, Bm, Cm, dt, A_log, Q: int, h0=None):
+    """Chunked SSD.  xs [B,S,H,P], Bm/Cm [B,S,N], dt [B,S,H], A_log [H].
+
+    Returns (y [B,S,H,P], h_final [B,H,P,N]).  Sequences not divisible by
+    the chunk are zero-padded (dt=0 => decay 1, update 0: a no-op suffix).
+    """
+    B, S, H, Pd = xs.shape
+    N = Bm.shape[-1]
+    Q = min(Q, S)
+    if S % Q:
+        pad = Q - S % Q
+        zpad = lambda a: jnp.pad(a, [(0, 0), (0, pad)] +
+                                 [(0, 0)] * (a.ndim - 2))
+        y, h = ssd_chunked_ref(zpad(xs), zpad(Bm), zpad(Cm), zpad(dt),
+                               A_log, Q, h0=h0)
+        return y[:, :S], h
+    Cn = S // Q
+
+    a_log = -jnp.exp(A_log)[None, None] * dt                  # [B,S,H] (<=0)
+    xs_c = xs.reshape(B, Cn, Q, H, Pd)
+    B_c = Bm.reshape(B, Cn, Q, N)
+    C_c = Cm.reshape(B, Cn, Q, N)
+    dt_c = dt.reshape(B, Cn, Q, H)
+    al_c = a_log.reshape(B, Cn, Q, H)
+    cum = jnp.cumsum(al_c, axis=2)                            # [B,Cn,Q,H]
+
+    # ---- intra-chunk quadratic (dual) term --------------------------------
+    G = jnp.einsum("bcqn,bcsn->bcqs", C_c.astype(BF16), B_c.astype(BF16),
+                   preferred_element_type=F32)                # [B,Cn,Q,Q]
+    decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]     # [B,Cn,Q,S,H]
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(causal[None, None, :, :, None],
+                  jnp.exp(decay), 0.0)                        # [B,Cn,Q,Q,H]
+    M = G[..., None] * L * dt_c[:, :, None, :, :]             # [B,Cn,Q,Q,H]
+    y_intra = jnp.einsum("bcqsh,bcshp->bcqhp", M.astype(BF16),
+                         xs_c.astype(BF16), preferred_element_type=F32)
+
+    # ---- chunk states + inter-chunk recurrence ----------------------------
+    total = cum[:, :, -1:, :]                                 # [B,Cn,1,H]
+    w_state = jnp.exp(total - cum) * dt_c                     # [B,Cn,Q,H]
+    S_c = jnp.einsum("bcsn,bcsh,bcshp->bchpn", B_c.astype(BF16),
+                     w_state.astype(BF16), xs_c.astype(BF16),
+                     preferred_element_type=F32)              # [B,Cn,H,P,N]
+    chunk_decay = jnp.exp(total[:, :, 0, :])                  # [B,Cn,H]
+
+    h_init = (jnp.zeros((B, H, Pd, N), F32) if h0 is None
+              else h0.astype(F32))
+
+    def body(h, inp):
+        s_c, dec = inp                                        # [B,H,P,N],[B,H]
+        h_next = dec[:, :, None, None] * h + s_c
+        return h_next, h                                      # emit h_prev
+
+    (h_fin, h_prevs) = jax.lax.scan(
+        body, h_init,
+        (jnp.moveaxis(S_c, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                     # [B,Cn,H,P,N]
+
+    y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", C_c.astype(BF16),
+                         jnp.exp(cum).astype(BF16), h_prevs.astype(BF16),
+                         preferred_element_type=F32)
+    y = (y_intra + y_inter).reshape(B, S, H, Pd)
+    return y, h_fin
+
+
+def ssm_block(params, x, cfg, mode: str = "train", state=None,
+              impl: str = "xla"):
+    """Full Mamba2 block.  state = (h [B,H,P,N], conv [B,W-1,ch]) for decode.
+
+    Returns (out [B,S,d], new_state).
+    """
+    B, S, d = x.shape
+    di, st, H, Pd = (cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads,
+                     cfg.ssm_head_dim)
+    z, xBC, dt = _split_proj(params, x, cfg)
+
+    h0 = conv_state = None
+    if state is not None:
+        h0, conv_state = state
+    xBC, new_conv = _causal_conv(params, xBC, cfg, conv_state)
+    xs = xBC[..., :di].reshape(B, S, H, Pd)
+    Bm = xBC[..., di:di + st]
+    Cm = xBC[..., di + st:]
+
+    if mode == "decode" and S == 1:
+        # O(1) recurrent step
+        a = jnp.exp(-jnp.exp(params["A_log"])[None, None] * dt)  # [B,1,H]
+        h = h0.astype(F32) if h0 is not None else jnp.zeros((B, H, Pd, st), F32)
+        upd = jnp.einsum("bn,bh,bhp->bhpn", Bm[:, 0], dt[:, 0], xs[:, 0])
+        h = a[:, 0, :, None, None] * h + upd
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0], h)[:, None]   # [B,1,H,P]
+        h_fin = h
+    else:
+        if impl == "pallas":
+            from repro.kernels.ssd_scan import ops as ssd_ops
+            y, h_fin = ssd_ops.ssd_chunked(xs, Bm, Cm, dt, params["A_log"],
+                                           cfg.ssm_chunk, h0=h0)
+        else:
+            y, h_fin = ssd_chunked_ref(xs, Bm, Cm, dt, params["A_log"],
+                                       cfg.ssm_chunk, h0=h0)
+
+    y = y + params["D"][None, None, :, None] * xs
+    y = y.reshape(B, S, di)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y.astype(x.dtype), params["norm_w"], cfg.norm_eps)
+    out = (y.astype(BF16) @ params["out_proj"].astype(BF16)).astype(x.dtype)
+    return out, (h_fin, new_conv)

@@ -1,0 +1,445 @@
+"""Decoder assembly for every assigned architecture family.
+
+One parameter tree + three entry points per model:
+
+* ``forward_train``  — full causal forward, returns (hidden, aux_loss);
+* ``prefill``        — forward that also returns the per-layer cache;
+* ``decode_step``    — one-token step against the cache.
+
+Homogeneous layer stacks are ``lax.scan``-ed over stacked parameters
+([L, ...] leaves) with optional ``jax.checkpoint`` (remat) on the body.
+Heterogeneous structure (deepseek's leading dense layer, zamba2's shared
+attention block every k layers) is handled around/inside the scan.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    BF16, F32, attn_block, init_attn, init_mlp, mlp, rmsnorm,
+)
+
+
+def _constrain_act(x, mesh, dp, seq: bool = False):
+    """Pin [B,S,d] activations to batch-over-data sharding.  Without this,
+    GSPMD propagation from the (vocab x d)-sharded embedding table can leave
+    full-batch replicas on every device (observed: 3.8 GiB f32 all-gathers).
+
+    ``seq=True`` additionally shards the sequence dim over the model axis
+    (sequence parallelism; cfg.seq_parallel — EXPERIMENTS.md §Perf)."""
+    if mesh is None or mesh.size == 1:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    spec = P(dp, "model", None) if seq else P(dp, None, None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _sp_mode(cfg, mesh, S: int, decode: bool) -> str:
+    """Resolve the active sequence-parallel mode for this call site."""
+    if (cfg.seq_parallel == "off" or mesh is None or mesh.size == 1
+            or decode or "model" not in mesh.axis_names):
+        return "off"
+    if S % dict(mesh.shape)["model"] != 0:
+        return "off"
+    return cfg.seq_parallel
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def _init_block(cfg: ModelConfig, key, kind: str) -> Params:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p: Params = {"ln1": jnp.ones((d,), F32)}
+    if kind == "ssm":
+        p["ssm"] = ssm_mod.init_ssm(ks[0], cfg)
+        return p
+    if cfg.use_mla:
+        p["attn"] = mla_mod.init_mla(ks[0], cfg)
+    else:
+        p["attn"] = init_attn(ks[0], d, cfg.n_heads, cfg.n_kv_heads,
+                              cfg.d_head, cfg.qkv_bias)
+    p["ln2"] = jnp.ones((d,), F32)
+    if kind == "moe":
+        p["moe"] = moe_mod.init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = init_mlp(ks[1], d, cfg.d_ff)
+    return p
+
+
+def _block_kinds(cfg: ModelConfig) -> Tuple[str, str, int]:
+    """(first-layers kind, scanned kind, n_first)."""
+    if cfg.family in ("ssm", "hybrid"):
+        return "ssm", "ssm", 0
+    if cfg.family == "moe":
+        return "dense", "moe", cfg.first_dense
+    return "dense", "dense", 0
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    k_embed, k_first, k_blocks, k_extra, k_out = jax.random.split(key, 5)
+    d, Vp = cfg.d_model, cfg.vocab_padded
+    first_kind, kind, n_first = _block_kinds(cfg)
+
+    params: Params = {
+        "embed": jax.random.normal(k_embed, (Vp, d), F32) * 0.02,
+        "final_norm": jnp.ones((d,), F32),
+        "unembed": jax.random.normal(k_out, (d, Vp), F32) * (d ** -0.5),
+    }
+    n_scan = cfg.n_layers - n_first
+    keys = jax.random.split(k_blocks, n_scan)
+    params["blocks"] = jax.vmap(
+        lambda k: _init_block(cfg, k, kind))(keys)
+    if n_first:
+        fkeys = jax.random.split(k_first, n_first)
+        params["first_blocks"] = jax.vmap(
+            lambda k: _init_block(cfg, k, first_kind))(fkeys)
+    if cfg.family == "hybrid":
+        params["shared_attn"] = _init_block(cfg, k_extra, "dense")
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+def _dense_block(p, x, cfg, positions, *, cache=None, cache_len=None,
+                 mesh=None, dp=("data",), kind="dense", sp="off"):
+    """Residual attention(+MLA) block followed by MLP or MoE.
+
+    Returns (x, new_cache, aux).  ``sp='attn'`` runs the attention body
+    sequence-sharded over the model axis — the cure for archs whose head
+    count does not divide the model axis (smollm 15H, phi4/minitron 24H),
+    where the baseline replicates the whole S^2 logits tensor on every
+    model shard (EXPERIMENTS.md §Perf).
+    """
+    msize = dict(mesh.shape).get("model", 1) if mesh is not None else 1
+    attn_sp = (sp == "attn" and cache is None and msize > 1
+               and cfg.n_heads % msize != 0)
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if attn_sp:
+        h = _constrain_act(h, mesh, dp, seq=True)
+    if cfg.use_mla:
+        if cache is None:
+            a, new_cache = mla_mod.mla_prefill(p["attn"], h, cfg, positions,
+                                               impl=cfg.attn_impl,
+                                               mesh=mesh, dp=dp)
+        else:
+            a, new_cache = mla_mod.mla_decode(p["attn"], h, cfg, positions,
+                                              cache, cache_len)
+    else:
+        a, new_cache = attn_block(
+            p["attn"], h, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            d_head=cfg.d_head, rope_theta=cfg.rope_theta, positions=positions,
+            impl=cfg.attn_impl, cache_kv=cache, cache_len=cache_len)
+    if attn_sp:
+        a = _constrain_act(a, mesh, dp, seq=False)
+    x = x + a
+
+    h2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if kind == "moe":
+        y, aux = moe_mod.moe_layer(p["moe"], h2, cfg, mesh, dp)
+    else:
+        y, aux = mlp(p["mlp"], h2), jnp.zeros((), F32)
+    return x + y, new_cache, aux
+
+
+def _ssm_res_block(p, x, cfg, *, mode="train", state=None):
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    y, new_state = ssm_mod.ssm_block(p["ssm"], h, cfg, mode=mode, state=state,
+                                     impl=cfg.ssm_impl)
+    return x + y, new_state
+
+
+# ---------------------------------------------------------------------------
+# Embedding / stacks
+# ---------------------------------------------------------------------------
+def embed_tokens(params, tokens, cfg):
+    return params["embed"].astype(BF16)[tokens]
+
+
+def _assemble_input(params, batch, cfg):
+    """Token/stub-frontend embedding -> x [B,S,d] (see config.frontend)."""
+    if cfg.frontend == "patch_embeds":
+        prefix = batch["patch_embeds"].astype(BF16)          # [B,Np,d]
+        text = embed_tokens(params, batch["tokens"], cfg)
+        return jnp.concatenate([prefix, text], axis=1)
+    if cfg.frontend == "frame_embeds":
+        return batch["frame_embeds"].astype(BF16)            # [B,S,d]
+    return embed_tokens(params, batch["tokens"], cfg)
+
+
+def _maybe_remat(fn, cfg):
+    return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable
+                          ) if cfg.remat else fn
+
+
+def _scan_or_unroll(body, carry, xs, use_scan: bool):
+    """lax.scan, or a python unroll (cfg.scan_layers=False).
+
+    The unrolled form exists for the roofline pass: XLA's HloCostAnalysis
+    (and any HLO-text collective accounting) counts a while-loop body ONCE,
+    so scanned-layer programs under-report FLOPs/bytes/collectives by ~L x.
+    Unrolling gives cost-exact HLO; scanning gives fast compiles and is the
+    deploy configuration.
+    """
+    if use_scan:
+        return jax.lax.scan(body, carry, xs)
+    L = jax.tree.leaves(xs)[0].shape[0]
+    ys_all = []
+    for i in range(L):
+        xi = jax.tree.map(lambda a, i=i: a[i], xs)
+        carry, ys = body(carry, xi)
+        ys_all.append(ys)
+    ys = jax.tree.map(lambda *v: jnp.stack(v), *ys_all)
+    return carry, ys
+
+
+def _run_stack(cfg, params, x, positions, *, mode, mesh, dp,
+               cache=None, cache_len=None):
+    """Apply first_blocks + scanned blocks.  Returns (x, new_cache, aux).
+
+    ``cache`` (decode) / returned cache (prefill) is a pytree whose leading
+    axis is the layer for scanned blocks (plus separate entries for the
+    leading dense layers and zamba2's shared-attention applications).
+    """
+    first_kind, kind, n_first = _block_kinds(cfg)
+    sp = _sp_mode(cfg, mesh, x.shape[1], decode=(mode == "decode"))
+    aux_total = jnp.zeros((), F32)
+    new_cache: Dict[str, Any] = {}
+
+    # --- leading (non-scanned) layers -------------------------------------
+    if n_first:
+        fc = []
+        for i in range(n_first):
+            p_i = jax.tree.map(lambda a: a[i], params["first_blocks"])
+            c_i = None if cache is None else jax.tree.map(
+                lambda a: a[i], cache["first"])
+            x, c, aux = _dense_block(p_i, x, cfg, positions, cache=c_i,
+                                     cache_len=cache_len, mesh=mesh, dp=dp,
+                                     kind=first_kind, sp=sp)
+            aux_total += aux
+            fc.append(c)
+        if mode != "train":
+            new_cache["first"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *fc)
+
+    # --- scanned stack -----------------------------------------------------
+    if cfg.family in ("ssm", "hybrid"):
+        x, new_cache, aux = _run_ssm_stack(
+            cfg, params, x, positions, mode=mode, cache=cache,
+            cache_len=cache_len, new_cache=new_cache, mesh=mesh, dp=dp,
+            sp=sp)
+        aux_total += aux
+        return x, new_cache, aux_total
+
+    def body(carry, xs):
+        h = carry
+        if cache is None:
+            p_l = xs
+            c_l = None
+        else:
+            p_l, c_l = xs
+        h, c, aux = _dense_block(p_l, h, cfg, positions, cache=c_l,
+                                 cache_len=cache_len, mesh=mesh, dp=dp,
+                                 kind=kind, sp=sp)
+        h = _constrain_act(h, mesh, dp, seq=(sp == "full"))
+        ys = (aux,) if mode == "train" else (aux, c)
+        return h, ys
+
+    body = _maybe_remat(body, cfg)
+    xs = params["blocks"] if cache is None else (params["blocks"],
+                                                 cache["layers"])
+    x, ys = _scan_or_unroll(body, x, xs, cfg.scan_layers)
+    aux_total += ys[0].sum()
+    if mode != "train":
+        new_cache["layers"] = ys[1]
+    return x, new_cache, aux_total
+
+
+def _run_ssm_stack(cfg, params, x, positions, *, mode, cache, cache_len,
+                   new_cache, mesh=None, dp=("data",), sp="off"):
+    """Mamba2 stack; zamba2 interleaves one *shared* attention block every
+    ``attn_every`` layers (its own KV cache per application).
+
+    * train:   no caches carried at all;
+    * prefill: attention runs causal (cache=None path) and its fresh (k, v)
+      is written into the per-application cache carry;
+    * decode:  attention reads/updates the application's cache slice.
+    """
+    L = cfg.n_layers
+    hybrid = cfg.family == "hybrid"
+    n_apps = cfg.n_attn_applications if hybrid else 0
+    decode = mode == "decode" and x.shape[1] == 1
+    ssm_mode = "decode" if decode else "train"
+
+    def body(carry, xs):
+        if hybrid:
+            h, attn_cache, app_idx = carry
+        else:
+            h = carry
+        if cache is None:
+            p_l, i = xs
+            s_l = None
+        else:
+            p_l, i, s_l = xs
+        h, s_new = _ssm_res_block(p_l, h, cfg, mode=ssm_mode, state=s_l)
+
+        if hybrid:
+            apply = (i % cfg.attn_every) == (cfg.attn_every - 1)
+
+            def do_attn(h, attn_cache, app_idx):
+                if decode:
+                    c_a = jax.tree.map(lambda a: a[app_idx], attn_cache)
+                    h2, c_new, _ = _dense_block(
+                        params["shared_attn"], h, cfg, positions, cache=c_a,
+                        cache_len=cache_len, kind="dense")
+                else:
+                    h2, c_new, _ = _dense_block(
+                        params["shared_attn"], h, cfg, positions, cache=None,
+                        kind="dense", mesh=mesh, dp=dp, sp=sp)
+                if mode != "train":
+                    attn_cache = jax.tree.map(
+                        lambda full, one: jax.lax.dynamic_update_index_in_dim(
+                            full, one.astype(full.dtype), app_idx, 0),
+                        attn_cache, c_new)
+                return h2, attn_cache
+
+            def no_attn(h, attn_cache, app_idx):
+                return h, attn_cache
+
+            h, attn_cache = jax.lax.cond(apply, do_attn, no_attn,
+                                         h, attn_cache, app_idx)
+            app_idx = app_idx + apply.astype(jnp.int32)
+            carry = (_constrain_act(h, mesh, dp), attn_cache, app_idx)
+        else:
+            carry = _constrain_act(h, mesh, dp)
+        ys = s_new if mode != "train" else None
+        return carry, ys
+
+    body = _maybe_remat(body, cfg)
+    idx = jnp.arange(L)
+    if cache is None:
+        xs = (params["blocks"], idx)
+    else:
+        xs = (params["blocks"], idx, cache["ssm"])
+
+    if hybrid:
+        if mode == "train":
+            # dummy 0-size carry keeps the pytree structure without memory
+            attn_cache0 = (jnp.zeros((n_apps, 0), BF16),
+                           jnp.zeros((n_apps, 0), BF16))
+        elif cache is not None:
+            attn_cache0 = cache["attn"]
+        else:
+            attn_cache0 = _hybrid_attn_cache(cfg, x.shape[0], x.shape[1],
+                                             n_apps)
+        carry0 = (x, attn_cache0, jnp.zeros((), jnp.int32))
+        (x, attn_cache, _), ys = _scan_or_unroll(body, carry0, xs,
+                                                 cfg.scan_layers)
+        if mode != "train":
+            new_cache["attn"] = attn_cache
+    else:
+        x, ys = _scan_or_unroll(body, x, xs, cfg.scan_layers)
+    if mode != "train":
+        new_cache["ssm"] = ys
+    return x, new_cache, jnp.zeros((), F32)
+
+
+def _hybrid_attn_cache(cfg, B, T, n_apps):
+    shape = (n_apps, B, T, cfg.n_kv_heads, cfg.d_head)
+    return (jnp.zeros(shape, BF16), jnp.zeros(shape, BF16))
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+def forward_train(cfg: ModelConfig, params: Params, batch: Dict[str, Any],
+                  mesh=None, dp: tuple = ("data",)):
+    """Returns (hidden [B,S,d], aux_loss)."""
+    x = _assemble_input(params, batch, cfg)
+    S = x.shape[1]
+    sp = _sp_mode(cfg, mesh, S, decode=False)
+    x = _constrain_act(x, mesh, dp, seq=(sp == "full"))
+    positions = jnp.arange(S)
+    x, _, aux = _run_stack(cfg, params, x, positions, mode="train",
+                           mesh=mesh, dp=dp)
+    x = _constrain_act(x, mesh, dp)       # loss chunks want S unsharded
+    return rmsnorm(x, params["final_norm"], cfg.norm_eps), aux
+
+
+def prefill(cfg: ModelConfig, params: Params, batch: Dict[str, Any],
+            mesh=None, dp: tuple = ("data",)):
+    """Returns (last-position logits [B,Vp], cache, seq_len)."""
+    x = _assemble_input(params, batch, cfg)
+    S = x.shape[1]
+    sp = _sp_mode(cfg, mesh, S, decode=False)
+    x = _constrain_act(x, mesh, dp, seq=(sp == "full"))
+    positions = jnp.arange(S)
+    x, cache, _ = _run_stack(cfg, params, x, positions, mode="prefill",
+                             mesh=mesh, dp=dp)
+    x = _constrain_act(x, mesh, dp)
+    h_last = rmsnorm(x[:, -1], params["final_norm"], cfg.norm_eps)
+    logits = (h_last.astype(BF16) @ params["unembed"].astype(BF16)
+              ).astype(F32)
+    return logits, cache, S
+
+
+def decode_step(cfg: ModelConfig, params: Params, tokens: jnp.ndarray,
+                cache, cache_len: jnp.ndarray, mesh=None,
+                dp: tuple = ("data",)):
+    """One decode step.  tokens [B,1] -> (logits [B,Vp], cache')."""
+    x = _constrain_act(embed_tokens(params, tokens, cfg), mesh, dp)
+    positions = cache_len + jnp.arange(x.shape[1])
+    x, new_cache, _ = _run_stack(cfg, params, x, positions, mode="decode",
+                                 mesh=mesh, dp=dp, cache=cache,
+                                 cache_len=cache_len)
+    h = rmsnorm(x[:, -1], params["final_norm"], cfg.norm_eps)
+    logits = (h.astype(BF16) @ params["unembed"].astype(BF16)).astype(F32)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Decode-cache construction (shapes only — dry-run uses eval_shape)
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int):
+    """Empty decode cache sized for ``max_len`` positions."""
+    first_kind, kind, n_first = _block_kinds(cfg)
+    n_scan = cfg.n_layers - n_first
+    cache: Dict[str, Any] = {}
+
+    def attn_cache(n):
+        if cfg.use_mla:
+            return (jnp.zeros((n, batch_size, max_len, cfg.kv_lora_rank),
+                              BF16),
+                    jnp.zeros((n, batch_size, max_len, cfg.qk_rope_dim),
+                              BF16))
+        shape = (n, batch_size, max_len, cfg.n_kv_heads, cfg.d_head)
+        return (jnp.zeros(shape, BF16), jnp.zeros(shape, BF16))
+
+    if cfg.family in ("ssm", "hybrid"):
+        H, Pd, N = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+        ch = cfg.d_inner + 2 * cfg.ssm_state
+        cache["ssm"] = (
+            jnp.zeros((cfg.n_layers, batch_size, H, Pd, N), F32),
+            jnp.zeros((cfg.n_layers, batch_size, cfg.conv_width - 1, ch),
+                      F32),
+        )
+        if cfg.family == "hybrid":
+            cache["attn"] = _hybrid_attn_cache(cfg, batch_size, max_len,
+                                               cfg.n_attn_applications)
+        return cache
+
+    cache["layers"] = attn_cache(n_scan)
+    if n_first:
+        cache["first"] = attn_cache(n_first)
+    return cache

@@ -1,0 +1,92 @@
+"""Serving steps: batched prefill and single-token decode with greedy/top-k
+sampling.  The decode cache layouts live in ``models/transformer.init_cache``
+and their shardings in ``models/sharding.cache_specs``.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+
+
+def make_prefill_step(cfg: ModelConfig, mesh=None,
+                      dp: tuple = ("data",)) -> Callable:
+    def prefill_step(params, batch: Dict[str, Any]):
+        logits, cache, seq_len = transformer.prefill(cfg, params, batch,
+                                                     mesh=mesh, dp=dp)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, logits, cache
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, mesh=None,
+                     dp: tuple = ("data",)) -> Callable:
+    def decode_one(params, tokens: jnp.ndarray, cache, cache_len):
+        """tokens [B,1] -> (next token [B], logits, cache')."""
+        logits, cache = transformer.decode_step(cfg, params, tokens, cache,
+                                                cache_len, mesh=mesh, dp=dp)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, logits, cache
+    return decode_one
+
+
+def sample_top_k(key, logits: jnp.ndarray, k: int = 40,
+                 temperature: float = 1.0) -> jnp.ndarray:
+    vals, idx = jax.lax.top_k(logits / jnp.maximum(temperature, 1e-4), k)
+    choice = jax.random.categorical(key, vals)
+    return jnp.take_along_axis(idx, choice[..., None], axis=-1)[..., 0]
+
+
+def generate(cfg: ModelConfig, params, batch, n_steps: int, mesh=None,
+             dp: tuple = ("data",), max_len: int | None = None):
+    """Greedy generation loop (prefill + lax.scan over decode steps)."""
+    prefill_step = make_prefill_step(cfg, mesh, dp)
+    decode = make_decode_step(cfg, mesh, dp)
+
+    first_tok, _, pf_cache = prefill_step(params, batch)
+    seq_len = _batch_seq_len(cfg, batch)
+    max_len = max_len or (seq_len + n_steps)
+    B = first_tok.shape[0]
+    cache = transformer.init_cache(cfg, B, max_len)
+    cache = _load_prefill(cfg, cache, pf_cache, seq_len)
+
+    def body(carry, _):
+        tok, cache, pos = carry
+        nxt, _, cache = decode(params, tok[:, None], cache, pos)
+        return (nxt, cache, pos + 1), nxt
+
+    (_, _, _), toks = jax.lax.scan(
+        body, (first_tok, cache, jnp.array(seq_len, jnp.int32)),
+        None, length=n_steps)
+    return jnp.moveaxis(toks, 0, 1)                  # [B, n_steps]
+
+
+def _batch_seq_len(cfg, batch) -> int:
+    if cfg.frontend == "patch_embeds":
+        return batch["patch_embeds"].shape[1] + batch["tokens"].shape[1]
+    if cfg.frontend == "frame_embeds":
+        return batch["frame_embeds"].shape[1]
+    return batch["tokens"].shape[1]
+
+
+def _load_prefill(cfg, cache, pf_cache, seq_len: int):
+    """Copy prefill-sized cache entries into the max_len decode cache."""
+    def load(full, part):
+        if full.ndim >= 3 and part.ndim == full.ndim \
+                and part.shape[2] <= full.shape[2] and full.ndim >= 4:
+            return jax.lax.dynamic_update_slice_in_dim(
+                full, part.astype(full.dtype), 0, axis=2)
+        return part.astype(full.dtype)               # ssm states: replace
+
+    out = {}
+    for k in cache:
+        if k == "ssm":
+            out[k] = jax.tree.map(lambda f, p: p.astype(f.dtype),
+                                  cache[k], pf_cache[k])
+        else:
+            out[k] = jax.tree.map(load, cache[k], pf_cache[k])
+    return out

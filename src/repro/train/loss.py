@@ -1,0 +1,77 @@
+"""Chunked cross-entropy: never materializes the [B, S, V] f32 logits.
+
+The sequence axis is scanned in ``logit_chunk`` slices; each chunk computes
+bf16 logits against the (vocab-padded, model-axis-sharded) unembedding,
+masks padded vocab entries, and reduces log-probs in f32.  Label -1 marks
+ignored positions.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import BF16, F32
+
+
+def chunked_cross_entropy(hidden: jnp.ndarray, unembed: jnp.ndarray,
+                          labels: jnp.ndarray, vocab_real: int,
+                          chunk: int = 512, unroll: bool = False
+                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """hidden [B,S,d], unembed [d,Vp], labels [B,S] -> (sum_nll, n_valid).
+
+    ``unroll`` replaces the chunk lax.scan with a python loop (cost-exact
+    HLO for the roofline pass; see transformer._scan_or_unroll).
+    """
+    B, S, d = hidden.shape
+    Vp = unembed.shape[1]
+    chunk = min(chunk, S)
+    n_chunks = S // chunk
+    rem = S - n_chunks * chunk
+
+    def chunk_loss(h_c, l_c):
+        logits = (h_c.astype(BF16) @ unembed.astype(BF16)).astype(F32)
+        if vocab_real < Vp:
+            pad_mask = jnp.arange(Vp) < vocab_real
+            logits = jnp.where(pad_mask[None, None], logits, -1e30)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(
+            logits, jnp.clip(l_c, 0, Vp - 1)[..., None], axis=-1)[..., 0]
+        valid = (l_c >= 0).astype(F32)
+        return ((lse - ll) * valid).sum(), valid.sum()
+
+    if n_chunks > 0:
+        h_main = hidden[:, :n_chunks * chunk].reshape(B, n_chunks, chunk, d)
+        l_main = labels[:, :n_chunks * chunk].reshape(B, n_chunks, chunk)
+
+        if unroll:
+            nll = n = jnp.zeros((), F32)
+            for i in range(n_chunks):
+                nll_i, n_i = chunk_loss(h_main[:, i], l_main[:, i])
+                nll, n = nll + nll_i, n + n_i
+        else:
+            def body(carry, xs):
+                h_c, l_c = xs
+                nll, n = chunk_loss(h_c, l_c)
+                return (carry[0] + nll, carry[1] + n), None
+
+            (nll, n), _ = jax.lax.scan(
+                body, (jnp.zeros((), F32), jnp.zeros((), F32)),
+                (jnp.moveaxis(h_main, 1, 0), jnp.moveaxis(l_main, 1, 0)))
+    else:
+        nll = n = jnp.zeros((), F32)
+    if rem:
+        nll_r, n_r = chunk_loss(hidden[:, -rem:], labels[:, -rem:])
+        nll, n = nll + nll_r, n + n_r
+    return nll, n
+
+
+def lm_loss(hidden, unembed, labels, vocab_real, chunk=512,
+            aux=None, aux_weight: float = 0.01, unroll: bool = False):
+    nll, n = chunked_cross_entropy(hidden, unembed, labels, vocab_real,
+                                   chunk, unroll=unroll)
+    loss = nll / jnp.maximum(n, 1.0)
+    if aux is not None:
+        loss = loss + aux_weight * aux
+    return loss, {"nll": nll, "n_tokens": n, "ce": nll / jnp.maximum(n, 1.0)}

@@ -1,0 +1,93 @@
+"""AdamW + cosine schedule + global-norm clipping, sharded like the params.
+
+No optax dependency — the update is ~40 lines and having it explicit lets
+the dry-run's memory analysis account for every optimizer byte (m, v in f32,
+sharded with the same PartitionSpecs as their parameters).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    min_lr_ratio: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+class OptState(NamedTuple):
+    m: Any
+    v: Any
+    step: jnp.ndarray
+
+
+def init_opt_state(params: Any) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)
+    return OptState(m=zeros,
+                    v=jax.tree.map(lambda z: z.copy(), zeros),
+                    step=jnp.zeros((), jnp.int32))
+
+
+def lr_schedule(cfg: OptimizerConfig, step: jnp.ndarray) -> jnp.ndarray:
+    warm = cfg.lr * jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.lr * cos)
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(F32) ** 2) for l in leaves))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float
+                        ) -> Tuple[Any, jnp.ndarray]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def adamw_update(cfg: OptimizerConfig, params: Any, grads: Any,
+                 state: OptState) -> Tuple[Any, OptState, dict]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state.step + 1
+    lr = lr_schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(F32)
+    b2c = 1 - cfg.b2 ** step.astype(F32)
+
+    def upd(p, g, m, v):
+        g = g.astype(F32)
+        m2 = cfg.b1 * m + (1 - cfg.b1) * g
+        v2 = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m2 / b1c
+        vhat = v2 / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay \
+            * p.astype(F32)
+        return (p - lr * delta).astype(p.dtype), m2, v2
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, OptState(new_m, new_v, step), {
+        "lr": lr, "grad_norm": gnorm}

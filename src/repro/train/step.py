@@ -1,0 +1,97 @@
+"""train_step builder: loss -> grads -> (optional int8 EF compression on the
+cross-pod axis) -> AdamW, with optional microbatch gradient accumulation.
+
+The returned step is pure; ``repro/launch/train.py`` jits it with
+in/out shardings from ``models/sharding.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.train import loss as loss_mod
+from repro.train import optimizer as opt_mod
+
+F32 = jnp.float32
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: opt_mod.OptState
+
+
+@dataclasses.dataclass(frozen=True)
+class StepConfig:
+    n_microbatches: int = 1
+    aux_weight: float = 0.01
+    compress_pod_grads: bool = False   # int8 error-feedback on the pod axis
+
+
+def init_train_state(cfg: ModelConfig, key) -> TrainState:
+    params = transformer.init_params(cfg, key)
+    return TrainState(params=params, opt=opt_mod.init_opt_state(params))
+
+
+def make_loss_fn(cfg: ModelConfig, mesh=None, dp: tuple = ("data",),
+                 aux_weight: float = 0.01) -> Callable:
+    def loss_fn(params, batch):
+        hidden, aux = transformer.forward_train(cfg, params, batch,
+                                                mesh=mesh, dp=dp)
+        labels = batch["labels"]
+        if cfg.frontend == "patch_embeds":
+            # loss only on text positions (prefix = image patches)
+            hidden = hidden[:, cfg.n_prefix:]
+        return loss_mod.lm_loss(hidden, params["unembed"], labels,
+                                cfg.vocab, cfg.logit_chunk,
+                                aux=aux, aux_weight=aux_weight,
+                                unroll=not cfg.scan_layers)
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: opt_mod.OptimizerConfig,
+                    step_cfg: StepConfig = StepConfig(), mesh=None,
+                    dp: tuple = ("data",)) -> Callable:
+    loss_fn = make_loss_fn(cfg, mesh=mesh, dp=dp,
+                           aux_weight=step_cfg.aux_weight)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if step_cfg.n_microbatches <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return loss, metrics, grads
+
+        n = step_cfg.n_microbatches
+        micro = jax.tree.map(
+            lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch)
+
+        def body(carry, mb):
+            acc, loss_acc = carry
+            (loss, metrics), grads = grad_fn(params, mb)
+            acc = jax.tree.map(lambda a, g: a + g.astype(F32), acc, grads)
+            return (acc, loss_acc + loss), metrics
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)
+        (acc, loss_sum), metrics = jax.lax.scan(
+            body, (zeros, jnp.zeros((), F32)), micro)
+        grads = jax.tree.map(lambda a: a / n, acc)
+        metrics = jax.tree.map(lambda m: m[-1], metrics)
+        return loss_sum / n, metrics, grads
+
+    def train_step(state: TrainState, batch: Dict[str, Any]
+                   ) -> Tuple[TrainState, Dict[str, Any]]:
+        loss, metrics, grads = compute_grads(state.params, batch)
+        if step_cfg.compress_pod_grads and mesh is not None \
+                and "pod" in mesh.axis_names:
+            from repro.distributed import compression
+            grads = compression.pod_compressed_mean(grads, mesh)
+        params, opt, opt_metrics = opt_mod.adamw_update(
+            opt_cfg, state.params, grads, state.opt)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return TrainState(params, opt), metrics
+
+    return train_step

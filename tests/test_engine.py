@@ -1,0 +1,108 @@
+"""Engine invariants — hypothesis property tests over random workloads.
+
+The properties the SoA port must preserve from the paper's process model:
+  * resource conservation: host ``used`` == sum of deployed containers' req;
+  * status legality: every container is in exactly one Table-2 state;
+  * monotone completion: completed stays completed, finish_t set once;
+  * cost monotonicity.
+"""
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import (SimConfig, build_paper_hosts, build_paper_network,
+                        get_policy, init_sim, paper_workload, run_sim)
+from repro.core.types import (STATUS_COMMUNICATING, STATUS_COMPLETED,
+                              STATUS_MIGRATING, STATUS_RUNNING)
+
+
+def small_cfg(n_jobs, n_containers, horizon):
+    return SimConfig(n_jobs=n_jobs, n_tasks=n_containers,
+                     n_containers=n_containers, horizon=horizon,
+                     arrival_window=10.0, placements_per_tick=16,
+                     migrations_per_tick=2)
+
+
+def run(seed, policy, n_jobs=10, n_containers=40, horizon=60):
+    cfg = small_cfg(n_jobs, n_containers, horizon)
+    hosts = build_paper_hosts()
+    spec, net = build_paper_network(cfg)
+    sim0 = init_sim(hosts, paper_workload(cfg, seed=seed), net, seed=seed)
+    final, metrics = run_sim(sim0, cfg, get_policy(policy), spec.n_hosts,
+                             spec.n_nodes, horizon)
+    return cfg, final, metrics
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       policy=st.sampled_from(["firstfit", "round", "performance_first",
+                               "jobgroup", "overload_migrate"]))
+def test_resource_conservation(seed, policy):
+    """host.used must equal the sum of requests of deployed containers
+    (+ reserved destinations of in-flight migrations)."""
+    cfg, final, _ = run(seed, policy)
+    ct, hosts = final.containers, final.hosts
+    st_ = np.asarray(ct.status)
+    host = np.asarray(ct.host)
+    req = np.asarray(ct.req)
+    mig_dst = np.asarray(ct.mig_dst)
+    H = np.asarray(hosts.cap).shape[0]
+
+    expect = np.zeros((H, 3), np.float64)
+    deployed = np.isin(st_, [STATUS_RUNNING, STATUS_COMMUNICATING,
+                             STATUS_MIGRATING])
+    for c in np.where(deployed)[0]:
+        expect[host[c]] += req[c]
+    for c in np.where(st_ == STATUS_MIGRATING)[0]:
+        expect[mig_dst[c]] += req[c]           # reserved on destination
+    np.testing.assert_allclose(np.asarray(hosts.used), expect,
+                               rtol=1e-4, atol=1e-2)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       policy=st.sampled_from(["firstfit", "jobgroup", "overload_migrate"]))
+def test_capacity_never_exceeded(seed, policy):
+    cfg, final, _ = run(seed, policy)
+    used = np.asarray(final.hosts.used)
+    cap = np.asarray(final.hosts.cap)
+    assert (used <= cap + 1e-3).all(), (used - cap).max()
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_completion_consistency(seed):
+    cfg, final, _ = run(seed, "firstfit", horizon=100)
+    ct = final.containers
+    st_ = np.asarray(ct.status)
+    done = st_ == STATUS_COMPLETED
+    fin = np.asarray(ct.finish_t)
+    run_at = np.asarray(ct.run_at)
+    dur = np.asarray(ct.duration)
+    assert (fin[done] >= 0).all()
+    assert (run_at[done] >= dur[done] - 1e-3).all()
+    # undeployed completed containers hold no host slot
+    assert (np.asarray(ct.host)[done] == -1).all()
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_queue_counts_partition_containers(seed):
+    """Every tick: queue counts sum to the number of *born* containers."""
+    cfg, final, metrics = run(seed, "round", horizon=50)
+    born = int(np.isfinite(np.asarray(final.containers.submit_t)).sum())
+    total = (np.asarray(metrics.n_inactive) + np.asarray(metrics.n_deployed)
+             + np.asarray(metrics.n_completed))
+    arrived = np.cumsum(np.asarray(metrics.new_arrivals))
+    np.testing.assert_array_equal(total, arrived)
+    assert arrived[-1] == born
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_cost_monotone_nonnegative(seed):
+    cfg, final, metrics = run(seed, "performance_first")
+    assert float(final.total_cost) >= 0.0
+    busy = np.asarray(final.hosts.busy_time)
+    assert (busy >= 0).all() and busy.max() <= cfg.horizon

@@ -1,0 +1,148 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention.ref import attention as fa_ref
+from repro.kernels.fw_minplus import ops as fw_ops
+from repro.kernels.fw_minplus.ref import floyd_warshall_ref
+from repro.kernels.ssd_scan import ops as ssd_ops
+from repro.kernels.ssd_scan.ref import ssd_chunked_ref
+
+rng = np.random.default_rng(42)
+
+
+# --- fw_minplus -------------------------------------------------------------
+@pytest.mark.parametrize("n,bs", [(8, 4), (24, 8), (64, 16), (100, 32),
+                                  (128, 64), (30, 16)])
+def test_fw_matches_ref(n, bs):
+    A = rng.uniform(0.1, 10, (n, n)).astype(np.float32)
+    A[rng.uniform(size=(n, n)) < 0.5] = 1e9
+    A = np.minimum(A, A.T)
+    np.fill_diagonal(A, 0.0)
+    D_ref = np.asarray(floyd_warshall_ref(jnp.asarray(A)))
+    D_k = np.asarray(fw_ops.floyd_warshall(jnp.asarray(A), bs=bs))
+    np.testing.assert_allclose(D_k, D_ref, rtol=1e-5, atol=1e-4)
+
+
+def test_fw_disconnected_stays_inf():
+    A = np.full((12, 12), 1e9, np.float32)
+    np.fill_diagonal(A, 0)
+    A[0, 1] = A[1, 0] = 1.0          # only one edge
+    D = np.asarray(fw_ops.floyd_warshall(jnp.asarray(A), bs=4))
+    assert D[0, 1] == 1.0
+    assert D[0, 2] >= 1e8            # unreachable remains "inf"
+
+
+# --- flash attention ---------------------------------------------------------
+@pytest.mark.parametrize(
+    "B,S,Hq,Hkv,D,causal,dtype",
+    [(2, 128, 4, 4, 64, True, jnp.float32),
+     (2, 256, 8, 2, 64, True, jnp.bfloat16),
+     (1, 256, 15, 5, 64, True, jnp.float32),    # smollm GQA 15/5
+     (2, 128, 4, 1, 128, True, jnp.bfloat16),   # MQA
+     (2, 128, 4, 4, 64, False, jnp.float32),
+     (1, 512, 2, 2, 32, True, jnp.float32)])
+def test_flash_attention_matches_ref(B, S, Hq, Hkv, D, causal, dtype):
+    q = jnp.asarray(rng.standard_normal((B, S, Hq, D)), dtype)
+    k = jnp.asarray(rng.standard_normal((B, S, Hkv, D)), dtype)
+    v = jnp.asarray(rng.standard_normal((B, S, Hkv, D)), dtype)
+    o_k = fa_ops.flash_attention(q, k, v, causal)
+    o_r = fa_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(o_k, np.float32),
+                               np.asarray(o_r, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_attention_grads_match_ref():
+    q = jnp.asarray(rng.standard_normal((1, 128, 4, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 128, 2, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 128, 2, 64)), jnp.float32)
+
+    def loss_k(q, k, v):
+        return (fa_ops.flash_attention(q, k, v) ** 2).sum()
+
+    def loss_r(q, k, v):
+        return (fa_ref(q, k, v) ** 2).sum()
+
+    gk = jax.grad(loss_k, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_r, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-4, rtol=2e-4)
+
+
+def test_flash_attention_causality():
+    """Changing future K/V must not change past outputs."""
+    q = jnp.asarray(rng.standard_normal((1, 128, 2, 32)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 128, 2, 32)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 128, 2, 32)), jnp.float32)
+    o1 = fa_ops.flash_attention(q, k, v, True)
+    k2 = k.at[:, 64:].set(99.0)
+    v2 = v.at[:, 64:].set(-99.0)
+    o2 = fa_ops.flash_attention(q, k2, v2, True)
+    np.testing.assert_allclose(np.asarray(o1[:, :64]),
+                               np.asarray(o2[:, :64]), atol=1e-6)
+
+
+# --- ssd scan ----------------------------------------------------------------
+@pytest.mark.parametrize(
+    "B,S,H,P,N,Q",
+    [(2, 64, 4, 32, 16, 16), (1, 128, 2, 64, 32, 32),
+     (2, 256, 4, 64, 128, 64), (1, 64, 8, 16, 8, 64),
+     (1, 96, 2, 32, 16, 32)])
+def test_ssd_matches_ref(B, S, H, P, N, Q):
+    xs = jnp.asarray(rng.standard_normal((B, S, H, P)) * 0.5, jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((B, S, N)) * 0.5, jnp.float32)
+    Cm = jnp.asarray(rng.standard_normal((B, S, N)) * 0.5, jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (B, S, H)), jnp.float32)
+    A_log = jnp.asarray(rng.uniform(-1, 0.5, (H,)), jnp.float32)
+    y_r, h_r = ssd_chunked_ref(xs, Bm, Cm, dt, A_log, Q)
+    y_k, h_k = ssd_ops.ssd_chunked(xs, Bm, Cm, dt, A_log, Q)
+    scale = max(float(np.abs(np.asarray(y_r)).max()), 1.0)
+    np.testing.assert_allclose(np.asarray(y_k) / scale,
+                               np.asarray(y_r) / scale, atol=2e-2)
+    np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_r), atol=1e-2)
+
+
+def test_ssd_chunking_invariance():
+    """Different chunk sizes must give the same sequence output."""
+    B, S, H, P, N = 1, 128, 2, 32, 16
+    xs = jnp.asarray(rng.standard_normal((B, S, H, P)) * 0.5, jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((B, S, N)) * 0.5, jnp.float32)
+    Cm = jnp.asarray(rng.standard_normal((B, S, N)) * 0.5, jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (B, S, H)), jnp.float32)
+    A_log = jnp.zeros((H,), jnp.float32)
+    y16, h16 = ssd_chunked_ref(xs, Bm, Cm, dt, A_log, 16)
+    y64, h64 = ssd_chunked_ref(xs, Bm, Cm, dt, A_log, 64)
+    np.testing.assert_allclose(np.asarray(y16), np.asarray(y64),
+                               atol=3e-2)
+    np.testing.assert_allclose(np.asarray(h16), np.asarray(h64), atol=1e-2)
+
+
+def test_ssd_matches_sequential_recurrence():
+    """Chunked SSD == naive per-step recurrence (the definition)."""
+    B, S, H, P, N, Q = 1, 32, 2, 8, 4, 8
+    xs = np.asarray(rng.standard_normal((B, S, H, P)) * 0.5, np.float32)
+    Bm = np.asarray(rng.standard_normal((B, S, N)) * 0.5, np.float32)
+    Cm = np.asarray(rng.standard_normal((B, S, N)) * 0.5, np.float32)
+    dt = np.asarray(rng.uniform(0.05, 0.3, (B, S, H)), np.float32)
+    A_log = np.asarray(rng.uniform(-0.5, 0.5, (H,)), np.float32)
+
+    h = np.zeros((B, H, P, N), np.float64)
+    y_seq = np.zeros((B, S, H, P), np.float64)
+    A = -np.exp(A_log)
+    for t in range(S):
+        a_t = np.exp(A[None] * dt[:, t])                     # [B,H]
+        upd = np.einsum("bn,bh,bhp->bhpn", Bm[:, t], dt[:, t], xs[:, t])
+        h = a_t[..., None, None] * h + upd
+        y_seq[:, t] = np.einsum("bn,bhpn->bhp", Cm[:, t], h)
+
+    y_c, h_c = ssd_chunked_ref(jnp.asarray(xs), jnp.asarray(Bm),
+                               jnp.asarray(Cm), jnp.asarray(dt),
+                               jnp.asarray(A_log), Q)
+    np.testing.assert_allclose(np.asarray(y_c), y_seq, atol=3e-2)
+    np.testing.assert_allclose(np.asarray(h_c), h, atol=1e-2)

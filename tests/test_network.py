@@ -1,0 +1,127 @@
+"""Network-model unit + property tests (flow rates, delays, APSP)."""
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import SimConfig
+from repro.core.datacenter import build_paper_network
+from repro.core.network import (SpineLeafSpec, adjacency_from_links,
+                                build_network, congested_link_delay,
+                                floyd_warshall_ref, flow_rates,
+                                max_min_fair_rates, path_membership,
+                                set_link_params, update_delay_matrix)
+
+
+def net20():
+    return build_paper_network(SimConfig())
+
+
+def test_topology_shapes():
+    spec, net = net20()
+    assert net.path_links.shape == (20, 20, 4)
+    # same-leaf pairs use 2 links, cross-leaf 4
+    pn = np.asarray(net.path_nlinks)
+    assert pn[0, 4] == 2      # hosts 0 and 4 share leaf 0 (i % 4)
+    assert pn[0, 1] == 4
+    assert (np.diag(pn) == 0).all()
+
+
+def test_delay_matrix_symmetric_nonneg():
+    spec, net = net20()
+    D = np.asarray(net.delay_matrix)
+    assert (D >= 0).all()
+    np.testing.assert_allclose(D, D.T, atol=1e-5)
+    assert (np.diag(D) == 0).all()
+
+
+def test_fw_equals_path_delay_uncongested():
+    """With no congestion the ECMP path delay equals true shortest paths
+    (all links equal) — 'path' and 'fw' modes agree."""
+    spec, net = net20()
+    d_path = update_delay_matrix(net, spec.n_hosts, spec.n_nodes,
+                                 mode="path").delay_matrix
+    d_fw = update_delay_matrix(net, spec.n_hosts, spec.n_nodes,
+                               mode="fw").delay_matrix
+    np.testing.assert_allclose(np.asarray(d_path), np.asarray(d_fw),
+                               rtol=1e-5)
+
+
+def test_congestion_increases_delay():
+    spec, net = net20()
+    base = congested_link_delay(net)
+    loaded = congested_link_delay(
+        net._replace(link_util=jnp.full_like(net.link_util, 0.9)))
+    assert (np.asarray(loaded) > np.asarray(base)).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), n_flows=st.integers(1, 12))
+def test_flow_rates_respect_capacity(seed, n_flows):
+    """Max-min allocation never oversubscribes any link."""
+    spec, net = net20()
+    rng = np.random.default_rng(seed)
+    src = jnp.asarray(rng.integers(0, 20, n_flows), jnp.int32)
+    dst = jnp.asarray(rng.integers(0, 20, n_flows), jnp.int32)
+    active = jnp.ones((n_flows,), bool)
+    rates, util = flow_rates(net, src, dst, active)
+    member = path_membership(net.path_links, src, dst, net.link_bw.shape[0])
+    bw_kbps = np.asarray(net.link_bw) * 125.0
+    load = (np.asarray(member) * np.asarray(rates)[:, None]).sum(0)
+    assert (load <= bw_kbps * 1.02 + 1e-3).all()
+    assert (np.asarray(rates) >= 0).all()
+    assert (np.asarray(util) <= 1.0 + 1e-6).all()
+
+
+def test_single_flow_gets_full_bandwidth():
+    spec, net = net20()
+    src = jnp.asarray([0], jnp.int32)
+    dst = jnp.asarray([1], jnp.int32)
+    rates, _ = flow_rates(net, src, dst, jnp.ones((1,), bool))
+    assert abs(float(rates[0]) - 1000.0 * 125.0) < 1.0   # 1 Gbps in KB/s
+
+
+def test_fair_share_splits_bottleneck():
+    spec, net = net20()
+    # two flows from the same source host share its uplink
+    src = jnp.asarray([0, 0], jnp.int32)
+    dst = jnp.asarray([1, 2], jnp.int32)
+    rates, _ = flow_rates(net, src, dst, jnp.ones((2,), bool))
+    r = np.asarray(rates)
+    np.testing.assert_allclose(r[0], r[1], rtol=0.05)
+    assert abs(r.sum() - 125000.0) < 125000 * 0.05
+
+
+def test_loss_throttles_tcp():
+    """Mathis bound: a lossy path caps well below the fair share."""
+    spec, net = net20()
+    lossy = set_link_params(net, loss=0.02)
+    src = jnp.asarray([0], jnp.int32)
+    dst = jnp.asarray([1], jnp.int32)
+    r0, _ = flow_rates(net, src, dst, jnp.ones((1,), bool))
+    r1, _ = flow_rates(lossy, src, dst, jnp.ones((1,), bool))
+    assert float(r1[0]) < float(r0[0]) * 0.5
+
+
+def test_same_host_flow_is_local():
+    spec, net = net20()
+    src = jnp.asarray([3], jnp.int32)
+    dst = jnp.asarray([3], jnp.int32)
+    rates, util = flow_rates(net, src, dst, jnp.ones((1,), bool))
+    assert float(rates[0]) >= 1e6            # loopback rate
+    assert float(np.asarray(util).max()) == 0.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), n=st.sampled_from([6, 10, 17]))
+def test_fw_ref_properties(seed, n):
+    """APSP output: triangle inequality + idempotence."""
+    rng = np.random.default_rng(seed)
+    A = rng.uniform(0.1, 5.0, (n, n)).astype(np.float32)
+    A = np.minimum(A, A.T)
+    np.fill_diagonal(A, 0)
+    D = np.asarray(floyd_warshall_ref(jnp.asarray(A)))
+    D2 = np.asarray(floyd_warshall_ref(jnp.asarray(D)))
+    np.testing.assert_allclose(D, D2, rtol=1e-5)     # idempotent
+    viol = D[:, :, None] > D[:, None, :] + D[None, :, :] + 1e-4
+    assert not viol.any()

@@ -1,0 +1,99 @@
+"""Sharding-spec correctness without building 256-device meshes:
+every spec must divide its dimension on the PRODUCTION mesh shapes.
+(The actual lower+compile proof is the dry-run; this is the fast guard.)"""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import sharding as shd
+from repro.models import transformer
+from repro.models.config import SHAPES, cell_is_runnable
+from repro.train.step import init_train_state
+
+
+class FakeMesh:
+    """Stand-in with the production mesh shape (no devices needed)."""
+
+    def __init__(self, multi_pod=False):
+        self.shape = ({"pod": 2, "data": 16, "model": 16} if multi_pod
+                      else {"data": 16, "model": 16})
+        self.axis_names = tuple(self.shape)
+        self.size = int(np.prod(list(self.shape.values())))
+
+
+def axis_size(mesh, ax):
+    if isinstance(ax, tuple):
+        return int(np.prod([axis_size(mesh, a) for a in ax]))
+    return mesh.shape[ax]
+
+
+def check_divisible(shapes, specs, mesh, where=""):
+    flat_s = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    flat_p = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_s) == len(flat_p)
+    for (path, leaf), spec in zip(flat_s, flat_p):
+        for dim, ax in zip(leaf.shape, tuple(spec)):
+            if ax is not None:
+                n = axis_size(mesh, ax)
+                assert dim % n == 0, (
+                    f"{where}{jax.tree_util.keystr(path)}: dim {dim} "
+                    f"not divisible by {ax}={n} (shape {leaf.shape})")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("multi_pod", [False, True])
+def test_param_specs_divide_production_mesh(arch, multi_pod):
+    cfg = get_config(arch)
+    mesh = FakeMesh(multi_pod)
+    shapes = jax.eval_shape(
+        lambda: transformer.init_params(cfg, jax.random.PRNGKey(0)))
+    specs = shd.param_specs(cfg, shapes, mesh)
+    check_divisible(shapes, specs, mesh, where=f"{arch}.")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_cache_specs_divide_production_mesh(arch):
+    cfg = get_config(arch)
+    mesh = FakeMesh(False)
+    for shape in SHAPES.values():
+        if shape.kind != "decode" or not cell_is_runnable(cfg, shape)[0]:
+            continue
+        cache = jax.eval_shape(lambda: transformer.init_cache(
+            cfg, shape.global_batch, shape.seq_len))
+        specs = shd.cache_specs(cfg, cache, mesh, shape.global_batch)
+        check_divisible(cache, specs, mesh, where=f"{arch}.{shape.name}.")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_batch_specs_divide(arch):
+    cfg = get_config(arch)
+    for multi_pod in (False, True):
+        mesh = FakeMesh(multi_pod)
+        for shape in SHAPES.values():
+            if not cell_is_runnable(cfg, shape)[0]:
+                continue
+            specs = shd.batch_specs(cfg, shape, mesh)
+            for name, spec in specs.items():
+                bax = tuple(spec)[0]
+                if bax is not None:
+                    assert shape.global_batch % axis_size(mesh, bax) == 0
+
+
+def test_vocab_padding_divides_model_axis():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        assert cfg.vocab_padded % 16 == 0, arch
+        assert cfg.vocab_padded >= cfg.vocab
+
+
+def test_embed_sharded_over_both_axes():
+    """FSDP storage rule: the big tables shard over data AND model."""
+    cfg = get_config("phi4_mini_3_8b")
+    mesh = FakeMesh(False)
+    shapes = jax.eval_shape(
+        lambda: transformer.init_params(cfg, jax.random.PRNGKey(0)))
+    specs = shd.param_specs(cfg, shapes, mesh)
+    assert tuple(specs["embed"]) == ("model", "data")
+    assert tuple(specs["unembed"]) == ("data", "model")

@@ -1,0 +1,104 @@
+"""End-to-end behaviour of the DCSim simulator against the paper's claims
+(Figs 4-8; see EXPERIMENTS.md §Paper-validation for the full sweeps)."""
+import numpy as np
+import pytest
+
+from repro.core import (SimConfig, build_paper_hosts, build_paper_network,
+                        get_policy, init_sim, paper_workload, run_sim,
+                        summarize)
+from repro.core.network import set_link_params
+
+POLICIES = ["firstfit", "round", "performance_first", "jobgroup",
+            "overload_migrate"]
+
+
+def run_policy(name, cfg=None, bw=None, loss=None, seed=0):
+    cfg = cfg or SimConfig()
+    hosts = build_paper_hosts()
+    spec, net = build_paper_network(cfg)
+    if bw is not None or loss is not None:
+        net = set_link_params(net, bw=bw, loss=loss)
+    sim0 = init_sim(hosts, paper_workload(cfg, seed=seed), net, seed=seed)
+    final, metrics = run_sim(sim0, cfg, get_policy(name), spec.n_hosts,
+                             spec.n_nodes, cfg.horizon)
+    return summarize(final, metrics), metrics
+
+
+@pytest.fixture(scope="module")
+def reports():
+    return {name: run_policy(name) for name in POLICIES}
+
+
+@pytest.mark.parametrize("name", POLICIES)
+def test_all_containers_complete(reports, name):
+    rep, _ = reports[name]
+    assert rep["n_containers"] == 300
+    assert rep["completion_rate"] == 1.0, rep
+
+
+def test_running_queue_saturates_near_120(reports):
+    """Paper Fig 4: 'the running queue stabilized after reaching 120'."""
+    peaks = [reports[n][0]["peak_deployed"] for n in POLICIES]
+    assert max(peaks) > 100, peaks
+    assert max(peaks) < 150, peaks
+
+
+def test_round_no_overload_early(reports):
+    """Paper Fig 4a: Round has zero overloaded hosts during 0-8 s."""
+    _, m = reports["round"]
+    assert np.asarray(m.n_overloaded)[:8].max() == 0
+
+
+def test_firstfit_overloads_before_round(reports):
+    _, m_ff = reports["firstfit"]
+    _, m_rd = reports["round"]
+    ff = np.asarray(m_ff.n_overloaded)
+    rd = np.asarray(m_rd.n_overloaded)
+    first = lambda a: int(np.argmax(a > 0)) if (a > 0).any() else 10**9
+    assert first(ff) <= first(rd)
+
+
+def test_jobgroup_lowest_comm_time(reports):
+    """Paper Fig 5: JobGroup lowest avg comm time; Round worst."""
+    comm = {n: reports[n][0]["avg_comm_time"] for n in POLICIES}
+    assert comm["jobgroup"] == min(comm.values()), comm
+    assert comm["round"] >= comm["jobgroup"], comm
+
+
+def test_overload_migrate_migrates(reports):
+    rep, _ = reports["overload_migrate"]
+    assert rep["total_migrations"] > 0
+
+
+def test_decisions_stop_when_done(reports):
+    """Paper Fig 6: scheduling decisions fall to ~zero once arrivals stop
+    and capacity catches up."""
+    _, m = reports["firstfit"]
+    dec = np.asarray(m.decisions)
+    assert dec.sum() >= 300                      # every container placed
+    assert dec[:60].sum() >= 280                 # bulk placed early
+    assert dec[-20:].sum() == 0                  # quiet at the end
+
+
+def test_degraded_network_slows_comm():
+    """Paper Figs 5/8: lower bandwidth / higher loss => higher comm time."""
+    good, _ = run_policy("firstfit", bw=1000.0, loss=0.0)
+    bad, _ = run_policy("firstfit", bw=200.0, loss=0.02)
+    assert bad["avg_comm_time"] > good["avg_comm_time"]
+    assert bad["avg_runtime"] > good["avg_runtime"]
+
+
+def test_stretched_workload_empties_waiting_queue():
+    """Paper Fig 9: arrivals over 100 s instead of 36 s => waiting ~ 0."""
+    cfg = SimConfig(arrival_window=100.0, horizon=160)
+    rep, m = run_policy("round", cfg=cfg)
+    assert rep["completion_rate"] == 1.0
+    waiting = np.asarray(m.n_inactive)
+    # after warmup the backlog stays tiny compared to the packed workload
+    assert waiting[20:].max() <= 30
+
+
+def test_seed_determinism():
+    a, _ = run_policy("jobgroup", seed=3)
+    b, _ = run_policy("jobgroup", seed=3)
+    assert a == b

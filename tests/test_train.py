@@ -1,0 +1,137 @@
+"""Training substrate: optimizer math, chunked CE, microbatching, roofline
+accounting units."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.launch import roofline
+from repro.models.config import SHAPES
+from repro.train.loss import chunked_cross_entropy
+from repro.train.optimizer import (OptimizerConfig, adamw_update,
+                                   clip_by_global_norm, init_opt_state,
+                                   lr_schedule)
+from repro.train.step import StepConfig, init_train_state, make_train_step
+
+
+def test_chunked_ce_matches_direct():
+    rng = np.random.default_rng(0)
+    B, S, d, V = 2, 48, 16, 50
+    Vp = 64
+    hidden = jnp.asarray(rng.standard_normal((B, S, d)), jnp.float32)
+    unembed = jnp.asarray(rng.standard_normal((d, Vp)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, V, (B, S)), jnp.int32)
+    labels = labels.at[0, :5].set(-1)          # masked positions
+
+    nll_c, n_c = chunked_cross_entropy(hidden, unembed, labels, V, chunk=16)
+    nll_u, n_u = chunked_cross_entropy(hidden, unembed, labels, V, chunk=16,
+                                       unroll=True)
+    # direct reference
+    logits = hidden @ unembed
+    logits = jnp.where(jnp.arange(Vp) < V, logits, -1e30)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, jnp.clip(labels, 0)[..., None],
+                             axis=-1)[..., 0]
+    valid = labels >= 0
+    nll_ref = float(((lse - ll) * valid).sum())
+
+    assert abs(float(nll_c) - nll_ref) < 0.35          # bf16 logits tolerance
+    assert abs(float(nll_c) - float(nll_u)) < 1e-3
+    assert float(n_c) == float(n_u) == float(valid.sum())
+
+
+def test_chunk_size_invariance():
+    rng = np.random.default_rng(1)
+    hidden = jnp.asarray(rng.standard_normal((1, 64, 8)), jnp.float32)
+    unembed = jnp.asarray(rng.standard_normal((8, 32)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, 32, (1, 64)), jnp.int32)
+    outs = [float(chunked_cross_entropy(hidden, unembed, labels, 32,
+                                        chunk=c)[0]) for c in (8, 16, 64)]
+    np.testing.assert_allclose(outs, outs[0], rtol=1e-3)
+
+
+def test_lr_schedule_shape():
+    cfg = OptimizerConfig(lr=1e-3, warmup_steps=10, total_steps=100,
+                          min_lr_ratio=0.1)
+    lrs = [float(lr_schedule(cfg, jnp.asarray(s))) for s in range(100)]
+    assert lrs[0] < lrs[9] <= 1e-3 + 1e-9           # warmup rises
+    assert abs(lrs[10] - 1e-3) < 1e-4               # peak after warmup
+    assert lrs[-1] < lrs[50] < lrs[11]              # cosine decays
+    assert lrs[-1] >= 1e-4 - 1e-6                   # floor at min_lr
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 3.0), "b": jnp.full((4,), 4.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(norm) - 10.0) < 1e-5
+    total = sum(float(jnp.sum(x ** 2)) for x in jax.tree.leaves(clipped))
+    assert abs(total - 1.0) < 1e-4
+
+
+def test_adamw_decoupled_decay():
+    """Zero grads + weight decay must still shrink params (AdamW not Adam)."""
+    cfg = OptimizerConfig(lr=0.1, weight_decay=0.5, warmup_steps=0,
+                          clip_norm=1e9)
+    p = {"w": jnp.ones((3,))}
+    state = init_opt_state(p)
+    g = {"w": jnp.zeros((3,))}
+    p2, state, _ = adamw_update(cfg, p, g, state)
+    assert float(p2["w"][0]) < 1.0
+
+
+def test_microbatch_equivalence():
+    """n_microbatches=2 must equal 1 up to numerical tolerance."""
+    cfg = get_reduced("smollm_360m")
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (4, 32)),
+                                   jnp.int32),
+             "labels": jnp.asarray(rng.integers(0, cfg.vocab, (4, 32)),
+                                   jnp.int32)}
+    out = {}
+    for n in (1, 2):
+        state = init_train_state(cfg, jax.random.PRNGKey(0))
+        step = jax.jit(make_train_step(cfg, OptimizerConfig(),
+                                       StepConfig(n_microbatches=n)))
+        state, metrics = step(state, batch)
+        out[n] = (float(metrics["loss"]),
+                  np.asarray(jax.tree.leaves(state.params)[0]))
+    assert abs(out[1][0] - out[2][0]) < 5e-3
+    np.testing.assert_allclose(out[1][1], out[2][1], atol=5e-3)
+
+
+# --- roofline accounting -----------------------------------------------------
+def test_collective_bytes_parser():
+    hlo = """
+  %ag = bf16[8,128]{1,0} all-gather(%x), replica_groups=[16,16]<=[256], dimensions={0}
+  %ar = f32[4,4]{1,0} all-reduce(%y), replica_groups={{0,1,2,3}}, to_apply=%add
+  %cp = f32[2,2]{1,0} collective-permute(%z), source_target_pairs={{0,1}}
+"""
+    out = roofline.collective_bytes(hlo)
+    # all-gather: result 8*128*2 = 2048 B over 16 -> (15/16)*2048
+    assert abs(out["all-gather"] - 2048 * 15 / 16) < 1e-6
+    # all-reduce: 4*4*4 = 64 B over 4 -> 2*(3/4)*64
+    assert abs(out["all-reduce"] - 2 * 0.75 * 64) < 1e-6
+    assert out["collective-permute"] == 16.0
+    assert out["total"] == sum(v for k, v in out.items() if k != "total")
+
+
+def test_probe_extrapolation():
+    c1 = {"flops": 10.0, "hbm_bytes": 100.0, "coll_bytes": 4.0,
+          "coll_breakdown": {"all-reduce": 4.0, "total": 4.0}}
+    c2 = {"flops": 16.0, "hbm_bytes": 140.0, "coll_bytes": 6.0,
+          "coll_breakdown": {"all-reduce": 6.0, "total": 6.0}}
+    t = roofline.from_probes(c1, c2, 2, 4, 10, 256, model_flops=0.0)
+    assert abs(t.flops - (10 + 3.0 * 8)) < 1e-6          # slope 3/layer
+    assert abs(t.hbm_bytes - (100 + 20 * 8)) < 1e-6
+    assert abs(t.coll_bytes - (4 + 1.0 * 8)) < 1e-6
+
+
+def test_model_flops_kinds():
+    cfg = get_reduced("smollm_360m")
+    tr = roofline.model_flops_for(cfg, SHAPES["train_4k"])
+    pf = roofline.model_flops_for(cfg, SHAPES["prefill_32k"])
+    dc = roofline.model_flops_for(cfg, SHAPES["decode_32k"])
+    assert tr == 6.0 * cfg.active_param_count() * 4096 * 256
+    assert pf == 2.0 * cfg.active_param_count() * 32768 * 32
+    assert dc == 2.0 * cfg.active_param_count() * 128
