@@ -14,6 +14,61 @@ from repro.core.network import SpineLeafSpec, build_network, set_link_params
 POLICIES = ["firstfit", "round", "performance_first", "jobgroup"]
 
 
+def measure_scale_point(n_hosts: int, n_containers: int, horizon: int = 120,
+                        policy: str = "firstfit", seed: int = 0,
+                        sparse: bool = True, batched: bool = True) -> dict:
+    """Build one scale point, run it twice (compile + steady) and time it.
+
+    Shared by fig11_scalability and engine_bench so the timing protocol and
+    result schema stay in sync.
+    """
+    import jax
+
+    from repro.core.types import STATUS_COMPLETED
+
+    cfg = SimConfig(n_jobs=max(10, n_containers // 3),
+                    n_tasks=n_containers, n_containers=n_containers,
+                    horizon=horizon, sparse_flows=sparse,
+                    batched_placement=batched)
+    t0 = time.time()
+    n_leaf = max(4, n_hosts // 5)
+    hosts = scaled_hosts(n_hosts, n_leaf)
+    spec = SpineLeafSpec(n_spine=max(2, n_leaf // 4), n_leaf=n_leaf,
+                         n_hosts=n_hosts)
+    net = build_network(spec)
+    sim0 = init_sim(hosts, paper_workload(cfg, seed=seed), net, seed=seed)
+    t_init = time.time() - t0
+
+    def once():
+        final, _ = run_sim(sim0, cfg, get_policy(policy), spec.n_hosts,
+                           spec.n_nodes, horizon)
+        final.t.block_until_ready()
+        return final
+
+    t0 = time.time()
+    final = once()
+    t_first = time.time() - t0               # includes XLA compile
+    t0 = time.time()
+    final = once()
+    t_steady = time.time() - t0
+    state_mb = sum(x.nbytes for x in jax.tree.leaves(sim0)) / 2**20
+    return {
+        "n_hosts": n_hosts,
+        "n_network_nodes": spec.n_nodes,
+        "n_containers": n_containers,
+        "mode": "sparse" if sparse else "dense",
+        "batched_placement": batched,
+        "horizon": horizon,
+        "init_s": round(t_init, 3),
+        "sim_first_s": round(t_first, 2),
+        "sim_steady_s": round(t_steady, 4),
+        "ticks_per_s": round(horizon / max(t_steady, 1e-9), 1),
+        "state_mb": round(state_mb, 1),
+        "completed": int((np.asarray(final.containers.status)
+                          == STATUS_COMPLETED).sum()),
+    }
+
+
 def run_policy(name: str, cfg: SimConfig | None = None, bw=None, loss=None,
                seed: int = 0, n_hosts: int = 20):
     cfg = cfg or SimConfig()

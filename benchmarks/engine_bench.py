@@ -1,0 +1,89 @@
+"""Tracked engine benchmark -> BENCH_engine.json (ISSUE 1 acceptance).
+
+Measures steady-state ``ticks_per_s`` and ``state_mb`` per scale point so
+the perf trajectory is tracked across PRs.  At the 500-host/3000-container
+point BOTH flow engines run in the same process, giving an apples-to-apples
+``sparse_speedup`` of the segment-based flow path over the dense [F, E]
+oracle; the 2000-host point runs sparse-only (the dense membership tensor
+at that scale is the OOM ceiling this PR removes).
+
+    PYTHONPATH=src python -m benchmarks.engine_bench [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from benchmarks.common import measure_scale_point
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_engine.json")
+# --quick runs must not clobber the tracked full-ladder artifact
+BENCH_QUICK_PATH = os.path.join(os.path.dirname(__file__), "..",
+                                "experiments", "BENCH_engine_quick.json")
+
+
+def bench_engine(quick: bool = False):
+    """Rows + claims for benchmarks.run; writes BENCH_engine.json."""
+    points = []
+    # small tracking points (cheap, both engines)
+    for sparse in (True, False):
+        points.append(measure_scale_point(100, 1500, horizon=40,
+                                          sparse=sparse))
+    # the headline comparison: 500 hosts / 3000 containers, same run
+    if not quick:
+        for sparse in (True, False):
+            points.append(measure_scale_point(500, 3000, horizon=40,
+                                              sparse=sparse))
+        # beyond the dense ceiling: sparse-only 2000-host point
+        points.append(measure_scale_point(2000, 6000, horizon=20,
+                                          sparse=True))
+
+    def tps(h, c, mode):
+        for p in points:
+            if (p["n_hosts"], p["n_containers"], p["mode"]) == (h, c, mode):
+                return p["ticks_per_s"]
+        return None
+
+    cmp_h, cmp_c = (100, 1500) if quick else (500, 3000)
+    sp, de = tps(cmp_h, cmp_c, "sparse"), tps(cmp_h, cmp_c, "dense")
+    speedup = round(sp / de, 2) if sp and de else None
+    out = {
+        "bench": "engine_tick_throughput",
+        "points": points,
+        "comparison_point": {"n_hosts": cmp_h, "n_containers": cmp_c},
+        "sparse_speedup": speedup,
+    }
+    path = BENCH_QUICK_PATH if quick else BENCH_PATH
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    claims = [
+        (f"sparse vs dense ticks_per_s @ {cmp_h}h/{cmp_c}c",
+         f"{sp} vs {de} ({speedup}x)"),
+        ("json", os.path.abspath(path)),
+    ]
+    if not quick:
+        p2000 = [p for p in points if p["n_hosts"] == 2000]
+        if p2000:
+            claims.append(("2000-host point (dense cannot run)",
+                           f"{p2000[0]['ticks_per_s']} ticks/s, "
+                           f"{p2000[0]['state_mb']} MB state"))
+    return points, claims
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="only the 100-host tracking points")
+    args = ap.parse_args()
+    rows, claims = bench_engine(quick=args.quick)
+    for r in rows:
+        print(r)
+    for c in claims:
+        print(f"# {c[0]}: {c[1]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,58 +13,27 @@ import time
 import jax
 import numpy as np
 
-from repro.core import SimConfig, get_policy, init_sim, run_sim
-from repro.core.datacenter import scaled_hosts
-from repro.core.network import SpineLeafSpec, build_network
+from benchmarks.common import measure_scale_point
+from repro.core import SimConfig, init_sim, get_policy
 from repro.core.workload import paper_workload
 from repro.core.engine import run_sim_vmapped
 
 
 def one_scale(n_hosts: int, n_containers: int, horizon: int = 120,
-              policy: str = "firstfit", seed: int = 0):
-    cfg = SimConfig(n_jobs=max(10, n_containers // 3),
-                    n_tasks=n_containers, n_containers=n_containers,
-                    horizon=horizon)
-    t0 = time.time()
-    n_leaf = max(4, n_hosts // 5)
-    hosts = scaled_hosts(n_hosts, n_leaf)
-    spec = SpineLeafSpec(n_spine=max(2, n_leaf // 4), n_leaf=n_leaf,
-                         n_hosts=n_hosts)
-    net = build_network(spec)
-    t_init = time.time() - t0
-
-    conts = paper_workload(cfg, seed=seed)
-    sim0 = init_sim(hosts, conts, net, seed=seed)
-    t0 = time.time()
-    final, metrics = run_sim(sim0, cfg, get_policy(policy), spec.n_hosts,
-                             spec.n_nodes, horizon)
-    final.t.block_until_ready()
-    t_first = time.time() - t0           # includes XLA compile
-    t0 = time.time()
-    final, metrics = run_sim(sim0, cfg, get_policy(policy), spec.n_hosts,
-                             spec.n_nodes, horizon)
-    final.t.block_until_ready()
-    t_steady = time.time() - t0
-    state_mb = sum(x.nbytes for x in jax.tree.leaves(sim0)) / 2**20
-    return {
-        "n_hosts": n_hosts,
-        "n_network_nodes": n_hosts + spec.n_leaf + spec.n_spine,
-        "n_containers": n_containers,
-        "init_s": round(t_init, 3),
-        "sim_first_s": round(t_first, 2),
-        "sim_steady_s": round(t_steady, 3),
-        "ticks_per_s": round(horizon / max(t_steady, 1e-9), 0),
-        "state_mb": round(state_mb, 1),
-        "completed": int((np.asarray(final.containers.status) == 5).sum()),
-    }
+              policy: str = "firstfit", seed: int = 0, sparse: bool = True):
+    return measure_scale_point(n_hosts, n_containers, horizon=horizon,
+                               policy=policy, seed=seed, sparse=sparse)
 
 
 def fig11_scalability():
     # paper Table 7 sweep (hosts 20..100, containers 300..1500)
     rows = [one_scale(h, c) for h, c in
             [(20, 300), (40, 600), (60, 900), (80, 1200), (100, 1500)]]
-    # beyond-paper: scales Mininet cannot reach on one box
+    # beyond-paper: scales Mininet cannot reach on one box (sparse flow
+    # engine; the 2000-host point is beyond the dense [F, E] path too —
+    # see benchmarks/engine_bench.py for the tracked sparse-vs-dense run)
     rows.append(one_scale(500, 3000, horizon=60))
+    rows.append(one_scale(2000, 6000, horizon=20))
 
     paper_init_1000_nodes_s = 0.8 * 1000
     ours = [r for r in rows if r["n_hosts"] == 100][0]

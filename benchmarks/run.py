@@ -19,11 +19,13 @@ def main() -> None:
 
     from benchmarks import paper_figs
     from benchmarks.bridge_scheduling import bridge_scheduling
+    from benchmarks.engine_bench import bench_engine
     from benchmarks.fig11_scalability import (fig11_scalability,
                                               scenario_vmap_throughput)
     from benchmarks.roofline_table import run_table
 
     benches = {
+        "engine_bench": bench_engine,
         "fig4_datacenter": paper_figs.fig4_datacenter,
         "fig5_network": paper_figs.fig5_network,
         "fig6_scheduling": paper_figs.fig6_scheduling,

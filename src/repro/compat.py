@@ -1,0 +1,17 @@
+"""Version-skew shims for jax APIs that moved/renamed across releases.
+
+Keep all cross-version logic here so the next rename is a one-file fix.
+"""
+from __future__ import annotations
+
+import inspect
+
+try:  # jax >= 0.4.35 re-export
+    from jax import shard_map  # type: ignore  # noqa: F401
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map  # type: ignore  # noqa: F401
+
+# the "don't check replication" kwarg was renamed check_rep -> check_vma
+SM_NOCHECK = ({"check_vma": False}
+              if "check_vma" in inspect.signature(shard_map).parameters
+              else {"check_rep": False})

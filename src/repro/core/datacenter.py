@@ -62,6 +62,8 @@ class SimConfig:
     waterfill_rounds: int = 8
     delay_mode: str = "path"          # 'path' | 'fw'
     fw_use_kernel: bool = False
+    sparse_flows: bool = True         # segment-based flow engine (docs/perf.md)
+    batched_placement: bool = True    # conflict-resolved top-K placement round
     stall_rate_floor: float = 50.0    # KB/s under which a flow is 'stalled'
     mig_kb_per_gb: float = 1024.0     # migration bytes per GB of memory req
     queue_coef: float = 0.5

@@ -26,7 +26,7 @@ import jax.numpy as jnp
 
 from repro.core import network, stats
 from repro.core.datacenter import SimConfig
-from repro.core.scheduling import Policy
+from repro.core.scheduling import BIG as BIG_KEY, Policy
 from repro.core.types import (
     STATUS_COMMUNICATING, STATUS_COMPLETED, STATUS_INACTIVE, STATUS_MIGRATING,
     STATUS_RUNNING, STATUS_UNBORN, STATUS_WAITING, ContainerState, HostState,
@@ -107,15 +107,8 @@ def phase_arrive(sim: SimState) -> Tuple[SimState, jnp.ndarray]:
     return sim._replace(containers=ct._replace(status=status)), arriving.sum()
 
 
-def phase_schedule(sim: SimState, cfg: SimConfig, policy: Policy) -> SimState:
-    """Paper ``schedule`` process: place up to ``placements_per_tick``
-    containers, then start up to ``migrations_per_tick`` migrations.
-
-    The inner ``scan`` preserves the paper semantics that decisions within a
-    round see each other's resource consumption.
-    """
-    sim = sim._replace(sched=sim.sched._replace(
-        decisions=jnp.zeros((), I32), migrations=jnp.zeros((), I32)))
+def _place_sequential(sim: SimState, cfg: SimConfig, policy: Policy) -> SimState:
+    """Reference placement loop: one full select+place per scan step."""
 
     def place_body(s: SimState, _):
         c = policy.select(s)
@@ -131,6 +124,90 @@ def phase_schedule(sim: SimState, cfg: SimConfig, policy: Policy) -> SimState:
 
     sim, _ = jax.lax.scan(place_body, sim, None,
                           length=cfg.placements_per_tick)
+    return sim
+
+
+def _place_batched(sim: SimState, cfg: SimConfig, policy: Policy) -> SimState:
+    """Batched conflict-resolved placement round.
+
+    Instead of ``placements_per_tick`` full select+place passes (each one
+    O(C + H) work serialized by the scan), rank all schedulable containers
+    once by the policy's selection key, take the top-K candidates
+    (K = placements_per_tick << C), compute the policy's [K, H] placement
+    score once, and admit the candidates with a short K-length scan that
+    only carries host ``used`` / slot counters — so later decisions still
+    observe earlier ones' resource consumption (the paper's intra-round
+    semantics).  Container-state updates are applied in one vectorized
+    scatter afterwards (top-k candidate indices are distinct).
+
+    One deliberate semantic upgrade over the sequential reference: a
+    candidate with no feasible host no longer blocks the rest of the round
+    (the sequential argmin re-selected the same stuck head every step).
+    """
+    C = sim.containers.status.shape[0]
+    H = sim.hosts.cap.shape[0]
+    K = min(cfg.placements_per_tick, C)
+
+    key = policy.select_key(sim)                          # f32[C], BIG = skip
+    neg_vals, cand = jax.lax.top_k(-key, K)               # K smallest keys
+    valid = -neg_vals < BIG_KEY                           # bool[K]
+    req_k = sim.containers.req[cand]                      # [K, 3]
+    score = policy.place_key(sim, cand, cfg)              # f32[K, H]
+    dyn = policy.place_key_dynamic
+
+    def admit(carry, k):
+        used, ncont, rr = carry
+        fits = ((used + req_k[k][None, :]) <= sim.hosts.cap).all(axis=1)
+        slots = ncont < cfg.max_containers_per_host
+        feas = fits & slots & valid[k]
+        row = score[k] if dyn is None else dyn(sim, rr)
+        h = jnp.where(feas.any(),
+                      jnp.argmin(jnp.where(feas, row, BIG_KEY)), -1)
+        ok = h >= 0
+        hh = jnp.clip(h, 0, H - 1)
+        used = used.at[hh].add(req_k[k] * ok.astype(F32))
+        ncont = ncont.at[hh].add(ok.astype(I32))
+        if dyn is not None:
+            rr = jnp.where(ok, hh, rr)
+        return (used, ncont, rr), h
+
+    init = (sim.hosts.used, sim.hosts.n_containers, sim.sched.rr_pointer)
+    (used, ncont, rr), chosen = jax.lax.scan(admit, init, jnp.arange(K))
+
+    ok = chosen >= 0
+    hh = jnp.clip(chosen, 0, H - 1)
+    ct = sim.containers
+    first = ct.start_t[cand] < 0
+    conts = ct._replace(
+        status=ct.status.at[cand].set(
+            jnp.where(ok, STATUS_RUNNING, ct.status[cand])),
+        host=ct.host.at[cand].set(jnp.where(ok, hh, ct.host[cand])),
+        start_t=ct.start_t.at[cand].set(
+            jnp.where(ok & first, sim.t, ct.start_t[cand])),
+        retry=ct.retry.at[cand].set(jnp.where(ok, 0, ct.retry[cand])),
+    )
+    hosts = sim.hosts._replace(used=used, n_containers=ncont)
+    sched = sim.sched._replace(
+        rr_pointer=rr,
+        decisions=sim.sched.decisions + ok.sum().astype(I32))
+    return sim._replace(hosts=hosts, containers=conts, sched=sched)
+
+
+def phase_schedule(sim: SimState, cfg: SimConfig, policy: Policy) -> SimState:
+    """Paper ``schedule`` process: place up to ``placements_per_tick``
+    containers, then start up to ``migrations_per_tick`` migrations.
+
+    Uses the batched placement round when the policy provides a placement
+    score (``place_key``) and ``cfg.batched_placement`` is on; otherwise
+    falls back to the sequential reference scan.
+    """
+    sim = sim._replace(sched=sim.sched._replace(
+        decisions=jnp.zeros((), I32), migrations=jnp.zeros((), I32)))
+
+    if cfg.batched_placement and policy.place_key is not None:
+        sim = _place_batched(sim, cfg, policy)
+    else:
+        sim = _place_sequential(sim, cfg, policy)
 
     if policy.migrate is None:
         return sim
@@ -170,7 +247,33 @@ def phase_schedule(sim: SimState, cfg: SimConfig, policy: Policy) -> SimState:
 def pick_comm_peers(ct: ContainerState) -> jnp.ndarray:
     """Dependent-container peer: lowest-index *deployed* container of the same
     job.  Falls back to self (same-host => loopback-rate flow) when the
-    container is the only deployed member of its job."""
+    container is the only deployed member of its job.
+
+    Containers are grouped by job id, so the lowest-index deployed member of
+    each job is a ``segment_min`` over job ids — O(C), no C x C candidate
+    matrix.  The second-lowest member covers the case where a container *is*
+    its job's lowest-index member (the dense version excluded self via the
+    identity mask).
+    """
+    C = ct.status.shape[0]
+    deployed = ((ct.status == STATUS_RUNNING) |
+                (ct.status == STATUS_COMMUNICATING) |
+                (ct.status == STATUS_MIGRATING)) & (ct.host >= 0)
+    idx = jnp.arange(C)
+    member = deployed & (ct.job >= 0)
+    seg = jnp.clip(ct.job, 0, C - 1)                     # job ids < C
+    key = jnp.where(member, idx, C)                      # C = "none" sentinel
+    first = jax.ops.segment_min(key, seg, num_segments=C)    # [C] per job
+    is_first = member & (idx == first[seg])
+    key2 = jnp.where(member & ~is_first, idx, C)
+    second = jax.ops.segment_min(key2, seg, num_segments=C)
+    peer = jnp.where(first[seg] == idx, second[seg], first[seg])
+    has = (ct.job >= 0) & (peer < C)
+    return jnp.where(has, peer, idx)
+
+
+def pick_comm_peers_dense(ct: ContainerState) -> jnp.ndarray:
+    """O(C^2) reference implementation of :func:`pick_comm_peers` (oracle)."""
     C = ct.status.shape[0]
     deployed = ((ct.status == STATUS_RUNNING) |
                 (ct.status == STATUS_COMMUNICATING) |
@@ -203,7 +306,8 @@ def phase_flows(sim: SimState, cfg: SimConfig):
     dst = jnp.concatenate([comm_dst, mig_dst])
     active = jnp.concatenate([comm_active, mig_active])
     rates, util = network.flow_rates(sim.net, src, dst, active,
-                                     n_rounds=cfg.waterfill_rounds)
+                                     n_rounds=cfg.waterfill_rounds,
+                                     sparse=cfg.sparse_flows)
     sim = sim._replace(net=sim.net._replace(link_util=util))
     return sim, rates[:C], rates[C:], active, rates
 

@@ -77,33 +77,37 @@ def build_network(spec: SpineLeafSpec) -> NetState:
             link_bw[e] = spec.leaf_spine_bw
 
     # Deterministic ECMP: pair (i, j) hashes onto spine (i + j) % S.
+    # Vectorized over the H^2 pairs so multi-thousand-host fabrics build in
+    # milliseconds (the Python double loop was itself a scalability ceiling).
+    I, J = np.meshgrid(np.arange(H), np.arange(H), indexing="ij")
+    li, lj = host_leaf[I], host_leaf[J]
+    same = (li == lj) & (I != J)
+    cross = li != lj
+    spine = (I + J) % S
     path_links = np.full((H, H, 4), -1, np.int32)
-    path_nlinks = np.zeros((H, H), np.int32)
-    for i in range(H):
-        for j in range(H):
-            if i == j:
-                continue
-            li, lj = host_leaf[i], host_leaf[j]
-            if li == lj:
-                path_links[i, j, :2] = [i, j]
-                path_nlinks[i, j] = 2
-            else:
-                s = (i + j) % S
-                path_links[i, j] = [i, H + li * S + s, H + lj * S + s, j]
-                path_nlinks[i, j] = 4
+    path_links[same, 0] = I[same]
+    path_links[same, 1] = J[same]
+    path_links[cross, 0] = I[cross]
+    path_links[cross, 1] = (H + li * S + spine)[cross]
+    path_links[cross, 2] = (H + lj * S + spine)[cross]
+    path_links[cross, 3] = J[cross]
+    path_nlinks = np.where(same, 2, np.where(cross, 4, 0)).astype(np.int32)
 
     base_delay = np.full(E, spec.link_delay_ms, np.float32)
     loss = np.full(E, spec.loss, np.float32)
     delay0 = path_delay_matrix(
         jnp.asarray(base_delay), jnp.asarray(path_links))
+    pl = jnp.asarray(path_links)
     return NetState(
         link_bw=jnp.asarray(link_bw),
         link_delay=jnp.asarray(base_delay),
         link_loss=jnp.asarray(loss),
         link_u=jnp.asarray(link_u),
         link_v=jnp.asarray(link_v),
-        path_links=jnp.asarray(path_links),
+        path_links=pl,
         path_nlinks=jnp.asarray(path_nlinks),
+        link_bw_kbps=jnp.asarray(link_bw) * MBPS_TO_KBPS,
+        path_loss=path_loss_matrix(jnp.asarray(loss), pl),
         link_util=jnp.zeros((E,), jnp.float32),
         delay_matrix=delay0,
     )
@@ -113,9 +117,14 @@ def set_link_params(net: NetState, bw: float | None = None,
                     loss: float | None = None) -> NetState:
     """Override bandwidth / loss on every link (paper Fig 5/8 sweeps)."""
     if bw is not None:
-        net = net._replace(link_bw=jnp.full_like(net.link_bw, bw))
+        new_bw = jnp.full_like(net.link_bw, bw)
+        net = net._replace(link_bw=new_bw,
+                           link_bw_kbps=new_bw * MBPS_TO_KBPS)
     if loss is not None:
-        net = net._replace(link_loss=jnp.full_like(net.link_loss, loss))
+        new_loss = jnp.full_like(net.link_loss, loss)
+        net = net._replace(
+            link_loss=new_loss,
+            path_loss=path_loss_matrix(new_loss, net.path_links))
     return net
 
 
@@ -135,6 +144,18 @@ def path_delay_matrix(link_delay: jnp.ndarray,
     padded = jnp.concatenate([link_delay, jnp.zeros((1,), link_delay.dtype)])
     d = padded[path_links].sum(axis=-1)          # [-1] pad indexes the 0
     return d
+
+
+def path_loss_matrix(link_loss: jnp.ndarray,
+                     path_links: jnp.ndarray) -> jnp.ndarray:
+    """Host-to-host end-to-end loss 1 - prod(1 - loss_e) along the ECMP path.
+
+    Static per topology, so it is precomputed onto ``NetState.path_loss`` and
+    the per-tick Mathis bound becomes a single [F] gather.
+    """
+    keep = jnp.concatenate([jnp.log1p(-jnp.clip(link_loss, 0.0, 0.99)),
+                            jnp.zeros((1,), link_loss.dtype)])
+    return 1.0 - jnp.exp(keep[path_links].sum(axis=-1))  # [-1] pad hits the 0
 
 
 def adjacency_from_links(net: NetState, link_delay: jnp.ndarray,
@@ -184,6 +205,14 @@ def update_delay_matrix(net: NetState, n_hosts: int, n_nodes: int,
 
 # ---------------------------------------------------------------------------
 # Flow-level rate allocation
+#
+# Two interchangeable engines (docs/perf.md):
+#   sparse (default) — every ECMP path has <= 4 links, so each per-link
+#     reduction is a [F, 4] gather + segment_sum scatter-add: O(F*4 + E)
+#     per waterfilling round.
+#   dense (reference oracle, ``sparse=False``) — materializes the [F, E]
+#     membership matrix the seed engine used: O(F*E) per round.  Kept so
+#     property tests can assert the sparse path is numerically equivalent.
 # ---------------------------------------------------------------------------
 def path_membership(path_links: jnp.ndarray, src: jnp.ndarray,
                     dst: jnp.ndarray, n_links: int) -> jnp.ndarray:
@@ -198,20 +227,23 @@ def max_min_fair_rates(member: jnp.ndarray, active: jnp.ndarray,
     """Progressive-filling max-min fair allocation, fixed rounds, jit-safe.
 
     Each round saturates (at least) the globally most contended link and
-    freezes the flows crossing it at their fair share.
+    freezes the flows crossing it at their fair share.  Dense [F, E]
+    reference implementation.
     """
     F = member.shape[0]
     member_f = member.astype(jnp.float32) * active[:, None]
 
-    def round_body(carry, _):
-        alloc, frozen, cap_rem = carry
-        unfrozen = active & ~frozen
+    def fair_bound(unfrozen, cap_rem):
         live = member_f * unfrozen[:, None].astype(jnp.float32)
         cnt = live.sum(0)                                      # [E]
         share = jnp.where(cnt > 0, cap_rem / jnp.maximum(cnt, 1.0), INF)
         # per-flow bound = min share along its path (INF for no-link flows)
-        bound = jnp.where(member, share[None, :], INF).min(1)  # [F]
-        bound = jnp.where(unfrozen, bound, INF)
+        return jnp.where(member, share[None, :], INF).min(1)   # [F]
+
+    def round_body(carry, _):
+        alloc, frozen, cap_rem = carry
+        unfrozen = active & ~frozen
+        bound = jnp.where(unfrozen, fair_bound(unfrozen, cap_rem), INF)
         m = bound.min()
         newly = unfrozen & (bound <= m * 1.000001 + 1e-6)
         new_alloc = jnp.where(newly, jnp.minimum(bound, LOCAL_RATE_KBPS), alloc)
@@ -220,8 +252,59 @@ def max_min_fair_rates(member: jnp.ndarray, active: jnp.ndarray,
 
     alloc0 = jnp.where(active, LOCAL_RATE_KBPS, 0.0)  # no-link flows: local bw
     init = (alloc0, active & ~member.any(1), link_bw_kbps)
-    (alloc, frozen, _), _ = jax.lax.scan(round_body, init, None, length=n_rounds)
-    # leftovers (rounds exhausted): give current bound
+    (alloc, frozen, cap_rem), _ = jax.lax.scan(round_body, init, None,
+                                               length=n_rounds)
+    # Flows still unfrozen after n_rounds (more distinct bottleneck levels
+    # than rounds) get their current fair-share bound, NOT the LOCAL_RATE
+    # alloc0 they were initialized with — the latter oversubscribed links.
+    leftover = active & ~frozen
+    tail = jnp.minimum(fair_bound(leftover, cap_rem), LOCAL_RATE_KBPS)
+    alloc = jnp.where(leftover, tail, alloc)
+    return jnp.where(active, alloc, 0.0)
+
+
+def max_min_fair_rates_sparse(flow_links: jnp.ndarray, active: jnp.ndarray,
+                              link_bw_kbps: jnp.ndarray,
+                              n_rounds: int = 8) -> jnp.ndarray:
+    """Sparse progressive filling over the [F, 4] per-flow link lists.
+
+    Numerically equivalent to :func:`max_min_fair_rates` (same round
+    structure, same freeze rule) but every per-link reduction is a
+    ``segment_sum`` over at most 4 link ids per flow — no [F, E] tensor.
+    """
+    F = flow_links.shape[0]
+    E = link_bw_kbps.shape[0]
+    valid = (flow_links >= 0) & active[:, None]          # [F, 4]
+    seg = jnp.where(valid, flow_links, E).reshape(-1)    # pad slots -> seg E
+    w_valid = valid.astype(jnp.float32)
+
+    def per_link_sum(per_flow):                          # [F] -> [E]
+        w = (per_flow[:, None] * w_valid).reshape(-1)
+        return jax.ops.segment_sum(w, seg, num_segments=E + 1)[:E]
+
+    def fair_bound(unfrozen, cap_rem):
+        cnt = per_link_sum(unfrozen.astype(jnp.float32))
+        share = jnp.where(cnt > 0, cap_rem / jnp.maximum(cnt, 1.0), INF)
+        padded = jnp.concatenate([share, jnp.full((1,), INF)])
+        return jnp.where(valid, padded[seg.reshape(F, 4)], INF).min(1)
+
+    def round_body(carry, _):
+        alloc, frozen, cap_rem = carry
+        unfrozen = active & ~frozen
+        bound = jnp.where(unfrozen, fair_bound(unfrozen, cap_rem), INF)
+        m = bound.min()
+        newly = unfrozen & (bound <= m * 1.000001 + 1e-6)
+        new_alloc = jnp.where(newly, jnp.minimum(bound, LOCAL_RATE_KBPS), alloc)
+        used = per_link_sum(jnp.where(newly, new_alloc, 0.0))
+        return (new_alloc, frozen | newly, jnp.maximum(cap_rem - used, 0.0)), None
+
+    alloc0 = jnp.where(active, LOCAL_RATE_KBPS, 0.0)
+    init = (alloc0, active & ~valid.any(1), link_bw_kbps)
+    (alloc, frozen, cap_rem), _ = jax.lax.scan(round_body, init, None,
+                                               length=n_rounds)
+    leftover = active & ~frozen
+    tail = jnp.minimum(fair_bound(leftover, cap_rem), LOCAL_RATE_KBPS)
+    alloc = jnp.where(leftover, tail, alloc)
     return jnp.where(active, alloc, 0.0)
 
 
@@ -232,6 +315,19 @@ def mathis_cap(delay_matrix: jnp.ndarray, link_loss: jnp.ndarray,
     # path loss: 1 - prod(1 - loss_e)
     log_keep = jnp.where(member, jnp.log1p(-jnp.clip(link_loss, 0, 0.99))[None, :], 0.0)
     p = 1.0 - jnp.exp(log_keep.sum(1))
+    return _mathis_from_loss(delay_matrix, p, src, dst, mss_kb, c_mathis)
+
+
+def mathis_cap_sparse(delay_matrix: jnp.ndarray, path_loss: jnp.ndarray,
+                      src: jnp.ndarray, dst: jnp.ndarray,
+                      mss_kb: float = 1.46,
+                      c_mathis: float = 1.22) -> jnp.ndarray:
+    """Mathis bound from the precomputed [H, H] path-loss table: one gather."""
+    return _mathis_from_loss(delay_matrix, path_loss[src, dst], src, dst,
+                             mss_kb, c_mathis)
+
+
+def _mathis_from_loss(delay_matrix, p, src, dst, mss_kb, c_mathis):
     rtt_ms = 2.0 * delay_matrix[src, dst]
     rtt_s = jnp.maximum(rtt_ms, 1e-2) * 1e-3
     cap = c_mathis * mss_kb / (rtt_s * jnp.sqrt(jnp.maximum(p, 1e-12)))
@@ -239,21 +335,33 @@ def mathis_cap(delay_matrix: jnp.ndarray, link_loss: jnp.ndarray,
 
 
 def flow_rates(net: NetState, src: jnp.ndarray, dst: jnp.ndarray,
-               active: jnp.ndarray, n_rounds: int = 8
+               active: jnp.ndarray, n_rounds: int = 8, sparse: bool = True
                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Allocate KB/s to each (src_host -> dst_host) flow; also new link util.
 
-    Returns (rates [F], link_util [E]).
+    ``sparse`` selects the segment-based engine (default); ``sparse=False``
+    runs the dense [F, E] membership oracle.  Returns (rates [F], util [E]).
     """
     E = net.link_bw.shape[0]
     src_c = jnp.clip(src, 0, None)
     dst_c = jnp.clip(dst, 0, None)
-    member = path_membership(net.path_links, src_c, dst_c, E)
-    member = member & active[:, None]
-    bw_kbps = net.link_bw * MBPS_TO_KBPS
-    fair = max_min_fair_rates(member, active, bw_kbps, n_rounds)
-    tcp = mathis_cap(net.delay_matrix, net.link_loss, member, src_c, dst_c)
-    rates = jnp.minimum(fair, tcp) * active
-    load = (member.astype(jnp.float32) * rates[:, None]).sum(0)  # KB/s per link
+    bw_kbps = net.link_bw_kbps
+
+    if sparse:
+        links = jnp.where(active[:, None], net.path_links[src_c, dst_c], -1)
+        fair = max_min_fair_rates_sparse(links, active, bw_kbps, n_rounds)
+        tcp = mathis_cap_sparse(net.delay_matrix, net.path_loss, src_c, dst_c)
+        rates = jnp.minimum(fair, tcp) * active
+        valid = links >= 0                                    # [F, 4]
+        seg = jnp.where(valid, links, E).reshape(-1)
+        w = (rates[:, None] * valid.astype(jnp.float32)).reshape(-1)
+        load = jax.ops.segment_sum(w, seg, num_segments=E + 1)[:E]
+    else:
+        member = path_membership(net.path_links, src_c, dst_c, E)
+        member = member & active[:, None]
+        fair = max_min_fair_rates(member, active, bw_kbps, n_rounds)
+        tcp = mathis_cap(net.delay_matrix, net.link_loss, member, src_c, dst_c)
+        rates = jnp.minimum(fair, tcp) * active
+        load = (member.astype(jnp.float32) * rates[:, None]).sum(0)
     util = jnp.where(bw_kbps > 0, load / jnp.maximum(bw_kbps, 1e-6), 0.0)
     return rates, jnp.clip(util, 0.0, 1.0)

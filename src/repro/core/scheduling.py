@@ -13,6 +13,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.datacenter import SimConfig
@@ -43,13 +44,20 @@ def schedulable_mask(sim: SimState) -> jnp.ndarray:
     return arrived & ((st == STATUS_INACTIVE) | (st == STATUS_WAITING))
 
 
-def select_fifo(sim: SimState) -> jnp.ndarray:
-    """Paper default selection: earliest-submitted schedulable container."""
+def select_key_fifo(sim: SimState) -> jnp.ndarray:
+    """FIFO selection key over ALL containers: lower = scheduled earlier;
+    ``BIG`` marks unschedulable slots.  Batched placement ranks by this key
+    once per tick instead of re-running an argmin per placement."""
     mask = schedulable_mask(sim)
     C = mask.shape[0]
-    key = jnp.where(mask, sim.containers.submit_t * C + jnp.arange(C), BIG)
+    return jnp.where(mask, sim.containers.submit_t * C + jnp.arange(C), BIG)
+
+
+def select_fifo(sim: SimState) -> jnp.ndarray:
+    """Paper default selection: earliest-submitted schedulable container."""
+    key = select_key_fifo(sim)
     c = jnp.argmin(key)
-    return jnp.where(mask.any(), c, -1)
+    return jnp.where(key[c] < BIG, c, -1)
 
 
 def _first_true(order_key: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
@@ -114,6 +122,67 @@ def place_jobgroup(sim: SimState, c: jnp.ndarray, cfg: SimConfig):
 
 
 # ---------------------------------------------------------------------------
+# Batched placement scores (engine._place_batched)
+#
+# ``place_key(sim, cand, cfg) -> f32[K, H]``: per-candidate host preference
+# (lower = better), computed ONCE per tick for the K ranked candidates.
+# Feasibility is NOT baked in — the admit scan masks infeasible hosts against
+# its live resource counters so intra-round decisions see each other.
+# ``place_key_dynamic(sim, rr_pointer) -> f32[H]``, when present, REPLACES
+# the candidate's row with one built from scheduler state carried through
+# the admit scan (Round's rotating pointer is the one policy that needs
+# this; its static ``place_key`` then only opts in to the batched path).
+# ---------------------------------------------------------------------------
+def place_key_firstfit(sim: SimState, cand: jnp.ndarray,
+                       cfg: SimConfig) -> jnp.ndarray:
+    H = sim.hosts.cap.shape[0]
+    return jnp.broadcast_to(jnp.arange(H, dtype=jnp.float32),
+                            (cand.shape[0], H))
+
+
+def place_key_round_dynamic(sim: SimState,
+                            rr_pointer: jnp.ndarray) -> jnp.ndarray:
+    H = sim.hosts.cap.shape[0]
+    return jnp.mod(jnp.arange(H) - rr_pointer - 1, H).astype(jnp.float32)
+
+
+def place_key_performance_first(sim: SimState, cand: jnp.ndarray,
+                                cfg: SimConfig) -> jnp.ndarray:
+    H = sim.hosts.cap.shape[0]
+    ctype = sim.containers.ctype[cand]                       # [K]
+    speed = sim.hosts.speed.T[ctype]                         # [K, H]
+    return -speed * H + jnp.arange(H, dtype=jnp.float32)[None, :] * 1e-3
+
+
+def place_key_jobgroup(sim: SimState, cand: jnp.ndarray,
+                       cfg: SimConfig) -> jnp.ndarray:
+    """Same-job co-location counts + worst-fit fallback, per candidate.
+
+    Counts are taken at the start of the round ([K, C] mask scattered onto
+    hosts) — candidates admitted earlier in the same round do not re-raise
+    the co-location score of later ones (documented approximation to the
+    sequential reference; resource feasibility IS still live in the scan).
+    """
+    H = sim.hosts.cap.shape[0]
+    ct = sim.containers
+    st = ct.status
+    deployed = (((st == STATUS_RUNNING) | (st == STATUS_COMMUNICATING) |
+                 (st == STATUS_MIGRATING)) & (ct.host >= 0))
+    same = deployed[None, :] & (ct.job[None, :] == ct.job[cand][:, None])
+    hostc = jnp.clip(ct.host, 0, H - 1)
+    counts = jax.vmap(
+        lambda s: jnp.zeros((H,), jnp.float32).at[hostc].add(s)
+    )(same.astype(jnp.float32))                              # [K, H]
+    any_dep = counts.sum(axis=1, keepdims=True) > 0
+    free = (sim.hosts.cap - sim.hosts.used) / jnp.maximum(sim.hosts.cap, 1e-6)
+    avail = free.sum(axis=1)                                 # [H]
+    tie = jnp.arange(H, dtype=jnp.float32) * 1e-3
+    key_dep = -counts * H + tie[None, :]
+    key_wf = (-avail * H + tie)[None, :]
+    return jnp.where(any_dep, key_dep, key_wf)
+
+
+# ---------------------------------------------------------------------------
 # OverloadMigrate (paper §3.5 algorithm 1, DRAPS-derived)
 # ---------------------------------------------------------------------------
 def overload_migrate(sim: SimState, cfg: SimConfig):
@@ -158,10 +227,22 @@ def overload_migrate(sim: SimState, cfg: SimConfig):
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class Policy:
+    """Scheduling algorithm = selection + placement (+ optional migration).
+
+    ``place``/``select`` are the sequential per-container interface (the
+    paper's).  ``select_key``/``place_key`` are the batched interface used
+    by the engine's conflict-resolved placement round; policies without a
+    ``place_key`` automatically run on the sequential reference path.
+    """
+
     name: str
     place: Callable  # (sim, c, cfg) -> (host, sched)
     select: Callable = select_fifo
     migrate: Callable | None = None  # (sim, cfg) -> (container, dst)
+    # batched interface
+    select_key: Callable = select_key_fifo   # (sim) -> f32[C], BIG = skip
+    place_key: Callable | None = None        # (sim, cand, cfg) -> f32[K, H]
+    place_key_dynamic: Callable | None = None  # (sim, rr_pointer) -> f32[H]
 
 
 _REGISTRY: dict[str, Policy] = {}
@@ -184,8 +265,11 @@ def list_policies() -> list[str]:
     return sorted(_REGISTRY)
 
 
-register(Policy("firstfit", place_firstfit))
-register(Policy("round", place_round))
-register(Policy("performance_first", place_performance_first))
-register(Policy("jobgroup", place_jobgroup))
-register(Policy("overload_migrate", place_firstfit, migrate=overload_migrate))
+register(Policy("firstfit", place_firstfit, place_key=place_key_firstfit))
+register(Policy("round", place_round, place_key=place_key_firstfit,
+                place_key_dynamic=place_key_round_dynamic))
+register(Policy("performance_first", place_performance_first,
+                place_key=place_key_performance_first))
+register(Policy("jobgroup", place_jobgroup, place_key=place_key_jobgroup))
+register(Policy("overload_migrate", place_firstfit, migrate=overload_migrate,
+                place_key=place_key_firstfit))

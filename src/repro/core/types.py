@@ -90,6 +90,10 @@ class NetState(NamedTuple):
     # deterministic ECMP path between every host pair (<=4 links, -1 pad)
     path_links: jnp.ndarray   # i32[H, H, 4]
     path_nlinks: jnp.ndarray  # i32[H, H]
+    # precomputed (derived from the static tables; kept on the state so the
+    # per-tick sparse flow kernels are pure gathers + segment reductions)
+    link_bw_kbps: jnp.ndarray  # f32[E] link_bw converted to KB/s
+    path_loss: jnp.ndarray    # f32[H, H] end-to-end loss prob along ECMP path
     # dynamic ----------------------------------------------------------------
     link_util: jnp.ndarray    # f32[E] utilization from last tick's flows
     delay_matrix: jnp.ndarray  # f32[H, H] host-to-host delay (the paper's D)

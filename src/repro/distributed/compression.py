@@ -16,10 +16,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-try:
-    from jax import shard_map
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map
+from repro.compat import SM_NOCHECK as _SM_NOCHECK, shard_map
 
 
 def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -63,7 +60,7 @@ def pod_compressed_mean(grads: Any, mesh) -> Any:
             return compressed_psum_mean(gl, "pod")
 
         return shard_map(body, mesh=mesh, in_specs=in_spec,
-                         out_specs=in_spec, check_vma=False)(g)
+                         out_specs=in_spec, **_SM_NOCHECK)(g)
 
     return jax.tree.map(leaf_mean, grads)
 

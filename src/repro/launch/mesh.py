@@ -9,10 +9,17 @@ from __future__ import annotations
 import jax
 
 
-def _mesh(shape, axes):
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+def compat_mesh(shape, axes):
+    """``jax.make_mesh`` with Auto axis types where the jax version has them
+    (``jax.sharding.AxisType`` only exists in newer releases)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(
+            shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)  # older jax: Auto is the only behavior
+
+
+_mesh = compat_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -27,12 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-try:  # jax >= 0.4.35 re-export
-    from jax import shard_map  # type: ignore
-    _SHARD_MAP_NEW = True
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map  # type: ignore
-    _SHARD_MAP_NEW = False
+from repro.compat import SM_NOCHECK as _SM_NOCHECK, shard_map
 
 from repro.models.layers import BF16, F32, init_dense
 
@@ -237,7 +232,7 @@ def moe_layer_ep(params, x, cfg, mesh, data_axes: tuple):
                   P(MODEL_AXIS, "data", None),
                   P(MODEL_AXIS, None, "data")),
         out_specs=tok_spec,
-        check_vma=False,
+        **_SM_NOCHECK,
     )(x, topw.astype(x.dtype), topi,
       params["w_gate"], params["w_up"], params["w_down"])
     y = y.astype(x.dtype)

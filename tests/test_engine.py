@@ -6,10 +6,13 @@ The properties the SoA port must preserve from the paper's process model:
   * monotone completion: completed stays completed, finish_t set once;
   * cost monotonicity.
 """
-import hypothesis.strategies as st
-import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis (requirements-dev)")
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
 
 from repro.core import (SimConfig, build_paper_hosts, build_paper_network,
                         get_policy, init_sim, paper_workload, run_sim)

@@ -1,0 +1,167 @@
+"""Sparse flow-path engine vs the dense [F, E] oracle (hypothesis-free).
+
+Properties (ISSUE 1 acceptance):
+  * link-capacity conservation: per-link load from allocated rates never
+    exceeds link bandwidth (beyond the freeze-rule epsilon);
+  * numerical equivalence: sparse segment-based rates == dense membership
+    oracle within rtol 1e-4;
+  * leftover-flow regression: with more distinct bottleneck levels than
+    waterfilling rounds, unfrozen flows get their fair-share bound, not the
+    4 GB/s loopback alloc0 (the seed engine's oversubscription bug).
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SimConfig
+from repro.core.datacenter import build_paper_network
+from repro.core.network import (MBPS_TO_KBPS, SpineLeafSpec, build_network,
+                                flow_rates, max_min_fair_rates,
+                                max_min_fair_rates_sparse,
+                                path_membership, set_link_params)
+
+EPS = 1.02  # freeze rule admits bound <= m * 1.000001 + 1e-6 per round
+
+
+def net20():
+    return build_paper_network(SimConfig())
+
+
+def random_flows(net, rng, n_flows, n_hosts=20):
+    src = jnp.asarray(rng.integers(0, n_hosts, n_flows), jnp.int32)
+    dst = jnp.asarray(rng.integers(0, n_hosts, n_flows), jnp.int32)
+    active = jnp.asarray(rng.random(n_flows) < 0.8)
+    return src, dst, active
+
+
+def link_load(net, src, dst, rates, active):
+    member = path_membership(net.path_links, src, dst, net.link_bw.shape[0])
+    member = np.asarray(member) & np.asarray(active)[:, None]
+    return (member * np.asarray(rates)[:, None]).sum(0)
+
+
+def test_sparse_matches_dense_oracle():
+    """Sparse rates == dense oracle within rtol 1e-4 on random flow sets."""
+    spec, net = net20()
+    rng = np.random.default_rng(0)
+    for trial in range(20):
+        n_flows = int(rng.integers(1, 40))
+        src, dst, active = random_flows(net, rng, n_flows)
+        r_sparse, u_sparse = flow_rates(net, src, dst, active, sparse=True)
+        r_dense, u_dense = flow_rates(net, src, dst, active, sparse=False)
+        np.testing.assert_allclose(np.asarray(r_sparse), np.asarray(r_dense),
+                                   rtol=1e-4, atol=1e-3, err_msg=f"trial {trial}")
+        np.testing.assert_allclose(np.asarray(u_sparse), np.asarray(u_dense),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_sparse_matches_dense_with_loss():
+    spec, net = net20()
+    lossy = set_link_params(net, loss=0.01)
+    rng = np.random.default_rng(7)
+    src, dst, active = random_flows(lossy, rng, 24)
+    r_s, _ = flow_rates(lossy, src, dst, active, sparse=True)
+    r_d, _ = flow_rates(lossy, src, dst, active, sparse=False)
+    np.testing.assert_allclose(np.asarray(r_s), np.asarray(r_d),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_link_capacity_conservation():
+    """segment_sum of rates over links <= link_bw_kbps * (1 + eps)."""
+    spec, net = net20()
+    bw_kbps = np.asarray(net.link_bw) * MBPS_TO_KBPS
+    rng = np.random.default_rng(42)
+    for _ in range(20):
+        n_flows = int(rng.integers(1, 64))
+        src, dst, active = random_flows(net, rng, n_flows)
+        for sparse in (True, False):
+            rates, util = flow_rates(net, src, dst, active, sparse=sparse)
+            load = link_load(net, src, dst, rates, active)
+            assert (load <= bw_kbps * EPS + 1e-3).all(), \
+                f"sparse={sparse}: overload {(load - bw_kbps).max()}"
+            assert (np.asarray(rates) >= 0).all()
+            assert (np.asarray(util) <= 1.0 + 1e-6).all()
+
+
+def _many_bottleneck_net(n_bottlenecks=10):
+    """Spine-leaf fabric whose first ``n_bottlenecks`` host uplinks each have
+    a distinct bandwidth — progressive filling needs one round per distinct
+    bottleneck level, exceeding the default 8-round budget."""
+    spec = SpineLeafSpec(n_spine=2, n_leaf=4, n_hosts=24)
+    net = build_network(spec)
+    bw = np.asarray(net.link_bw).copy()
+    for i in range(n_bottlenecks):
+        bw[i] = 10.0 * (i + 1)          # 10, 20, ..., 100 Mbps uplinks
+    new_bw = jnp.asarray(bw)
+    return spec, net._replace(link_bw=new_bw,
+                              link_bw_kbps=new_bw * MBPS_TO_KBPS)
+
+
+def test_leftover_flows_bounded_regression():
+    """Seed bug: flows unfrozen after n_rounds kept alloc0 = 4 GB/s.
+
+    10 flows, each alone on a distinctly-sized bottleneck uplink => 10
+    distinct fair-share levels; with n_rounds=8 at least one flow used to
+    fall through with LOCAL_RATE_KBPS and oversubscribe its links.
+    """
+    spec, net = _many_bottleneck_net(10)
+    n = 10
+    src = jnp.arange(n, dtype=jnp.int32)
+    dst = jnp.arange(n, dtype=jnp.int32) + 10       # distinct dst hosts
+    active = jnp.ones((n,), bool)
+    bw_kbps = np.asarray(net.link_bw) * MBPS_TO_KBPS
+    for sparse in (True, False):
+        rates, _ = flow_rates(net, src, dst, active, n_rounds=8, sparse=sparse)
+        r = np.asarray(rates)
+        # every flow bounded by its own bottleneck uplink (flow i <- link i)
+        assert (r <= bw_kbps[:n] * EPS + 1e-3).all(), \
+            f"sparse={sparse}: rates {r} exceed uplinks {bw_kbps[:n]}"
+        load = link_load(net, src, dst, rates, active)
+        assert (load <= bw_kbps * EPS + 1e-3).all()
+    # the two engines agree on the leftover allocation too
+    r_s, _ = flow_rates(net, src, dst, active, n_rounds=8, sparse=True)
+    r_d, _ = flow_rates(net, src, dst, active, n_rounds=8, sparse=False)
+    np.testing.assert_allclose(np.asarray(r_s), np.asarray(r_d),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_leftover_fallback_is_fair_share():
+    """Direct max_min unit check: with rounds exhausted the unfrozen flow's
+    allocation equals its remaining fair share, not LOCAL_RATE_KBPS."""
+    spec, net = _many_bottleneck_net(10)
+    n = 10
+    src = jnp.arange(n, dtype=jnp.int32)
+    dst = jnp.arange(n, dtype=jnp.int32) + 10
+    active = jnp.ones((n,), bool)
+    E = net.link_bw.shape[0]
+    bw_kbps = net.link_bw * MBPS_TO_KBPS
+    member = path_membership(net.path_links, src, dst, E) & active[:, None]
+    links = net.path_links[src, dst]
+    for n_rounds in (2, 4, 8):
+        dense = np.asarray(max_min_fair_rates(member, active, bw_kbps,
+                                              n_rounds=n_rounds))
+        sp = np.asarray(max_min_fair_rates_sparse(links, active, bw_kbps,
+                                                  n_rounds=n_rounds))
+        assert dense.max() < 1e6, f"n_rounds={n_rounds}: leftover kept alloc0"
+        assert sp.max() < 1e6
+        np.testing.assert_allclose(sp, dense, rtol=1e-4, atol=1e-3)
+
+
+def test_path_loss_matrix_matches_membership_product():
+    spec, net = net20()
+    lossy = set_link_params(net, loss=0.015)
+    P = np.asarray(lossy.path_loss)
+    loss = np.asarray(lossy.link_loss)
+    pl = np.asarray(lossy.path_links)
+    for i, j in [(0, 1), (0, 4), (3, 17), (5, 5)]:
+        links = pl[i, j][pl[i, j] >= 0]
+        expect = 1.0 - np.prod(1.0 - loss[links]) if len(links) else 0.0
+        np.testing.assert_allclose(P[i, j], expect, rtol=1e-5, atol=1e-7)
+
+
+def test_same_host_flow_local_sparse():
+    spec, net = net20()
+    src = jnp.asarray([3], jnp.int32)
+    dst = jnp.asarray([3], jnp.int32)
+    rates, util = flow_rates(net, src, dst, jnp.ones((1,), bool), sparse=True)
+    assert float(rates[0]) >= 1e6
+    assert float(np.asarray(util).max()) == 0.0

@@ -1,8 +1,12 @@
 """Network-model unit + property tests (flow rates, delays, APSP)."""
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis (requirements-dev)")
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
 
 from repro.core import SimConfig
 from repro.core.datacenter import build_paper_network

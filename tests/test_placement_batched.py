@@ -1,0 +1,147 @@
+"""Batched conflict-resolved placement vs the sequential reference scan,
+and the sparse segment-min comm-peer picker vs its dense oracle.
+
+No hypothesis dependency — seeded loops so the suite runs on a clean env.
+"""
+import jax
+import numpy as np
+
+from repro.core import (SimConfig, build_paper_hosts, build_paper_network,
+                        get_policy, init_sim, paper_workload, run_sim)
+from repro.core.engine import (phase_arrive, phase_schedule, pick_comm_peers,
+                               pick_comm_peers_dense)
+from repro.core.types import (STATUS_COMMUNICATING, STATUS_COMPLETED,
+                              STATUS_MIGRATING, STATUS_RUNNING)
+
+
+def make_cfg(**kw):
+    base = dict(n_jobs=10, n_tasks=40, n_containers=40, horizon=40,
+                arrival_window=10.0, placements_per_tick=16,
+                migrations_per_tick=2)
+    base.update(kw)
+    return SimConfig(**base)
+
+
+def fresh_sim(cfg, seed=0):
+    hosts = build_paper_hosts()
+    spec, net = build_paper_network(cfg)
+    return spec, init_sim(hosts, paper_workload(cfg, seed=seed), net,
+                          seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# Comm-peer picker: sparse segment-min == dense C x C oracle
+# ---------------------------------------------------------------------------
+def test_comm_peers_match_dense_oracle():
+    rng = np.random.default_rng(3)
+    for seed in range(5):
+        cfg = make_cfg()
+        spec, sim = fresh_sim(cfg, seed=seed)
+        ct = sim.containers
+        C = ct.status.shape[0]
+        # randomize a mid-simulation-looking state
+        status = rng.choice([0, STATUS_RUNNING, STATUS_COMMUNICATING,
+                             STATUS_MIGRATING, STATUS_COMPLETED], size=C)
+        host = rng.integers(-1, 20, size=C)
+        ct = ct._replace(status=ct.status.at[:].set(status.astype(np.int32)),
+                         host=ct.host.at[:].set(host.astype(np.int32)))
+        sparse = np.asarray(pick_comm_peers(ct))
+        dense = np.asarray(pick_comm_peers_dense(ct))
+        np.testing.assert_array_equal(sparse, dense)
+
+
+def test_comm_peers_self_when_alone():
+    cfg = make_cfg()
+    spec, sim = fresh_sim(cfg)
+    peers = np.asarray(pick_comm_peers(sim.containers))  # nothing deployed yet
+    np.testing.assert_array_equal(peers, np.arange(len(peers)))
+
+
+# ---------------------------------------------------------------------------
+# Batched placement
+# ---------------------------------------------------------------------------
+def _one_schedule_tick(cfg, policy_name, seed=0):
+    spec, sim = fresh_sim(cfg, seed=seed)
+    sim = sim._replace(t=sim.t + 20.0)        # everything has arrived by t=20
+    sim, _ = phase_arrive(sim)
+    policy = get_policy(policy_name)
+    out = jax.jit(lambda s: phase_schedule(s, cfg, policy))(sim)
+    return out
+
+
+def test_batched_matches_sequential_single_tick():
+    """With every candidate feasible, the batched round makes exactly the
+    sequential reference's decisions (same containers, same hosts).
+
+    jobgroup is excluded: its co-location score is intentionally computed at
+    round start in the batched path (see place_key_jobgroup), so intra-round
+    placements diverge from the sequential reference by design.
+    """
+    for policy in ["firstfit", "round", "performance_first"]:
+        seq = _one_schedule_tick(make_cfg(batched_placement=False), policy)
+        bat = _one_schedule_tick(make_cfg(batched_placement=True), policy)
+        np.testing.assert_array_equal(np.asarray(seq.containers.status),
+                                      np.asarray(bat.containers.status),
+                                      err_msg=policy)
+        np.testing.assert_array_equal(np.asarray(seq.containers.host),
+                                      np.asarray(bat.containers.host),
+                                      err_msg=policy)
+        np.testing.assert_allclose(np.asarray(seq.hosts.used),
+                                   np.asarray(bat.hosts.used),
+                                   rtol=1e-5, err_msg=policy)
+        assert int(seq.sched.decisions) == int(bat.sched.decisions)
+
+
+def test_batched_skips_blocked_head():
+    """A giant container with no feasible host must not block the rest of
+    the round (the sequential argmin re-selected it forever)."""
+    cfg = make_cfg(batched_placement=True)
+    spec, sim = fresh_sim(cfg, seed=1)
+    ct = sim.containers
+    req = np.asarray(ct.req).copy()
+    req[0] = [1e6, 1e6, 1e6]                  # infeasible everywhere
+    submit = np.asarray(ct.submit_t).copy()
+    submit[0] = 0.0                           # and first in FIFO order
+    ct = ct._replace(req=ct.req.at[:].set(req),
+                     submit_t=ct.submit_t.at[:].set(submit))
+    sim = sim._replace(containers=ct, t=sim.t + 20.0)
+    sim, _ = phase_arrive(sim)
+    out = jax.jit(lambda s: phase_schedule(s, cfg, get_policy("firstfit")))(sim)
+    st = np.asarray(out.containers.status)
+    assert st[0] != STATUS_RUNNING            # the blocker stays queued
+    assert (st == STATUS_RUNNING).sum() >= cfg.placements_per_tick - 1
+    assert int(out.sched.decisions) >= cfg.placements_per_tick - 1
+
+
+def test_batched_respects_capacity_over_full_run():
+    for policy in ["firstfit", "round", "jobgroup", "overload_migrate"]:
+        for seed in (0, 3):
+            cfg = make_cfg(batched_placement=True)
+            spec, sim0 = fresh_sim(cfg, seed=seed)
+            final, _ = run_sim(sim0, cfg, get_policy(policy), spec.n_hosts,
+                               spec.n_nodes, cfg.horizon)
+            used = np.asarray(final.hosts.used)
+            cap = np.asarray(final.hosts.cap)
+            assert (used <= cap + 1e-3).all(), (policy, seed)
+            assert (np.asarray(final.hosts.n_containers)
+                    <= cfg.max_containers_per_host).all()
+
+
+def test_batched_and_sequential_complete_the_workload():
+    """Both paths finish the small paper workload within the horizon."""
+    for batched in (True, False):
+        cfg = make_cfg(batched_placement=batched, horizon=60)
+        spec, sim0 = fresh_sim(cfg, seed=2)
+        final, _ = run_sim(sim0, cfg, get_policy("firstfit"), spec.n_hosts,
+                           spec.n_nodes, cfg.horizon)
+        st = np.asarray(final.containers.status)
+        assert (st == STATUS_COMPLETED).sum() == 40, batched
+
+
+def test_round_policy_rotates_hosts_batched():
+    cfg = make_cfg(batched_placement=True)
+    out = _one_schedule_tick(cfg, "round")
+    hosts = np.asarray(out.containers.host)
+    placed = hosts[hosts >= 0]
+    # round-robin across 20 feasible hosts: 16 placements hit 16 distinct hosts
+    assert len(np.unique(placed)) == len(placed)
