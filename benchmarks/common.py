@@ -57,6 +57,7 @@ def measure_scale_point(n_hosts: int, n_containers: int, horizon: int = 120,
         "n_network_nodes": spec.n_nodes,
         "n_containers": n_containers,
         "mode": "sparse" if sparse else "dense",
+        "policy": policy,
         "batched_placement": batched,
         "horizon": horizon,
         "init_s": round(t_init, 3),

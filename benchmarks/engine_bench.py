@@ -36,13 +36,19 @@ def bench_engine(quick: bool = False):
         for sparse in (True, False):
             points.append(measure_scale_point(500, 3000, horizon=40,
                                               sparse=sparse))
+        # policy ladder at the headline scale: static score vs the two
+        # scan-carried co-location scores (jobgroup, netaware)
+        for pol in ("jobgroup", "netaware"):
+            points.append(measure_scale_point(500, 3000, horizon=40,
+                                              policy=pol))
         # beyond the dense ceiling: sparse-only 2000-host point
         points.append(measure_scale_point(2000, 6000, horizon=20,
                                           sparse=True))
 
-    def tps(h, c, mode):
+    def tps(h, c, mode, policy="firstfit"):
         for p in points:
-            if (p["n_hosts"], p["n_containers"], p["mode"]) == (h, c, mode):
+            if ((p["n_hosts"], p["n_containers"], p["mode"],
+                 p.get("policy", "firstfit")) == (h, c, mode, policy)):
                 return p["ticks_per_s"]
         return None
 
@@ -55,6 +61,11 @@ def bench_engine(quick: bool = False):
         "comparison_point": {"n_hosts": cmp_h, "n_containers": cmp_c},
         "sparse_speedup": speedup,
     }
+    if not quick:
+        out["policy_comparison"] = {
+            pol: tps(500, 3000, "sparse", pol)
+            for pol in ("firstfit", "jobgroup", "netaware")
+        }
     path = BENCH_QUICK_PATH if quick else BENCH_PATH
     os.makedirs(os.path.dirname(path), exist_ok=True)
     with open(path, "w") as f:
@@ -70,6 +81,9 @@ def bench_engine(quick: bool = False):
             claims.append(("2000-host point (dense cannot run)",
                            f"{p2000[0]['ticks_per_s']} ticks/s, "
                            f"{p2000[0]['state_mb']} MB state"))
+        claims.append(("policy ticks/s @ 500h/3000c "
+                       "(firstfit vs jobgroup vs netaware)",
+                       str(out.get("policy_comparison"))))
     return points, claims
 
 

@@ -3,8 +3,9 @@
 Takes REAL per-step compute/communication profiles from the multi-pod
 dry-run (experiments/dryrun_results.json), converts them into DCSim jobs
 via repro.core.bridge, and compares a computing-only scheduler
-(performance_first) against the computing+networking scheduler (jobgroup)
-on the paper's heterogeneous testbed.
+(performance_first) against the computing+networking schedulers (jobgroup
+co-location, netaware delay/congestion-priced placement) on the paper's
+heterogeneous testbed.
 
     PYTHONPATH=src python examples/schedule_training_cluster.py
 """
@@ -45,7 +46,7 @@ def main() -> None:
     print(f"\n{'policy':20s} {'completed':>9s} {'avg_runtime':>11s} "
           f"{'avg_comm':>9s} {'cost':>8s}")
     results = {}
-    for policy in ["performance_first", "jobgroup"]:
+    for policy in ["performance_first", "jobgroup", "netaware"]:
         conts = workload_from_jobs(jobs, cfg)
         sim0 = init_sim(hosts, conts, net)
         final, metrics = run_sim(sim0, cfg, get_policy(policy),
@@ -56,10 +57,17 @@ def main() -> None:
               f"{rep['avg_runtime']:11.2f} {rep['avg_comm_time']:9.2f} "
               f"{rep['total_cost']:8.0f}")
 
-    speedup = (results["performance_first"]["avg_runtime"]
-               / max(results["jobgroup"]["avg_runtime"], 1e-9))
-    print(f"\ncomputing+networking scheduling runs ML jobs "
-          f"{speedup:.2f}x faster than computing-only placement")
+    best = min(("jobgroup", "netaware"),
+               key=lambda p: results[p]["avg_runtime"])
+    ratio = (results["performance_first"]["avg_runtime"]
+             / max(results[best]["avg_runtime"], 1e-9))
+    if ratio >= 1.0:
+        print(f"\ncomputing+networking scheduling ({best}) runs ML jobs "
+              f"{ratio:.2f}x faster than computing-only placement")
+    else:
+        print(f"\ncomputing-only placement wins on this profile "
+              f"({1 / ratio:.2f}x faster than {best}) — the network-aware "
+              f"policies pay off under fabric contention, not fat idle links")
 
 
 if __name__ == "__main__":

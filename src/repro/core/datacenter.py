@@ -67,6 +67,12 @@ class SimConfig:
     stall_rate_floor: float = 50.0    # KB/s under which a flow is 'stalled'
     mig_kb_per_gb: float = 1024.0     # migration bytes per GB of memory req
     queue_coef: float = 0.5
+    # network-aware scoring (NetState.comm_cost refresh weights).  Defaults
+    # mirror network.DEFAULT_* — build_network seeds the initial table with
+    # those, and the engine re-weights from this config at every delay
+    # refresh (the first one fires at the end of tick 0).
+    netaware_util_weight: float = network.DEFAULT_UTIL_WEIGHT
+    netaware_cross_leaf_ms: float = network.DEFAULT_CROSS_LEAF_MS
 
 
 def build_paper_hosts(categories: Sequence[HostCategory] = PAPER_HOST_CATEGORIES,

@@ -26,7 +26,7 @@ import jax.numpy as jnp
 
 from repro.core import network, stats
 from repro.core.datacenter import SimConfig
-from repro.core.scheduling import BIG as BIG_KEY, Policy
+from repro.core.scheduling import BIG, INT_BIG, Policy, feasible_hosts
 from repro.core.types import (
     STATUS_COMMUNICATING, STATUS_COMPLETED, STATUS_INACTIVE, STATUS_MIGRATING,
     STATUS_RUNNING, STATUS_UNBORN, STATUS_WAITING, ContainerState, HostState,
@@ -107,19 +107,46 @@ def phase_arrive(sim: SimState) -> Tuple[SimState, jnp.ndarray]:
     return sim._replace(containers=ct._replace(status=status)), arriving.sum()
 
 
+def _pick_host(policy: Policy, sim: SimState, cfg: SimConfig, score, carry,
+               k, cand, used, feas):
+    """Evaluate the policy's [H] preference row and argmin it over the
+    feasible hosts — the single scoring step both placement paths share."""
+    row = policy.host_row(sim, cfg, score, carry, k, cand, used)
+    return jnp.where(feas.any(), jnp.argmin(jnp.where(feas, row, BIG)), -1)
+
+
 def _place_sequential(sim: SimState, cfg: SimConfig, policy: Policy) -> SimState:
-    """Reference placement loop: one full select+place per scan step."""
+    """Sequential reference path, derived from the same scoring API.
+
+    Each scan step is a K=1 degenerate placement round against the fully
+    live state: re-evaluate the selection key, score the head candidate's
+    hosts, deploy.  Because the hooks are shared with ``_place_batched``,
+    the two paths produce identical placements whenever every candidate is
+    feasible (an infeasible head blocks this path — the paper's semantics —
+    while the batched round skips it).
+    """
+    H = sim.hosts.cap.shape[0]
 
     def place_body(s: SimState, _):
-        c = policy.select(s)
-        C = s.containers.status.shape[0]
-        h, sched = policy.place(s, jnp.clip(c, 0, C - 1), cfg)
-        h = jnp.where(c >= 0, h, -1)
-        s = s._replace(sched=sched)
-        s = _deploy(s, c, h)
-        placed = ((c >= 0) & (h >= 0)).astype(I32)
+        key = policy.select_key(s)
+        c = jnp.argmin(key)
+        valid = key[c] < INT_BIG
+        cand = c[None]
+        score = (None if policy.dynamic is not None
+                 else policy.place_score(s, cand, cfg))
+        pcarry = policy.carry_init(s, cand, cfg)
+        feas = feasible_hosts(s.hosts.cap, s.hosts.used,
+                              s.hosts.n_containers,
+                              s.containers.req[c], cfg) & valid
+        h = _pick_host(policy, s, cfg, score, pcarry, 0, cand,
+                       s.hosts.used, feas)
+        ok = h >= 0
+        hh = jnp.clip(h, 0, H - 1)
+        pcarry = policy.carry_update(s, cfg, pcarry, 0, cand, hh, ok)
+        s = s._replace(sched=policy.carry_commit(s.sched, pcarry))
+        s = _deploy(s, jnp.where(valid, c, -1), h)
         s = s._replace(sched=s.sched._replace(
-            decisions=s.sched.decisions + placed))
+            decisions=s.sched.decisions + ok.astype(I32)))
         return s, None
 
     sim, _ = jax.lax.scan(place_body, sim, None,
@@ -130,15 +157,17 @@ def _place_sequential(sim: SimState, cfg: SimConfig, policy: Policy) -> SimState
 def _place_batched(sim: SimState, cfg: SimConfig, policy: Policy) -> SimState:
     """Batched conflict-resolved placement round.
 
-    Instead of ``placements_per_tick`` full select+place passes (each one
+    Instead of ``placements_per_tick`` full select+score passes (each one
     O(C + H) work serialized by the scan), rank all schedulable containers
     once by the policy's selection key, take the top-K candidates
     (K = placements_per_tick << C), compute the policy's [K, H] placement
     score once, and admit the candidates with a short K-length scan that
-    only carries host ``used`` / slot counters — so later decisions still
-    observe earlier ones' resource consumption (the paper's intra-round
-    semantics).  Container-state updates are applied in one vectorized
-    scatter afterwards (top-k candidate indices are distinct).
+    carries the live host ``used`` / slot counters plus the policy's
+    dynamic-term carry — so later decisions observe both earlier ones'
+    resource consumption AND their score impact (Round's rotating pointer,
+    the co-location counts of JobGroup/NetAware).  Container-state updates
+    are applied in one vectorized scatter afterwards (top-k candidate
+    indices are distinct).
 
     One deliberate semantic upgrade over the sequential reference: a
     candidate with no feasible host no longer blocks the rest of the round
@@ -148,31 +177,28 @@ def _place_batched(sim: SimState, cfg: SimConfig, policy: Policy) -> SimState:
     H = sim.hosts.cap.shape[0]
     K = min(cfg.placements_per_tick, C)
 
-    key = policy.select_key(sim)                          # f32[C], BIG = skip
+    key = policy.select_key(sim)                          # i32[C]
     neg_vals, cand = jax.lax.top_k(-key, K)               # K smallest keys
-    valid = -neg_vals < BIG_KEY                           # bool[K]
+    valid = -neg_vals < INT_BIG                           # bool[K]
     req_k = sim.containers.req[cand]                      # [K, 3]
-    score = policy.place_key(sim, cand, cfg)              # f32[K, H]
-    dyn = policy.place_key_dynamic
+    score = (None if policy.dynamic is not None
+             else policy.place_score(sim, cand, cfg))     # f32[K, H]
+    pcarry0 = policy.carry_init(sim, cand, cfg)
 
     def admit(carry, k):
-        used, ncont, rr = carry
-        fits = ((used + req_k[k][None, :]) <= sim.hosts.cap).all(axis=1)
-        slots = ncont < cfg.max_containers_per_host
-        feas = fits & slots & valid[k]
-        row = score[k] if dyn is None else dyn(sim, rr)
-        h = jnp.where(feas.any(),
-                      jnp.argmin(jnp.where(feas, row, BIG_KEY)), -1)
+        used, ncont, pcarry = carry
+        feas = feasible_hosts(sim.hosts.cap, used, ncont,
+                              req_k[k], cfg) & valid[k]
+        h = _pick_host(policy, sim, cfg, score, pcarry, k, cand, used, feas)
         ok = h >= 0
         hh = jnp.clip(h, 0, H - 1)
         used = used.at[hh].add(req_k[k] * ok.astype(F32))
         ncont = ncont.at[hh].add(ok.astype(I32))
-        if dyn is not None:
-            rr = jnp.where(ok, hh, rr)
-        return (used, ncont, rr), h
+        pcarry = policy.carry_update(sim, cfg, pcarry, k, cand, hh, ok)
+        return (used, ncont, pcarry), h
 
-    init = (sim.hosts.used, sim.hosts.n_containers, sim.sched.rr_pointer)
-    (used, ncont, rr), chosen = jax.lax.scan(admit, init, jnp.arange(K))
+    init = (sim.hosts.used, sim.hosts.n_containers, pcarry0)
+    (used, ncont, pcarry), chosen = jax.lax.scan(admit, init, jnp.arange(K))
 
     ok = chosen >= 0
     hh = jnp.clip(chosen, 0, H - 1)
@@ -187,9 +213,61 @@ def _place_batched(sim: SimState, cfg: SimConfig, policy: Policy) -> SimState:
         retry=ct.retry.at[cand].set(jnp.where(ok, 0, ct.retry[cand])),
     )
     hosts = sim.hosts._replace(used=used, n_containers=ncont)
-    sched = sim.sched._replace(
-        rr_pointer=rr,
+    sched = policy.carry_commit(sim.sched, pcarry)._replace(
         decisions=sim.sched.decisions + ok.sum().astype(I32))
+    return sim._replace(hosts=hosts, containers=conts, sched=sched)
+
+
+def _migrate_batched(sim: SimState, cfg: SimConfig, policy: Policy) -> SimState:
+    """Migration decision round.
+
+    The decision scan carries only the fields a migration start can change
+    (host ``used``/slot counters, container status) instead of threading the
+    whole SimState; the chosen (container, destination) pairs are applied in
+    one vectorized pass afterwards.  Decisions are identical to the former
+    full-state loop: ``migrate`` reads exactly those carried fields.
+    """
+    C = sim.containers.status.shape[0]
+    H = sim.hosts.cap.shape[0]
+
+    def decide(carry, _):
+        used, ncont, status = carry
+        view = sim._replace(
+            hosts=sim.hosts._replace(used=used, n_containers=ncont),
+            containers=sim.containers._replace(status=status))
+        c, dst = policy.migrate(view, cfg)
+        ok = (c >= 0) & (dst >= 0)
+        cc = jnp.clip(c, 0, C - 1)
+        hh = jnp.clip(dst, 0, H - 1)
+        # reserve destination resources for the duration of the transfer
+        used = used.at[hh].add(sim.containers.req[cc] * ok.astype(F32))
+        ncont = ncont.at[hh].add(ok.astype(I32))
+        status = status.at[cc].set(
+            jnp.where(ok, STATUS_MIGRATING, status[cc]))
+        return (used, ncont, status), (jnp.where(ok, cc, -1),
+                                       jnp.where(ok, hh, -1))
+
+    init = (sim.hosts.used, sim.hosts.n_containers, sim.containers.status)
+    (used, ncont, status), (cs, dsts) = jax.lax.scan(
+        decide, init, None, length=cfg.migrations_per_tick)
+
+    ok = cs >= 0
+    # chosen containers are distinct (STATUS_MIGRATING removes them from the
+    # movable set mid-scan); scatter via an out-of-bounds drop for the -1s
+    idx = jnp.where(ok, cs, C)
+    sel = jnp.zeros((C,), bool).at[idx].set(True, mode="drop")
+    dst_arr = jnp.full((C,), -1, I32).at[idx].set(dsts, mode="drop")
+    ct = sim.containers
+    conts = ct._replace(
+        status=status,                       # MIGRATING set inside the scan
+        mig_dst=jnp.where(sel, dst_arr, ct.mig_dst),
+        mig_bytes_left=jnp.where(sel, cfg.mig_kb_per_gb * ct.req[:, 1],
+                                 ct.mig_bytes_left),
+        retry=jnp.where(sel, 0, ct.retry),
+    )
+    hosts = sim.hosts._replace(used=used, n_containers=ncont)
+    sched = sim.sched._replace(
+        migrations=sim.sched.migrations + ok.sum().astype(I32))
     return sim._replace(hosts=hosts, containers=conts, sched=sched)
 
 
@@ -197,50 +275,20 @@ def phase_schedule(sim: SimState, cfg: SimConfig, policy: Policy) -> SimState:
     """Paper ``schedule`` process: place up to ``placements_per_tick``
     containers, then start up to ``migrations_per_tick`` migrations.
 
-    Uses the batched placement round when the policy provides a placement
-    score (``place_key``) and ``cfg.batched_placement`` is on; otherwise
-    falls back to the sequential reference scan.
+    Both placement paths evaluate the policy's unified scoring API
+    (select_key / place_score / DynamicTerm); ``cfg.batched_placement``
+    selects the batched round or the K=1-derived sequential reference.
     """
     sim = sim._replace(sched=sim.sched._replace(
         decisions=jnp.zeros((), I32), migrations=jnp.zeros((), I32)))
 
-    if cfg.batched_placement and policy.place_key is not None:
+    if cfg.batched_placement:
         sim = _place_batched(sim, cfg, policy)
     else:
         sim = _place_sequential(sim, cfg, policy)
 
-    if policy.migrate is None:
-        return sim
-
-    def mig_body(s: SimState, _):
-        c, dst = policy.migrate(s, cfg)
-        C = s.containers.status.shape[0]
-        H = s.hosts.cap.shape[0]
-        cc = jnp.clip(c, 0, C - 1)
-        hh = jnp.clip(dst, 0, H - 1)
-        ok = (c >= 0) & (dst >= 0)
-        okf = ok.astype(F32)
-        ct = s.containers
-        req = ct.req[cc] * okf
-        # reserve destination resources for the duration of the transfer
-        hosts = s.hosts._replace(
-            used=s.hosts.used.at[hh].add(req),
-            n_containers=s.hosts.n_containers.at[hh].add(ok.astype(I32)))
-        mig_kb = cfg.mig_kb_per_gb * ct.req[cc, 1]
-        conts = ct._replace(
-            status=ct.status.at[cc].set(
-                jnp.where(ok, STATUS_MIGRATING, ct.status[cc])),
-            mig_dst=ct.mig_dst.at[cc].set(jnp.where(ok, hh, ct.mig_dst[cc])),
-            mig_bytes_left=ct.mig_bytes_left.at[cc].set(
-                jnp.where(ok, mig_kb, ct.mig_bytes_left[cc])),
-            retry=ct.retry.at[cc].set(jnp.where(ok, 0, ct.retry[cc])),
-        )
-        s = s._replace(hosts=hosts, containers=conts,
-                       sched=s.sched._replace(
-                           migrations=s.sched.migrations + ok.astype(I32)))
-        return s, None
-
-    sim, _ = jax.lax.scan(mig_body, sim, None, length=cfg.migrations_per_tick)
+    if policy.migrate is not None:
+        sim = _migrate_batched(sim, cfg, policy)
     return sim
 
 
@@ -438,7 +486,9 @@ def make_tick(cfg: SimConfig, policy: Policy, n_hosts: int, n_nodes: int):
         def refresh(net):
             return network.update_delay_matrix(
                 net, n_hosts, n_nodes, mode=cfg.delay_mode,
-                use_kernel=cfg.fw_use_kernel, q_coef=cfg.queue_coef)
+                use_kernel=cfg.fw_use_kernel, q_coef=cfg.queue_coef,
+                util_weight=cfg.netaware_util_weight,
+                cross_leaf_ms=cfg.netaware_cross_leaf_ms)
 
         every = jnp.mod(sim.t.astype(I32), cfg.delay_update_interval) == 0
         sim = sim._replace(

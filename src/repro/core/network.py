@@ -26,6 +26,12 @@ from repro.core.types import NetState
 INF = jnp.float32(1e9)
 MBPS_TO_KBPS = 125.0  # 1 Mbps = 125 KB/s
 LOCAL_RATE_KBPS = 4.0e6  # same-host "loopback" transfer rate
+# comm-cost weights: single source of truth — SimConfig's
+# netaware_util_weight / netaware_cross_leaf_ms default to these, and
+# build_network/set_link_params (which have no SimConfig) use them for the
+# initial table; the engine re-weights from cfg at the first delay refresh.
+DEFAULT_UTIL_WEIGHT = 1.0     # ms-equivalent at 100% path utilization
+DEFAULT_CROSS_LEAF_MS = 0.05  # penalty for transiting the spine
 
 
 # ---------------------------------------------------------------------------
@@ -98,7 +104,7 @@ def build_network(spec: SpineLeafSpec) -> NetState:
     delay0 = path_delay_matrix(
         jnp.asarray(base_delay), jnp.asarray(path_links))
     pl = jnp.asarray(path_links)
-    return NetState(
+    net = NetState(
         link_bw=jnp.asarray(link_bw),
         link_delay=jnp.asarray(base_delay),
         link_loss=jnp.asarray(loss),
@@ -110,7 +116,9 @@ def build_network(spec: SpineLeafSpec) -> NetState:
         path_loss=path_loss_matrix(jnp.asarray(loss), pl),
         link_util=jnp.zeros((E,), jnp.float32),
         delay_matrix=delay0,
+        comm_cost=jnp.zeros((H, H), jnp.float32),
     )
+    return net._replace(comm_cost=pairwise_comm_cost(net))
 
 
 def set_link_params(net: NetState, bw: float | None = None,
@@ -125,7 +133,7 @@ def set_link_params(net: NetState, bw: float | None = None,
         net = net._replace(
             link_loss=new_loss,
             path_loss=path_loss_matrix(new_loss, net.path_links))
-    return net
+    return net._replace(comm_cost=pairwise_comm_cost(net))
 
 
 # ---------------------------------------------------------------------------
@@ -158,6 +166,36 @@ def path_loss_matrix(link_loss: jnp.ndarray,
     return 1.0 - jnp.exp(keep[path_links].sum(axis=-1))  # [-1] pad hits the 0
 
 
+def path_util_matrix(net: NetState) -> jnp.ndarray:
+    """Max link utilization along the ECMP path between every host pair.
+
+    The bottleneck view of current congestion: a flow between (i, j) is
+    limited by the hottest link on its fixed path.  Pad slots (-1) index the
+    appended zero, so same-host pairs report 0 utilization.
+    """
+    padded = jnp.concatenate([net.link_util,
+                              jnp.zeros((1,), net.link_util.dtype)])
+    return padded[net.path_links].max(axis=-1)
+
+
+def pairwise_comm_cost(net: NetState,
+                       util_weight: float = DEFAULT_UTIL_WEIGHT,
+                       cross_leaf_ms: float = DEFAULT_CROSS_LEAF_MS
+                       ) -> jnp.ndarray:
+    """Expected cost [ms-equivalent] of communicating between host pairs.
+
+    ``delay_matrix`` (the paper's ping-refreshed D, already congestion-
+    adjusted at refresh time) + ``util_weight`` * bottleneck utilization of
+    the ECMP path + a ``cross_leaf_ms`` penalty for pairs whose traffic must
+    transit the spine (path_nlinks == 4; same-leaf pairs use 2 links and
+    same-host pairs 0).  Refreshed onto ``NetState.comm_cost`` together with
+    the delay matrix; the network-aware policies score hosts against it.
+    """
+    cross_spine = (net.path_nlinks >= 4).astype(jnp.float32)
+    return (net.delay_matrix + util_weight * path_util_matrix(net)
+            + cross_leaf_ms * cross_spine)
+
+
 def adjacency_from_links(net: NetState, link_delay: jnp.ndarray,
                          n_nodes: int) -> jnp.ndarray:
     """Symmetric node-graph adjacency with link delays; INF where no edge."""
@@ -182,12 +220,17 @@ def floyd_warshall_ref(A: jnp.ndarray) -> jnp.ndarray:
 
 def update_delay_matrix(net: NetState, n_hosts: int, n_nodes: int,
                         mode: str = "path", use_kernel: bool = False,
-                        q_coef: float = 0.5) -> NetState:
-    """Refresh the paper's delay_matrix from current congestion.
+                        q_coef: float = 0.5,
+                        util_weight: float = DEFAULT_UTIL_WEIGHT,
+                        cross_leaf_ms: float = DEFAULT_CROSS_LEAF_MS
+                        ) -> NetState:
+    """Refresh the paper's delay_matrix (and comm_cost) from congestion.
 
     mode='path'  — sum link delays along the fixed ECMP path (O(H^2)).
     mode='fw'    — full APSP over the node graph (the SDN-controller view);
                    uses the Pallas blocked kernel when ``use_kernel``.
+    The pairwise communication-cost table consumed by the network-aware
+    policies is rebuilt from the fresh delay matrix in the same pass.
     """
     d_link = congested_link_delay(net, q_coef=q_coef)
     if mode == "path":
@@ -200,7 +243,9 @@ def update_delay_matrix(net: NetState, n_hosts: int, n_nodes: int,
         else:
             D_full = floyd_warshall_ref(A)
         D = D_full[:n_hosts, :n_hosts]
-    return net._replace(delay_matrix=D)
+    net = net._replace(delay_matrix=D)
+    return net._replace(comm_cost=pairwise_comm_cost(
+        net, util_weight=util_weight, cross_leaf_ms=cross_leaf_ms))
 
 
 # ---------------------------------------------------------------------------

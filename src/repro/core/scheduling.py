@@ -1,12 +1,24 @@
-"""Container scheduling module (paper §3.5).
+"""Container scheduling module (paper §3.5) — unified score-based Policy API.
 
-Selection / Placement / Execution interfaces as pure functions over the SoA
-state. All five paper algorithms are implemented; users extend by registering
-a placement (and optionally a migration) function — exactly the paper's
-"flexible and scalable interface for scheduling algorithms".
+Every algorithm is expressed through ONE batched scoring interface:
 
-Placement signature:   place(sim, c_idx) -> (host_idx | -1, new_sched)
-Migration signature:   migrate(sim)      -> (container | -1, dst | -1)
+* ``select_key(sim) -> i32[C]`` — selection order over containers (lower =
+  scheduled earlier, ``INT_BIG`` = not schedulable this tick);
+* ``place_score(sim, cand, cfg) -> f32[K, H]`` — per-candidate host
+  preference (lower = better), computed once per placement round;
+* optional ``DynamicTerm`` — a scan-carried score component for policies
+  whose host preference depends on decisions made earlier in the same round
+  (Round's rotating pointer, JobGroup/NetAware same-job co-location counts).
+
+Both engine paths consume the SAME hooks: the batched conflict-resolved
+round (``engine._place_batched``) and the sequential reference path
+(``engine._place_sequential``, a K=1 degenerate round applied
+``placements_per_tick`` times) — so batched == sequential placements by
+construction for every registered policy, including the co-location ones.
+
+Migration signature: ``migrate(sim, cfg) -> (container | -1, dst | -1)``.
+Users extend by registering a Policy — the paper's "flexible and scalable
+interface for scheduling algorithms".
 """
 from __future__ import annotations
 
@@ -16,25 +28,33 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.core import network
 from repro.core.datacenter import SimConfig
 from repro.core.types import (
     STATUS_COMMUNICATING, STATUS_INACTIVE, STATUS_MIGRATING, STATUS_RUNNING,
     STATUS_WAITING, SimState,
 )
 
-BIG = jnp.float32(1e18)
+BIG = jnp.float32(1e18)          # host-score sentinel (infeasible)
+INT_BIG = jnp.int32(2**31 - 1)   # selection-key sentinel (unschedulable)
 
 
 # ---------------------------------------------------------------------------
 # Shared predicates
 # ---------------------------------------------------------------------------
-def feasible_mask(sim: SimState, c: jnp.ndarray,
-                  cfg: SimConfig) -> jnp.ndarray:
-    """Hosts that can take container ``c``: resources + net-node cap."""
-    req = sim.containers.req[c]                       # [3]
-    fits = ((sim.hosts.used + req[None, :]) <= sim.hosts.cap).all(axis=1)
-    slots = sim.hosts.n_containers < cfg.max_containers_per_host
-    return fits & slots
+def feasible_hosts(cap: jnp.ndarray, used: jnp.ndarray, ncont: jnp.ndarray,
+                   req: jnp.ndarray, cfg: SimConfig) -> jnp.ndarray:
+    """Hosts that can take a container requesting ``req``: resource headroom
+    + a free container slot (``max_containers_per_host``, the per-host
+    net-node cap).
+
+    Takes the raw counters rather than the SimState so the engine can feed
+    it either the live state (sequential path, migration sources) or the
+    in-round counters carried by the batched admit scan — one predicate,
+    every feasibility decision.
+    """
+    fits = ((used + req[None, :]) <= cap).all(axis=1)
+    return fits & (ncont < cfg.max_containers_per_host)
 
 
 def schedulable_mask(sim: SimState) -> jnp.ndarray:
@@ -44,20 +64,24 @@ def schedulable_mask(sim: SimState) -> jnp.ndarray:
     return arrived & ((st == STATUS_INACTIVE) | (st == STATUS_WAITING))
 
 
+def rank_key(values: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Sortable i32 selection key: rank under lexicographic (values, index).
+
+    A stable argsort gives every slot its rank (< C, so no overflow at any
+    capacity — unlike ``values * C + index`` float encodings, which lose the
+    index tie-break once the combined key exceeds f32's 2^24 integer range).
+    Slots outside ``mask`` get ``INT_BIG``.
+    """
+    C = values.shape[0]
+    order = jnp.argsort(values, stable=True)
+    rank = jnp.zeros((C,), jnp.int32).at[order].set(
+        jnp.arange(C, dtype=jnp.int32))
+    return jnp.where(mask, rank, INT_BIG)
+
+
 def select_key_fifo(sim: SimState) -> jnp.ndarray:
-    """FIFO selection key over ALL containers: lower = scheduled earlier;
-    ``BIG`` marks unschedulable slots.  Batched placement ranks by this key
-    once per tick instead of re-running an argmin per placement."""
-    mask = schedulable_mask(sim)
-    C = mask.shape[0]
-    return jnp.where(mask, sim.containers.submit_t * C + jnp.arange(C), BIG)
-
-
-def select_fifo(sim: SimState) -> jnp.ndarray:
-    """Paper default selection: earliest-submitted schedulable container."""
-    key = select_key_fifo(sim)
-    c = jnp.argmin(key)
-    return jnp.where(key[c] < BIG, c, -1)
+    """Paper default selection: earliest-submitted first, index tie-break."""
+    return rank_key(sim.containers.submit_t, schedulable_mask(sim))
 
 
 def _first_true(order_key: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
@@ -67,102 +91,77 @@ def _first_true(order_key: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
-# Placement strategies (paper §3.5 algorithms 2-5)
-# ---------------------------------------------------------------------------
-def place_firstfit(sim: SimState, c: jnp.ndarray, cfg: SimConfig):
-    """FirstFit [36]: lowest-numbered host satisfying the constraints."""
-    mask = feasible_mask(sim, c, cfg)
-    H = mask.shape[0]
-    return _first_true(jnp.arange(H, dtype=jnp.float32), mask), sim.sched
-
-
-def place_round(sim: SimState, c: jnp.ndarray, cfg: SimConfig):
-    """Round [37]: first feasible host after the previously chosen one."""
-    mask = feasible_mask(sim, c, cfg)
-    H = mask.shape[0]
-    offset = jnp.mod(jnp.arange(H) - sim.sched.rr_pointer - 1, H)
-    h = _first_true(offset.astype(jnp.float32), mask)
-    new_ptr = jnp.where(h >= 0, h, sim.sched.rr_pointer)
-    return h, sim.sched._replace(rr_pointer=new_ptr)
-
-
-def place_performance_first(sim: SimState, c: jnp.ndarray, cfg: SimConfig):
-    """PerformanceFirst (DRAPS-derived): fastest host for the container's
-    primary resource among feasible hosts."""
-    mask = feasible_mask(sim, c, cfg)
-    ctype = sim.containers.ctype[c]
-    speed = sim.hosts.speed[:, ctype]
-    H = mask.shape[0]
-    # maximize speed -> minimize (-speed); tie-break on host index
-    key = -speed * H + jnp.arange(H, dtype=jnp.float32) * 1e-3
-    return _first_true(key, mask), sim.sched
-
-
-def place_jobgroup(sim: SimState, c: jnp.ndarray, cfg: SimConfig):
-    """JobGroup (CA-WFD-derived): host holding the most dependent containers
-    (same job); if none deployed anywhere, worst-fit on available resources."""
-    mask = feasible_mask(sim, c, cfg)
-    H = mask.shape[0]
-    job = sim.containers.job[c]
-    st = sim.containers.status
-    deployed = ((st == STATUS_RUNNING) | (st == STATUS_COMMUNICATING) |
-                (st == STATUS_MIGRATING))
-    same_job = deployed & (sim.containers.job == job) & (sim.containers.host >= 0)
-    counts = jnp.zeros((H,), jnp.float32).at[
-        jnp.clip(sim.containers.host, 0, H - 1)
-    ].add(same_job.astype(jnp.float32))
-    any_dep = counts.sum() > 0
-    # worst-fit score: total normalized free resources
-    free = (sim.hosts.cap - sim.hosts.used) / jnp.maximum(sim.hosts.cap, 1e-6)
-    avail = free.sum(axis=1)
-    key_dep = -counts * H + jnp.arange(H, dtype=jnp.float32) * 1e-3
-    key_wf = -avail * H + jnp.arange(H, dtype=jnp.float32) * 1e-3
-    key = jnp.where(any_dep, key_dep, key_wf)
-    return _first_true(key, mask), sim.sched
-
-
-# ---------------------------------------------------------------------------
-# Batched placement scores (engine._place_batched)
+# Static placement scores (paper §3.5 algorithms 2-3)
 #
-# ``place_key(sim, cand, cfg) -> f32[K, H]``: per-candidate host preference
-# (lower = better), computed ONCE per tick for the K ranked candidates.
-# Feasibility is NOT baked in — the admit scan masks infeasible hosts against
-# its live resource counters so intra-round decisions see each other.
-# ``place_key_dynamic(sim, rr_pointer) -> f32[H]``, when present, REPLACES
-# the candidate's row with one built from scheduler state carried through
-# the admit scan (Round's rotating pointer is the one policy that needs
-# this; its static ``place_key`` then only opts in to the batched path).
+# ``place_score(sim, cand, cfg) -> f32[K, H]``: per-candidate host preference
+# (lower = better; argmin breaks ties toward the lowest host index).
+# Feasibility is NOT baked in — the engine masks infeasible hosts against its
+# live resource counters so intra-round decisions see each other.
 # ---------------------------------------------------------------------------
-def place_key_firstfit(sim: SimState, cand: jnp.ndarray,
-                       cfg: SimConfig) -> jnp.ndarray:
+def score_firstfit(sim: SimState, cand: jnp.ndarray,
+                   cfg: SimConfig) -> jnp.ndarray:
+    """FirstFit [36]: lowest-numbered host satisfying the constraints."""
     H = sim.hosts.cap.shape[0]
     return jnp.broadcast_to(jnp.arange(H, dtype=jnp.float32),
                             (cand.shape[0], H))
 
 
-def place_key_round_dynamic(sim: SimState,
-                            rr_pointer: jnp.ndarray) -> jnp.ndarray:
-    H = sim.hosts.cap.shape[0]
-    return jnp.mod(jnp.arange(H) - rr_pointer - 1, H).astype(jnp.float32)
-
-
-def place_key_performance_first(sim: SimState, cand: jnp.ndarray,
-                                cfg: SimConfig) -> jnp.ndarray:
-    H = sim.hosts.cap.shape[0]
+def score_performance_first(sim: SimState, cand: jnp.ndarray,
+                            cfg: SimConfig) -> jnp.ndarray:
+    """PerformanceFirst (DRAPS-derived): fastest host for the candidate's
+    primary resource."""
     ctype = sim.containers.ctype[cand]                       # [K]
-    speed = sim.hosts.speed.T[ctype]                         # [K, H]
-    return -speed * H + jnp.arange(H, dtype=jnp.float32)[None, :] * 1e-3
+    return -sim.hosts.speed.T[ctype]                         # [K, H]
 
 
-def place_key_jobgroup(sim: SimState, cand: jnp.ndarray,
-                       cfg: SimConfig) -> jnp.ndarray:
-    """Same-job co-location counts + worst-fit fallback, per candidate.
+# ---------------------------------------------------------------------------
+# Scan-carried dynamic terms
+#
+# A DynamicTerm replaces the static score row for policies whose preference
+# depends on the round's earlier decisions.  The carry is a pytree threaded
+# through the engine's admit scan:
+#   init(sim, cand, cfg) -> carry            once per round
+#   row(sim, cfg, carry, k, cand, used) -> f32[H]   per candidate
+#   update(sim, cfg, carry, k, cand, hh, ok) -> carry   after each admit
+#   commit(sched, carry) -> sched            persist across ticks (Round)
+# ---------------------------------------------------------------------------
+def _commit_noop(sched, carry):
+    return sched
 
-    Counts are taken at the start of the round ([K, C] mask scattered onto
-    hosts) — candidates admitted earlier in the same round do not re-raise
-    the co-location score of later ones (documented approximation to the
-    sequential reference; resource feasibility IS still live in the scan).
-    """
+
+@dataclasses.dataclass(frozen=True)
+class DynamicTerm:
+    init: Callable
+    row: Callable
+    update: Callable
+    commit: Callable = _commit_noop
+
+
+# --- Round (paper §3.5 algorithm: first feasible host after the last used) --
+def _round_init(sim: SimState, cand: jnp.ndarray, cfg: SimConfig):
+    return sim.sched.rr_pointer
+
+
+def _round_row(sim: SimState, cfg: SimConfig, rr, k, cand, used):
+    H = sim.hosts.cap.shape[0]
+    return jnp.mod(jnp.arange(H) - rr - 1, H).astype(jnp.float32)
+
+
+def _round_update(sim: SimState, cfg: SimConfig, rr, k, cand, hh, ok):
+    return jnp.where(ok, hh, rr)
+
+
+def _round_commit(sched, rr):
+    return sched._replace(rr_pointer=rr)
+
+
+ROUND_DYNAMIC = DynamicTerm(_round_init, _round_row, _round_update,
+                            _round_commit)
+
+
+# --- Same-job co-location carry (JobGroup, NetAware) -----------------------
+def same_job_host_counts(sim: SimState, cand: jnp.ndarray) -> jnp.ndarray:
+    """[K, H] deployed same-job container count per host, per candidate."""
     H = sim.hosts.cap.shape[0]
     ct = sim.containers
     st = ct.status
@@ -170,56 +169,119 @@ def place_key_jobgroup(sim: SimState, cand: jnp.ndarray,
                  (st == STATUS_MIGRATING)) & (ct.host >= 0))
     same = deployed[None, :] & (ct.job[None, :] == ct.job[cand][:, None])
     hostc = jnp.clip(ct.host, 0, H - 1)
-    counts = jax.vmap(
+    return jax.vmap(
         lambda s: jnp.zeros((H,), jnp.float32).at[hostc].add(s)
-    )(same.astype(jnp.float32))                              # [K, H]
-    any_dep = counts.sum(axis=1, keepdims=True) > 0
-    free = (sim.hosts.cap - sim.hosts.used) / jnp.maximum(sim.hosts.cap, 1e-6)
-    avail = free.sum(axis=1)                                 # [H]
-    tie = jnp.arange(H, dtype=jnp.float32) * 1e-3
-    key_dep = -counts * H + tie[None, :]
-    key_wf = (-avail * H + tie)[None, :]
-    return jnp.where(any_dep, key_dep, key_wf)
+    )(same.astype(jnp.float32))
+
+
+def _coloc_init(sim: SimState, cand: jnp.ndarray, cfg: SimConfig):
+    return same_job_host_counts(sim, cand)
+
+
+def _coloc_update(sim: SimState, cfg: SimConfig, counts, k, cand, hh, ok):
+    """Admitting candidate k onto host hh raises the co-location count of
+    every later same-job candidate — the intra-round carry that makes the
+    batched round match the sequential reference exactly."""
+    same = sim.containers.job[cand] == sim.containers.job[cand[k]]
+    inc = same.astype(jnp.float32) * ok.astype(jnp.float32)
+    return counts.at[:, hh].add(inc)
+
+
+def _worst_fit_row(sim: SimState, used: jnp.ndarray) -> jnp.ndarray:
+    """Most total normalized free resources first (lower key = better)."""
+    free = (sim.hosts.cap - used) / jnp.maximum(sim.hosts.cap, 1e-6)
+    return -free.sum(axis=1)
+
+
+def _jobgroup_row(sim: SimState, cfg: SimConfig, counts, k, cand, used):
+    """JobGroup (CA-WFD-derived): host holding the most same-job containers;
+    worst-fit on free resources while the job has none deployed."""
+    cnt = counts[k]
+    return jnp.where(cnt.sum() > 0, -cnt, _worst_fit_row(sim, used))
+
+
+JOBGROUP_DYNAMIC = DynamicTerm(_coloc_init, _jobgroup_row, _coloc_update)
+
+
+def _netaware_row(sim: SimState, cfg: SimConfig, counts, k, cand, used):
+    """NetAware: mean expected communication cost from each host to the
+    candidate's deployed same-job peers, under the current fabric state.
+
+    ``NetState.comm_cost`` (delay matrix + bottleneck link utilization along
+    the ECMP path + cross-leaf penalty, refreshed with the delay matrix)
+    prices every host pair; peers placed earlier in the same round are in
+    ``counts`` via the co-location carry.  Jobs with no deployed peers fall
+    back to worst-fit, like JobGroup.
+    """
+    cnt = counts[k]                                          # [H] peers/host
+    cost = cnt @ sim.net.comm_cost                           # [H] total cost
+    return jnp.where(cnt.sum() > 0, cost / jnp.maximum(cnt.sum(), 1.0),
+                     _worst_fit_row(sim, used))
+
+
+NETAWARE_DYNAMIC = DynamicTerm(_coloc_init, _netaware_row, _coloc_update)
 
 
 # ---------------------------------------------------------------------------
-# OverloadMigrate (paper §3.5 algorithm 1, DRAPS-derived)
+# Migration (paper §3.5 algorithm 1, DRAPS-derived)
 # ---------------------------------------------------------------------------
-def overload_migrate(sim: SimState, cfg: SimConfig):
-    """Pick (container, destination) relieving the most overloaded host.
+def _overload_source(sim: SimState, cfg: SimConfig):
+    """Shared source/container selection for the migration policies.
 
-    * source: host with max over-threshold utilization on any resource;
-    * container: deployed container on it consuming the most of the host's
-      bottleneck resource (and not already migrating/communicating);
-    * destination: feasible host with all utilizations < idle threshold.
-    Returns (-1, -1) when no (source, container, destination) triple exists.
+    Returns (src, cont, src_c, dst_mask):
+    * src: host with max over-threshold utilization on any resource (-1 none);
+    * cont: RUNNING container on it consuming the most of the host's
+      bottleneck resource;
+    * dst_mask: feasible hosts with all utilizations < idle threshold.
     """
     util = sim.hosts.used / jnp.maximum(sim.hosts.cap, 1e-6)   # [H, 3]
     worst = util.max(axis=1)
     overloaded = worst > cfg.overload_threshold
     H = worst.shape[0]
-    src = _first_true(-worst * H + jnp.arange(H, dtype=jnp.float32) * 1e-3,
-                      overloaded)
+    src = _first_true(-worst, overloaded)
     src_c = jnp.clip(src, 0, H - 1)
     bottleneck = jnp.argmax(util[src_c])                       # resource index
 
     st = sim.containers.status
     movable = (st == STATUS_RUNNING) & (sim.containers.host == src_c)
     usage = sim.containers.req[:, bottleneck]
+    cont = _first_true(-usage, movable)
     C = movable.shape[0]
-    cont = _first_true(-usage * C + jnp.arange(C, dtype=jnp.float32) * 1e-3,
-                       movable)
     cont_c = jnp.clip(cont, 0, C - 1)
 
     req = sim.containers.req[cont_c]
-    fits = ((sim.hosts.used + req[None, :]) <= sim.hosts.cap).all(axis=1)
+    feas = feasible_hosts(sim.hosts.cap, sim.hosts.used,
+                          sim.hosts.n_containers, req, cfg)
     idle = (util < cfg.idle_threshold).all(axis=1)
-    slots = sim.hosts.n_containers < cfg.max_containers_per_host
-    dst_mask = fits & idle & slots & (jnp.arange(H) != src_c)
-    dst = _first_true(jnp.arange(H, dtype=jnp.float32), dst_mask)
+    dst_mask = feas & idle & (jnp.arange(H) != src_c)
+    return src, cont, src_c, dst_mask
 
+
+def _migration_pair(src, cont, dst):
     ok = (src >= 0) & (cont >= 0) & (dst >= 0)
     return jnp.where(ok, cont, -1), jnp.where(ok, dst, -1)
+
+
+def overload_migrate(sim: SimState, cfg: SimConfig):
+    """Relieve the most overloaded host; first-fit destination.
+
+    Returns (-1, -1) when no (source, container, destination) triple exists.
+    """
+    src, cont, src_c, dst_mask = _overload_source(sim, cfg)
+    H = dst_mask.shape[0]
+    dst = _first_true(jnp.arange(H, dtype=jnp.float32), dst_mask)
+    return _migration_pair(src, cont, dst)
+
+
+def congestion_migrate(sim: SimState, cfg: SimConfig):
+    """Congestion-aware variant: same source/container selection, but the
+    destination minimizes the bottleneck link utilization of the ECMP path
+    the migration flow will traverse (index tie-break) — instead of blindly
+    taking the first feasible idle host across a hot spine."""
+    src, cont, src_c, dst_mask = _overload_source(sim, cfg)
+    path_util = network.path_util_matrix(sim.net)[src_c]       # f32[H]
+    dst = _first_true(path_util, dst_mask)
+    return _migration_pair(src, cont, dst)
 
 
 # ---------------------------------------------------------------------------
@@ -227,22 +289,50 @@ def overload_migrate(sim: SimState, cfg: SimConfig):
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class Policy:
-    """Scheduling algorithm = selection + placement (+ optional migration).
+    """Scheduling algorithm = selection key + placement score (+ migration).
 
-    ``place``/``select`` are the sequential per-container interface (the
-    paper's).  ``select_key``/``place_key`` are the batched interface used
-    by the engine's conflict-resolved placement round; policies without a
-    ``place_key`` automatically run on the sequential reference path.
+    ``place_score`` may be omitted when ``dynamic`` fully determines the
+    host preference (JobGroup, NetAware); ``dynamic`` may be omitted for
+    purely static scores (FirstFit, PerformanceFirst).  The engine consumes
+    either through :meth:`host_row`, identically on the batched and the
+    derived sequential path.
     """
 
     name: str
-    place: Callable  # (sim, c, cfg) -> (host, sched)
-    select: Callable = select_fifo
-    migrate: Callable | None = None  # (sim, cfg) -> (container, dst)
-    # batched interface
-    select_key: Callable = select_key_fifo   # (sim) -> f32[C], BIG = skip
-    place_key: Callable | None = None        # (sim, cand, cfg) -> f32[K, H]
-    place_key_dynamic: Callable | None = None  # (sim, rr_pointer) -> f32[H]
+    place_score: Callable | None = None  # (sim, cand, cfg) -> f32[K, H]
+    select_key: Callable = select_key_fifo  # (sim) -> i32[C], INT_BIG = skip
+    dynamic: DynamicTerm | None = None
+    migrate: Callable | None = None      # (sim, cfg) -> (container, dst)
+
+    def __post_init__(self):
+        if self.place_score is None and self.dynamic is None:
+            raise ValueError(
+                f"policy {self.name!r} needs a place_score or a DynamicTerm")
+        if self.place_score is not None and self.dynamic is not None:
+            raise ValueError(
+                f"policy {self.name!r}: a DynamicTerm replaces the static "
+                "score row entirely — fold the static part into "
+                "DynamicTerm.row instead of providing both")
+
+    # -- engine hooks (no-ops when the policy has no dynamic term) ----------
+    def host_row(self, sim, cfg, score, carry, k, cand, used) -> jnp.ndarray:
+        """The one scoring rule both engine paths evaluate: the f32[H]
+        preference row for candidate ``k`` given the round's live state."""
+        if self.dynamic is None:
+            return score[k]
+        return self.dynamic.row(sim, cfg, carry, k, cand, used)
+
+    def carry_init(self, sim, cand, cfg):
+        return () if self.dynamic is None else self.dynamic.init(sim, cand, cfg)
+
+    def carry_update(self, sim, cfg, carry, k, cand, hh, ok):
+        if self.dynamic is None:
+            return carry
+        return self.dynamic.update(sim, cfg, carry, k, cand, hh, ok)
+
+    def carry_commit(self, sched, carry):
+        return sched if self.dynamic is None else self.dynamic.commit(
+            sched, carry)
 
 
 _REGISTRY: dict[str, Policy] = {}
@@ -265,11 +355,10 @@ def list_policies() -> list[str]:
     return sorted(_REGISTRY)
 
 
-register(Policy("firstfit", place_firstfit, place_key=place_key_firstfit))
-register(Policy("round", place_round, place_key=place_key_firstfit,
-                place_key_dynamic=place_key_round_dynamic))
-register(Policy("performance_first", place_performance_first,
-                place_key=place_key_performance_first))
-register(Policy("jobgroup", place_jobgroup, place_key=place_key_jobgroup))
-register(Policy("overload_migrate", place_firstfit, migrate=overload_migrate,
-                place_key=place_key_firstfit))
+register(Policy("firstfit", score_firstfit))
+register(Policy("round", dynamic=ROUND_DYNAMIC))
+register(Policy("performance_first", score_performance_first))
+register(Policy("jobgroup", dynamic=JOBGROUP_DYNAMIC))
+register(Policy("netaware", dynamic=NETAWARE_DYNAMIC,
+                migrate=congestion_migrate))
+register(Policy("overload_migrate", score_firstfit, migrate=overload_migrate))

@@ -97,6 +97,11 @@ class NetState(NamedTuple):
     # dynamic ----------------------------------------------------------------
     link_util: jnp.ndarray    # f32[E] utilization from last tick's flows
     delay_matrix: jnp.ndarray  # f32[H, H] host-to-host delay (the paper's D)
+    # expected cost of one unit of communication between every host pair:
+    # delay + congestion along the ECMP path + a cross-leaf locality penalty.
+    # Refreshed together with the delay matrix (network.pairwise_comm_cost);
+    # consumed by the network-aware scheduling policies.
+    comm_cost: jnp.ndarray    # f32[H, H]
 
 
 class SchedState(NamedTuple):

@@ -11,6 +11,7 @@ the engine activates when ``t >= submit_t``.
 """
 from __future__ import annotations
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.datacenter import SimConfig
@@ -29,6 +30,19 @@ def _assign_jobs_tasks(rng: np.random.Generator, n_jobs: int, n_tasks: int,
     cont_task = np.sort(cont_task)
     cont_job = task_job[cont_task]
     return cont_job.astype(np.int32), cont_task.astype(np.int32)
+
+
+def _comm_schedule(duration: np.ndarray, n_comms: np.ndarray) -> np.ndarray:
+    """Work-unit gap between communication trigger points, for every slot.
+
+    Trigger points are spread evenly through the work units; the first one
+    sits at ``gap``.  Padded slots (duration 0) get inf = never trigger.
+    The one place this rule lives — both generators and any duration
+    rewrite must go through it so ``comm_work_gap``/``next_comm_at`` stay
+    consistent.
+    """
+    return np.where(duration > 0, duration / (n_comms + 1),
+                    np.inf).astype(np.float32)
 
 
 def _fill(state: ContainerState, rng: np.random.Generator, cfg: SimConfig,
@@ -53,11 +67,8 @@ def _fill(state: ContainerState, rng: np.random.Generator, cfg: SimConfig,
                                size=n)
     comm_kb = np.zeros(C, np.float32)
     comm_kb[:n] = rng.uniform(*cfg.comm_kb_range, size=n)
-    # communication trigger points spread evenly through the work units
-    gap = np.full(C, np.inf, np.float32)
-    gap[:n] = duration[:n] / (n_comms[:n] + 1)
-    first_at = np.full(C, np.inf, np.float32)
-    first_at[:n] = gap[:n]
+    gap = _comm_schedule(duration, n_comms)
+    first_at = gap.copy()
 
     submit_t = np.full(C, np.inf, np.float32)
     submit_t[:n] = submit
@@ -106,14 +117,14 @@ def trace_workload(cfg: SimConfig, seed: int = 0,
     job_arrival = np.cumsum(inter).astype(np.float32)
     submit = job_arrival[cont_job]
     state = _fill(empty_containers(C), rng, cfg, cont_job, cont_task, submit)
-    # heavy-tailed durations typical of GPU training jobs
-    import jax.numpy as jnp
+    # heavy-tailed durations typical of GPU training jobs; the comm schedule
+    # is rebuilt through the same rule _fill used so padded slots stay inf
     n = cont_job.shape[0]
     dur = np.zeros(C, np.float32)
     dur[:n] = np.clip(rng.lognormal(np.log(25.0), 0.6, size=n), 5.0, 300.0)
-    gap = np.where(dur > 0, dur / (np.asarray(state.n_comms_left) + 1), np.inf)
+    gap = _comm_schedule(dur, np.asarray(state.n_comms_left))
     return state._replace(
         duration=jnp.asarray(dur),
-        comm_work_gap=jnp.asarray(gap.astype(np.float32)),
-        next_comm_at=jnp.asarray(gap.astype(np.float32)),
+        comm_work_gap=jnp.asarray(gap),
+        next_comm_at=jnp.asarray(gap),
     )

@@ -1,6 +1,7 @@
 """DCSim CLI: run the paper's container-scheduling simulation.
 
     PYTHONPATH=src python -m repro.launch.sim --policy jobgroup --horizon 120
+    PYTHONPATH=src python -m repro.launch.sim --policy netaware --bw 200
     PYTHONPATH=src python -m repro.launch.sim --policy all --bw 200 --loss 0.02
 """
 from __future__ import annotations
@@ -47,9 +48,13 @@ def main() -> None:
     ap.add_argument("--workload", default="paper",
                     choices=["paper", "trace"])
     ap.add_argument("--csv", default=None, help="per-tick metrics CSV path")
+    ap.add_argument("--sequential", action="store_true",
+                    help="run the sequential reference placement path "
+                         "instead of the batched round")
     args = ap.parse_args()
 
-    cfg = SimConfig(horizon=args.horizon)
+    cfg = SimConfig(horizon=args.horizon,
+                    batched_placement=not args.sequential)
     policies = list_policies() if args.policy == "all" else [args.policy]
     for p in policies:
         rep = run_one(p, cfg, bw=args.bw, loss=args.loss, seed=args.seed,

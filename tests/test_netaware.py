@@ -1,0 +1,167 @@
+"""Network-aware scheduling: the netaware placement policy and the
+congestion-aware migration destination picker (paper thesis: scheduling
+must react to the fabric, not just to CPU/MEM/GPU headroom)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (SimConfig, build_paper_hosts, build_paper_network,
+                        get_policy, init_sim, paper_workload, run_sim,
+                        summarize)
+from repro.core.engine import phase_arrive, phase_schedule
+from repro.core.network import (SpineLeafSpec, build_network,
+                                pairwise_comm_cost, path_util_matrix)
+from repro.core.scheduling import congestion_migrate, overload_migrate
+from repro.core.types import STATUS_RUNNING
+
+N_LEAF = 4
+
+
+def congested_spine_cfg(**kw):
+    """Chatty jobs (6 containers each, heavy comms) on a fabric whose
+    leaf-spine links have 10% of the host-leaf bandwidth."""
+    base = dict(n_jobs=6, n_tasks=36, n_containers=36, horizon=120,
+                arrival_window=5.0, placements_per_tick=16,
+                max_containers_per_host=3,
+                n_comms_range=(3, 5), comm_kb_range=(20000.0, 60000.0))
+    base.update(kw)
+    return SimConfig(**base)
+
+
+def congested_spine_net():
+    spec = SpineLeafSpec(n_spine=2, n_leaf=N_LEAF, n_hosts=20,
+                         host_leaf_bw=1000.0, leaf_spine_bw=100.0)
+    return spec, build_network(spec)
+
+
+# ---------------------------------------------------------------------------
+# comm-cost helpers
+# ---------------------------------------------------------------------------
+def test_path_util_matrix_reflects_hot_spine():
+    spec, net = congested_spine_net()
+    H = spec.n_hosts
+    net = net._replace(link_util=net.link_util.at[H:].set(0.9))  # spine hot
+    U = np.asarray(path_util_matrix(net))
+    leaf = np.arange(H) % N_LEAF
+    same_leaf = leaf[:, None] == leaf[None, :]
+    assert np.allclose(U[same_leaf], 0.0)          # never touches the spine
+    assert np.allclose(U[~same_leaf], 0.9)
+    assert np.allclose(np.diag(U), 0.0)
+
+
+def test_pairwise_comm_cost_orders_locality():
+    """Same host < same leaf < cross-spine, and spine congestion only
+    raises the cross-spine entries."""
+    spec, net = congested_spine_net()
+    H = spec.n_hosts
+    cost0 = np.asarray(pairwise_comm_cost(net))
+    leaf = np.arange(H) % N_LEAF
+    same_leaf = (leaf[:, None] == leaf[None, :]) & ~np.eye(H, dtype=bool)
+    cross = leaf[:, None] != leaf[None, :]
+    assert np.allclose(np.diag(cost0), 0.0)
+    assert cost0[same_leaf].max() < cost0[cross].min()
+    hot = net._replace(link_util=net.link_util.at[H:].set(0.9))
+    cost_hot = np.asarray(pairwise_comm_cost(hot))
+    np.testing.assert_allclose(cost_hot[same_leaf], cost0[same_leaf])
+    assert (cost_hot[cross] > cost0[cross]).all()
+
+
+# ---------------------------------------------------------------------------
+# netaware placement
+# ---------------------------------------------------------------------------
+def test_netaware_colocates_with_deployed_peer():
+    """A candidate whose job already has a deployed container lands on that
+    container's host (comm cost 0) while slots remain."""
+    cfg = congested_spine_cfg()
+    spec, net = congested_spine_net()
+    hosts = build_paper_hosts()
+    sim = init_sim(hosts, paper_workload(cfg, seed=0), net, seed=0)
+    ct = sim.containers
+    anchor_host = 7
+    jobs = np.asarray(ct.job)
+    biggest = np.bincount(jobs[jobs >= 0]).argmax()   # chattiest job
+    members = np.where(jobs == biggest)[0]
+    assert len(members) >= 3
+    c0 = int(members[0])
+    ct = ct._replace(status=ct.status.at[c0].set(STATUS_RUNNING),
+                     host=ct.host.at[c0].set(anchor_host))
+    hs = sim.hosts._replace(
+        used=sim.hosts.used.at[anchor_host].add(ct.req[c0]),
+        n_containers=sim.hosts.n_containers.at[anchor_host].add(1))
+    sim = sim._replace(containers=ct, hosts=hs, t=sim.t + 20.0)
+    sim, _ = phase_arrive(sim)
+    out = phase_schedule(sim, cfg, get_policy("netaware"))
+    placed = np.asarray(out.containers.host)[members[1:]]
+    # first same-job placements join the anchor until its slots run out
+    assert (placed == anchor_host).sum() >= cfg.max_containers_per_host - 1
+    # the overflow stays on the anchor's leaf rather than crossing the spine
+    leaf = placed[placed >= 0] % N_LEAF
+    assert (leaf == anchor_host % N_LEAF).all(), placed
+
+
+def test_netaware_beats_firstfit_under_congested_spine():
+    """Acceptance: on the congested-spine scenario netaware must beat
+    firstfit on both mean flow rate and accumulated communication time
+    (firstfit splits 6-container jobs across adjacent hosts, which sit on
+    different leaves, so its flows cross the skinny spine)."""
+    cfg = congested_spine_cfg()
+    hosts = build_paper_hosts()
+    rep, mfr = {}, {}
+    for pol in ("firstfit", "netaware"):
+        spec, net = congested_spine_net()
+        sim0 = init_sim(hosts, paper_workload(cfg, seed=0), net, seed=0)
+        final, m = run_sim(sim0, cfg, get_policy(pol), spec.n_hosts,
+                           spec.n_nodes, cfg.horizon)
+        rep[pol] = summarize(final, m)
+        rates, act = np.asarray(m.mean_flow_rate), np.asarray(m.active_flows)
+        mfr[pol] = float((rates * act).sum() / max(act.sum(), 1))
+    assert rep["netaware"]["n_completed"] == cfg.n_containers
+    assert (rep["netaware"]["avg_comm_time"]
+            < 0.5 * rep["firstfit"]["avg_comm_time"]), rep
+    assert mfr["netaware"] > 2.0 * mfr["firstfit"], mfr
+
+
+# ---------------------------------------------------------------------------
+# congestion-aware migration
+# ---------------------------------------------------------------------------
+def _overloaded_sim():
+    """Host 0 overloaded with one movable container; every other host idle;
+    every leaf-spine link hot (0.9 utilization)."""
+    cfg = SimConfig()
+    hosts = build_paper_hosts()
+    spec, net = build_paper_network(cfg)
+    sim = init_sim(hosts, paper_workload(cfg, seed=0), net, seed=0)
+    H = spec.n_hosts
+    ct = sim.containers
+    ct = ct._replace(status=ct.status.at[0].set(STATUS_RUNNING),
+                     host=ct.host.at[0].set(0),
+                     req=ct.req.at[0].set(jnp.array([100.0, 1.0, 50.0])))
+    hs = sim.hosts._replace(
+        used=sim.hosts.used.at[0].set(0.8 * sim.hosts.cap[0]),
+        n_containers=sim.hosts.n_containers.at[0].set(1))
+    lu = sim.net.link_util.at[H:].set(0.9)
+    sim = sim._replace(containers=ct, hosts=hs,
+                       net=sim.net._replace(link_util=lu))
+    return cfg, sim
+
+
+def test_congestion_migrate_avoids_hot_links():
+    """With the spine at 0.9 utilization, the congestion-aware picker keeps
+    the migration flow on the source's leaf (host 4 = next same-leaf host)
+    while the first-fit reference crosses the hot spine to host 1."""
+    cfg, sim = _overloaded_sim()
+    c_ff, d_ff = overload_migrate(sim, cfg)
+    c_na, d_na = congestion_migrate(sim, cfg)
+    assert int(c_ff) == 0 and int(c_na) == 0      # same container selection
+    assert int(d_ff) == 1                          # first feasible, leaf 1
+    assert int(d_na) == 4                          # same-leaf destination
+    assert int(d_na) % N_LEAF == 0                 # source's leaf
+
+
+def test_congestion_migrate_falls_back_without_congestion():
+    """On an idle fabric every path costs the same, so the congestion-aware
+    picker degenerates to the first feasible destination."""
+    cfg, sim = _overloaded_sim()
+    sim = sim._replace(net=sim.net._replace(
+        link_util=jnp.zeros_like(sim.net.link_util)))
+    c, d = congestion_migrate(sim, cfg)
+    assert int(c) == 0 and int(d) == 1

@@ -1,17 +1,29 @@
-"""Batched conflict-resolved placement vs the sequential reference scan,
-and the sparse segment-min comm-peer picker vs its dense oracle.
+"""Unified score-based Policy API: the batched conflict-resolved round and
+the derived sequential reference (a K=1 degenerate round) must produce
+identical placements for EVERY registered policy — including the
+co-location policies (jobgroup, netaware), whose intra-round same-job
+count delta is carried through the admit scan.
+
+Also: the sparse segment-min comm-peer picker vs its dense oracle, and the
+large-C regression for the sortable-int FIFO selection key.
 
 No hypothesis dependency — seeded loops so the suite runs on a clean env.
 """
+from types import SimpleNamespace
+
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (SimConfig, build_paper_hosts, build_paper_network,
-                        get_policy, init_sim, paper_workload, run_sim)
+                        get_policy, init_sim, list_policies, paper_workload,
+                        run_sim)
 from repro.core.engine import (phase_arrive, phase_schedule, pick_comm_peers,
                                pick_comm_peers_dense)
+from repro.core.scheduling import INT_BIG, select_key_fifo
 from repro.core.types import (STATUS_COMMUNICATING, STATUS_COMPLETED,
-                              STATUS_MIGRATING, STATUS_RUNNING)
+                              STATUS_INACTIVE, STATUS_MIGRATING,
+                              STATUS_RUNNING, empty_containers)
 
 
 def make_cfg(**kw):
@@ -58,7 +70,46 @@ def test_comm_peers_self_when_alone():
 
 
 # ---------------------------------------------------------------------------
-# Batched placement
+# FIFO selection key: sortable-int encoding, exact at any magnitude
+# ---------------------------------------------------------------------------
+def test_fifo_key_exact_at_large_magnitudes():
+    """Regression: the old ``submit_t * C + index`` f32 encoding lost the
+    index tie-break once the combined key exceeded ~2^24.  The rank-based
+    i32 key must order (submit_t, index) lexicographically at any scale."""
+    C = 5000
+    ct = empty_containers(C)
+    submit = np.full(C, 1.0e6, np.float32)     # huge, heavily tied
+    submit[-7:] = 1.0e6 - 1.0                  # strictly earlier block at end
+    submit[::13] = 1.0e6 + 0.5                 # and a later stripe
+    ct = ct._replace(
+        submit_t=ct.submit_t.at[:].set(jnp.asarray(submit)),
+        status=ct.status.at[:].set(STATUS_INACTIVE))
+    sim = SimpleNamespace(containers=ct, t=jnp.float32(2.0e6))
+    key = np.asarray(select_key_fifo(sim))
+    assert (key < int(INT_BIG)).all()          # everything schedulable
+    order = np.argsort(key)                    # keys are unique ints
+    expect = np.lexsort((np.arange(C), submit))
+    np.testing.assert_array_equal(order, expect)
+
+
+def test_fifo_key_masks_unschedulable():
+    C = 64
+    ct = empty_containers(C)
+    submit = np.arange(C, dtype=np.float32)
+    ct = ct._replace(
+        submit_t=ct.submit_t.at[:].set(jnp.asarray(submit)),
+        status=ct.status.at[:].set(STATUS_INACTIVE))
+    ct = ct._replace(status=ct.status.at[::2].set(STATUS_RUNNING))
+    sim = SimpleNamespace(containers=ct, t=jnp.float32(1000.0))
+    key = np.asarray(select_key_fifo(sim))
+    assert (key[::2] == int(INT_BIG)).all()
+    valid = key[1::2]
+    assert (valid < int(INT_BIG)).all()
+    np.testing.assert_array_equal(np.argsort(valid), np.arange(len(valid)))
+
+
+# ---------------------------------------------------------------------------
+# Batched placement round == derived sequential reference
 # ---------------------------------------------------------------------------
 def _one_schedule_tick(cfg, policy_name, seed=0):
     spec, sim = fresh_sim(cfg, seed=seed)
@@ -69,32 +120,52 @@ def _one_schedule_tick(cfg, policy_name, seed=0):
     return out
 
 
-def test_batched_matches_sequential_single_tick():
-    """With every candidate feasible, the batched round makes exactly the
-    sequential reference's decisions (same containers, same hosts).
+def test_batched_matches_sequential_every_policy():
+    """Both engine paths evaluate the same select_key/place_score/dynamic
+    hooks, so with every candidate feasible they make EXACTLY the same
+    decisions — for all registered policies, including jobgroup and
+    netaware whose co-location score is updated intra-round by the carry."""
+    for policy in list_policies():
+        for seed in (0, 1, 4):
+            seq = _one_schedule_tick(make_cfg(batched_placement=False),
+                                     policy, seed)
+            bat = _one_schedule_tick(make_cfg(batched_placement=True),
+                                     policy, seed)
+            np.testing.assert_array_equal(np.asarray(seq.containers.status),
+                                          np.asarray(bat.containers.status),
+                                          err_msg=policy)
+            np.testing.assert_array_equal(np.asarray(seq.containers.host),
+                                          np.asarray(bat.containers.host),
+                                          err_msg=policy)
+            np.testing.assert_allclose(np.asarray(seq.hosts.used),
+                                       np.asarray(bat.hosts.used),
+                                       rtol=1e-5, err_msg=policy)
+            assert int(seq.sched.decisions) == int(bat.sched.decisions)
+            assert int(seq.sched.rr_pointer) == int(bat.sched.rr_pointer)
 
-    jobgroup is excluded: its co-location score is intentionally computed at
-    round start in the batched path (see place_key_jobgroup), so intra-round
-    placements diverge from the sequential reference by design.
-    """
-    for policy in ["firstfit", "round", "performance_first"]:
-        seq = _one_schedule_tick(make_cfg(batched_placement=False), policy)
-        bat = _one_schedule_tick(make_cfg(batched_placement=True), policy)
-        np.testing.assert_array_equal(np.asarray(seq.containers.status),
-                                      np.asarray(bat.containers.status),
-                                      err_msg=policy)
-        np.testing.assert_array_equal(np.asarray(seq.containers.host),
-                                      np.asarray(bat.containers.host),
-                                      err_msg=policy)
-        np.testing.assert_allclose(np.asarray(seq.hosts.used),
-                                   np.asarray(bat.hosts.used),
-                                   rtol=1e-5, err_msg=policy)
-        assert int(seq.sched.decisions) == int(bat.sched.decisions)
+
+def test_batched_matches_sequential_full_run():
+    """The equivalence must survive full simulations (comm pauses, retries,
+    migrations) — exercised on the two scan-carried dynamic-score policies."""
+    for policy in ["round", "jobgroup", "netaware"]:
+        finals = {}
+        for batched in (True, False):
+            cfg = make_cfg(batched_placement=batched, horizon=50)
+            spec, sim0 = fresh_sim(cfg, seed=2)
+            finals[batched], _ = run_sim(sim0, cfg, get_policy(policy),
+                                         spec.n_hosts, spec.n_nodes,
+                                         cfg.horizon)
+        for field in ("status", "host", "start_t", "finish_t"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(finals[True].containers, field)),
+                np.asarray(getattr(finals[False].containers, field)),
+                err_msg=f"{policy}.{field}")
 
 
 def test_batched_skips_blocked_head():
     """A giant container with no feasible host must not block the rest of
-    the round (the sequential argmin re-selected it forever)."""
+    the round (the sequential argmin re-selects it forever — the paper's
+    semantics, kept on the reference path)."""
     cfg = make_cfg(batched_placement=True)
     spec, sim = fresh_sim(cfg, seed=1)
     ct = sim.containers
@@ -114,7 +185,8 @@ def test_batched_skips_blocked_head():
 
 
 def test_batched_respects_capacity_over_full_run():
-    for policy in ["firstfit", "round", "jobgroup", "overload_migrate"]:
+    for policy in ["firstfit", "round", "jobgroup", "netaware",
+                   "overload_migrate"]:
         for seed in (0, 3):
             cfg = make_cfg(batched_placement=True)
             spec, sim0 = fresh_sim(cfg, seed=seed)
