@@ -7,6 +7,12 @@ point BOTH flow engines run in the same process, giving an apples-to-apples
 oracle; the 2000-host point runs sparse-only (the dense membership tensor
 at that scale is the OOM ceiling this PR removes).
 
+ISSUE 3 adds the ``sweep`` entry: the 6-policy x 4-scenario ladder as ONE
+compiled call (compile-cache-miss counter recorded), against the per-point
+cold (compile + run) loop the pre-policy-as-data architecture paid — one
+XLA compilation per (policy, scenario) point, reproduced with
+``jax.clear_caches()`` between calls.
+
     PYTHONPATH=src python -m benchmarks.engine_bench [--quick]
 """
 from __future__ import annotations
@@ -14,6 +20,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import time
 
 from benchmarks.common import measure_scale_point
 
@@ -22,6 +29,75 @@ BENCH_PATH = os.path.join(os.path.dirname(__file__), "..",
 # --quick runs must not clobber the tracked full-ladder artifact
 BENCH_QUICK_PATH = os.path.join(os.path.dirname(__file__), "..",
                                 "experiments", "BENCH_engine_quick.json")
+
+
+def bench_scenarios():
+    """The 4-scenario ladder of the sweep entry: the scenario layer's own
+    healthy-fabric + Fig 5/8 bw/loss degradations, plus a benchmark-only
+    runtime-threshold variant."""
+    from repro.core.scenario import ScenarioSpec, default_scenarios
+    return default_scenarios()[:3] + [
+        ScenarioSpec("tight", overload_threshold=0.5, queue_coef=1.0),
+    ]
+
+
+def measure_sweep_point(n_hosts: int, n_containers: int, horizon: int,
+                        with_loop: bool = True) -> dict:
+    """6 policies x 4 scenarios x 1 seed in one compiled call, vs the
+    old-world per-point cold loop (compile + run each, via clear_caches)."""
+    import jax
+
+    from repro.core import SimConfig, get_policy, list_policies, run_sim
+    from repro.core.scenario import build_scenarios
+    from repro.launch.sweep import make_sweep_fn, stack_policies
+
+    cfg = SimConfig(n_jobs=max(10, n_containers // 3), n_tasks=n_containers,
+                    n_containers=n_containers, horizon=horizon)
+    n_leaf = max(4, n_hosts // 5)
+    specs = bench_scenarios()
+    net_spec, sims, rps = build_scenarios(
+        specs, cfg, n_hosts=n_hosts, n_spine=max(2, n_leaf // 4),
+        n_leaf=n_leaf, seeds=(0,))
+    pols = list_policies()
+    pol = stack_policies(pols)
+    cells = len(pols) * len(specs)
+
+    jax.clear_caches()
+    fn = make_sweep_fn(cfg, net_spec.n_hosts, net_spec.n_nodes, horizon)
+    t0 = time.time()
+    fn(sims, pol, rps)[0].t.block_until_ready()
+    cold = time.time() - t0
+    t0 = time.time()
+    fn(sims, pol, rps)[0].t.block_until_ready()
+    steady = time.time() - t0
+    out = {
+        "n_hosts": n_hosts,
+        "n_containers": n_containers,
+        "horizon": horizon,
+        "policies": len(pols),
+        "scenarios": len(specs),
+        "seeds": 1,
+        "cells": cells,
+        "compile_cache_misses": fn._cache_size(),
+        "sweep_cold_s": round(cold, 2),
+        "sweep_steady_s": round(steady, 2),
+        "cells_per_s": round(cells / max(steady, 1e-9), 2),
+    }
+    if with_loop:
+        total = 0.0
+        for s in range(len(specs)):
+            sim0 = jax.tree.map(lambda x: x[s, 0], sims)
+            rp = jax.tree.map(lambda x: x[s], rps)
+            for p in pols:
+                jax.clear_caches()
+                t0 = time.time()
+                run_sim(sim0, cfg, get_policy(p), net_spec.n_hosts,
+                        net_spec.n_nodes, horizon,
+                        params=rp)[0].t.block_until_ready()
+                total += time.time() - t0
+        out["per_point_cold_loop_s"] = round(total, 2)
+        out["sweep_speedup_vs_loop"] = round(total / cold, 2)
+    return out
 
 
 def bench_engine(quick: bool = False):
@@ -55,11 +131,19 @@ def bench_engine(quick: bool = False):
     cmp_h, cmp_c = (100, 1500) if quick else (500, 3000)
     sp, de = tps(cmp_h, cmp_c, "sparse"), tps(cmp_h, cmp_c, "dense")
     speedup = round(sp / de, 2) if sp and de else None
+    # the sweep entry: quick mode measures a small grid (compile-once
+    # assertion for CI); full mode measures the 500h/3000c grid against the
+    # per-point cold loop (the ISSUE 3 >=3x acceptance)
+    if quick:
+        sweep = measure_sweep_point(50, 300, horizon=40, with_loop=False)
+    else:
+        sweep = measure_sweep_point(500, 3000, horizon=20, with_loop=True)
     out = {
         "bench": "engine_tick_throughput",
         "points": points,
         "comparison_point": {"n_hosts": cmp_h, "n_containers": cmp_c},
         "sparse_speedup": speedup,
+        "sweep": sweep,
     }
     if not quick:
         out["policy_comparison"] = {
@@ -73,6 +157,11 @@ def bench_engine(quick: bool = False):
     claims = [
         (f"sparse vs dense ticks_per_s @ {cmp_h}h/{cmp_c}c",
          f"{sp} vs {de} ({speedup}x)"),
+        (f"sweep {sweep['cells']} cells @ {sweep['n_hosts']}h "
+         f"compiled {sweep['compile_cache_misses']}x",
+         f"cold {sweep['sweep_cold_s']}s, steady {sweep['sweep_steady_s']}s"
+         + (f", {sweep['sweep_speedup_vs_loop']}x vs per-point cold loop"
+            if "sweep_speedup_vs_loop" in sweep else "")),
         ("json", os.path.abspath(path)),
     ]
     if not quick:

@@ -16,7 +16,7 @@ import numpy as np
 from benchmarks.common import measure_scale_point
 from repro.core import SimConfig, init_sim, get_policy
 from repro.core.workload import paper_workload
-from repro.core.engine import run_sim_vmapped
+from repro.launch.sweep import run_sim_vmapped
 
 
 def one_scale(n_hosts: int, n_containers: int, horizon: int = 120,

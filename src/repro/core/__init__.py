@@ -1,10 +1,20 @@
 # DCSim-JAX: the paper's computing+networking-integrated container-scheduling
 # simulator as one compiled JAX program (see DESIGN.md §2 for the mapping).
 from repro.core.datacenter import (  # noqa: F401
-    PAPER_HOST_CATEGORIES, HostCategory, SimConfig, build_paper_hosts,
-    build_paper_network, scaled_hosts,
+    HOST_MIXES, PAPER_HOST_CATEGORIES, HostCategory, SimConfig,
+    build_paper_hosts, build_paper_network, mixed_hosts, scaled_hosts,
 )
-from repro.core.engine import init_sim, run_sim, run_sim_vmapped  # noqa: F401
-from repro.core.report import summarize, timeseries, to_csv  # noqa: F401
-from repro.core.scheduling import Policy, get_policy, list_policies, register  # noqa: F401
-from repro.core.workload import paper_workload, trace_workload  # noqa: F401
+from repro.core.engine import init_sim, run_sim, simulate  # noqa: F401
+from repro.core.report import (  # noqa: F401
+    summarize, sweep_summaries, sweep_table, timeseries, to_csv,
+)
+from repro.core.scenario import (  # noqa: F401
+    ScenarioSpec, build_scenario, build_scenarios, default_scenarios,
+)
+from repro.core.scheduling import (  # noqa: F401
+    PolicyDef, get_policy, list_policies, register,
+)
+from repro.core.types import PolicyParams, RunParams  # noqa: F401
+from repro.core.workload import (  # noqa: F401
+    bursty_workload, paper_workload, trace_workload,
+)

@@ -4,10 +4,11 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import network
-from repro.core.types import HostState, make_hosts
+from repro.core.types import HostState, RunParams, make_hosts
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,7 +36,18 @@ PAPER_HOST_CATEGORIES: tuple[HostCategory, ...] = (
 
 @dataclasses.dataclass(frozen=True)
 class SimConfig:
-    """Simulator parameters (paper Table 6, INI-config equivalent)."""
+    """STATIC simulator parameters (paper Table 6, INI-config equivalent).
+
+    Everything here is compile-time: tensor shapes (container capacity, scan
+    lengths), engine control flow (flow engine, placement path, delay mode)
+    and the workload-generation distributions (host-side numpy).  Knobs that
+    a sweep varies at runtime — link bandwidth/loss, the queueing
+    coefficient, the overload/idle thresholds — live in the
+    :class:`~repro.core.types.RunParams` pytree instead, threaded through
+    the tick as traced scalars; the copies kept on this config are only the
+    *defaults* :meth:`run_params` reads.  Changing a RunParams value never
+    recompiles; changing a SimConfig field does.
+    """
 
     # workload
     n_jobs: int = 100
@@ -66,13 +78,22 @@ class SimConfig:
     batched_placement: bool = True    # conflict-resolved top-K placement round
     stall_rate_floor: float = 50.0    # KB/s under which a flow is 'stalled'
     mig_kb_per_gb: float = 1024.0     # migration bytes per GB of memory req
-    queue_coef: float = 0.5
-    # network-aware scoring (NetState.comm_cost refresh weights).  Defaults
-    # mirror network.DEFAULT_* — build_network seeds the initial table with
-    # those, and the engine re-weights from this config at every delay
-    # refresh (the first one fires at the end of tick 0).
-    netaware_util_weight: float = network.DEFAULT_UTIL_WEIGHT
-    netaware_cross_leaf_ms: float = network.DEFAULT_CROSS_LEAF_MS
+    queue_coef: float = 0.5           # RunParams default (runtime knob)
+
+    def run_params(self) -> RunParams:
+        """Default runtime-parameter pytree for this config.
+
+        ``bw_mbps``/``loss`` default to their keep-the-topology sentinels
+        (<=0 / <0): the network built for the scenario keeps its per-link
+        values unless a sweep point overrides them uniformly.
+        """
+        f32 = lambda x: jnp.asarray(x, jnp.float32)
+        return RunParams(
+            bw_mbps=f32(-1.0), loss=f32(-1.0),
+            queue_coef=f32(self.queue_coef),
+            overload_threshold=f32(self.overload_threshold),
+            idle_threshold=f32(self.idle_threshold),
+        )
 
 
 def build_paper_hosts(categories: Sequence[HostCategory] = PAPER_HOST_CATEGORIES,
@@ -105,6 +126,36 @@ def scaled_hosts(n_hosts: int, n_leaf: int,
     if rem > 0:
         cats[0] = dataclasses.replace(cats[0], count=per + rem)
     return build_paper_hosts(tuple(cats), n_leaf=n_leaf)
+
+
+# Heterogeneous host price/capacity mixes for the scenario layer
+# (paper Table 5 is "paper"; the others stress price- and speed-sensitive
+# policies with the same [H, ...] shapes, so scenarios stack cleanly).
+HOST_MIXES: dict[str, tuple[HostCategory, ...]] = {
+    "paper": PAPER_HOST_CATEGORIES,
+    # uniform cheap & slow fleet: no speed/price gradient to exploit
+    "budget": (HostCategory(20, 80, 1.0, 128, 1.0, 8, 1.0, 1.0),),
+    # top-heavy: a few premium hosts among many baseline ones
+    "premium": (
+        HostCategory(15, 80, 1.0, 128, 1.0, 8, 1.0, 1.0),
+        HostCategory(5, 80, 4.0, 256, 4.0, 8, 4.0, 8.0),
+    ),
+    # wide spread: small/cheap against big/fast, strong consolidation signal
+    "contrast": (
+        HostCategory(10, 40, 1.0, 64, 1.0, 4, 1.0, 0.5),
+        HostCategory(10, 160, 3.0, 256, 3.0, 16, 3.0, 6.0),
+    ),
+}
+
+
+def mixed_hosts(mix: str, n_hosts: int, n_leaf: int) -> HostState:
+    """Build ``n_hosts`` hosts from a named :data:`HOST_MIXES` entry."""
+    try:
+        cats = HOST_MIXES[mix]
+    except KeyError:
+        raise KeyError(
+            f"unknown host mix {mix!r}; known: {sorted(HOST_MIXES)}") from None
+    return scaled_hosts(n_hosts, n_leaf, cats)
 
 
 def build_paper_network(cfg: SimConfig, n_hosts: int = 20, n_spine: int = 2,

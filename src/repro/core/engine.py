@@ -24,13 +24,14 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import network, stats
+from repro.core import network, scheduling, stats
 from repro.core.datacenter import SimConfig
-from repro.core.scheduling import BIG, INT_BIG, Policy, feasible_hosts
+from repro.core.scheduling import BIG, INT_BIG, feasible_hosts
 from repro.core.types import (
     STATUS_COMMUNICATING, STATUS_COMPLETED, STATUS_INACTIVE, STATUS_MIGRATING,
-    STATUS_RUNNING, STATUS_UNBORN, STATUS_WAITING, ContainerState, HostState,
-    NetState, SchedState, SimState, TickMetrics,
+    STATUS_RUNNING, STATUS_UNBORN, STATUS_WAITING, W_CROSS_LEAF, W_UTIL,
+    ContainerState, HostState, NetState, PolicyParams, RunParams, SchedState,
+    SimState, TickMetrics,
 )
 
 I32 = jnp.int32
@@ -107,15 +108,16 @@ def phase_arrive(sim: SimState) -> Tuple[SimState, jnp.ndarray]:
     return sim._replace(containers=ct._replace(status=status)), arriving.sum()
 
 
-def _pick_host(policy: Policy, sim: SimState, cfg: SimConfig, score, carry,
-               k, cand, used, feas):
+def _pick_host(sim: SimState, cfg: SimConfig, params: RunParams,
+               policy: PolicyParams, carry, k, cand, used, feas):
     """Evaluate the policy's [H] preference row and argmin it over the
     feasible hosts — the single scoring step both placement paths share."""
-    row = policy.host_row(sim, cfg, score, carry, k, cand, used)
+    row = scheduling.host_row(sim, cfg, params, policy, carry, k, cand, used)
     return jnp.where(feas.any(), jnp.argmin(jnp.where(feas, row, BIG)), -1)
 
 
-def _place_sequential(sim: SimState, cfg: SimConfig, policy: Policy) -> SimState:
+def _place_sequential(sim: SimState, cfg: SimConfig, params: RunParams,
+                      policy: PolicyParams) -> SimState:
     """Sequential reference path, derived from the same scoring API.
 
     Each scan step is a K=1 degenerate placement round against the fully
@@ -128,22 +130,21 @@ def _place_sequential(sim: SimState, cfg: SimConfig, policy: Policy) -> SimState
     H = sim.hosts.cap.shape[0]
 
     def place_body(s: SimState, _):
-        key = policy.select_key(s)
+        key = scheduling.select_key(s, policy)
         c = jnp.argmin(key)
         valid = key[c] < INT_BIG
         cand = c[None]
-        score = (None if policy.dynamic is not None
-                 else policy.place_score(s, cand, cfg))
-        pcarry = policy.carry_init(s, cand, cfg)
+        pcarry = scheduling.init_place_carry(s, cand, policy)
         feas = feasible_hosts(s.hosts.cap, s.hosts.used,
                               s.hosts.n_containers,
                               s.containers.req[c], cfg) & valid
-        h = _pick_host(policy, s, cfg, score, pcarry, 0, cand,
+        h = _pick_host(s, cfg, params, policy, pcarry, 0, cand,
                        s.hosts.used, feas)
         ok = h >= 0
         hh = jnp.clip(h, 0, H - 1)
-        pcarry = policy.carry_update(s, cfg, pcarry, 0, cand, hh, ok)
-        s = s._replace(sched=policy.carry_commit(s.sched, pcarry))
+        pcarry = scheduling.update_place_carry(s, policy, pcarry, 0, cand,
+                                               hh, ok)
+        s = s._replace(sched=scheduling.commit_place_carry(s.sched, pcarry))
         s = _deploy(s, jnp.where(valid, c, -1), h)
         s = s._replace(sched=s.sched._replace(
             decisions=s.sched.decisions + ok.astype(I32)))
@@ -154,7 +155,8 @@ def _place_sequential(sim: SimState, cfg: SimConfig, policy: Policy) -> SimState
     return sim
 
 
-def _place_batched(sim: SimState, cfg: SimConfig, policy: Policy) -> SimState:
+def _place_batched(sim: SimState, cfg: SimConfig, params: RunParams,
+                   policy: PolicyParams) -> SimState:
     """Batched conflict-resolved placement round.
 
     Instead of ``placements_per_tick`` full select+score passes (each one
@@ -177,24 +179,23 @@ def _place_batched(sim: SimState, cfg: SimConfig, policy: Policy) -> SimState:
     H = sim.hosts.cap.shape[0]
     K = min(cfg.placements_per_tick, C)
 
-    key = policy.select_key(sim)                          # i32[C]
+    key = scheduling.select_key(sim, policy)              # i32[C]
     neg_vals, cand = jax.lax.top_k(-key, K)               # K smallest keys
     valid = -neg_vals < INT_BIG                           # bool[K]
     req_k = sim.containers.req[cand]                      # [K, 3]
-    score = (None if policy.dynamic is not None
-             else policy.place_score(sim, cand, cfg))     # f32[K, H]
-    pcarry0 = policy.carry_init(sim, cand, cfg)
+    pcarry0 = scheduling.init_place_carry(sim, cand, policy)
 
     def admit(carry, k):
         used, ncont, pcarry = carry
         feas = feasible_hosts(sim.hosts.cap, used, ncont,
                               req_k[k], cfg) & valid[k]
-        h = _pick_host(policy, sim, cfg, score, pcarry, k, cand, used, feas)
+        h = _pick_host(sim, cfg, params, policy, pcarry, k, cand, used, feas)
         ok = h >= 0
         hh = jnp.clip(h, 0, H - 1)
         used = used.at[hh].add(req_k[k] * ok.astype(F32))
         ncont = ncont.at[hh].add(ok.astype(I32))
-        pcarry = policy.carry_update(sim, cfg, pcarry, k, cand, hh, ok)
+        pcarry = scheduling.update_place_carry(sim, policy, pcarry, k, cand,
+                                               hh, ok)
         return (used, ncont, pcarry), h
 
     init = (sim.hosts.used, sim.hosts.n_containers, pcarry0)
@@ -213,19 +214,21 @@ def _place_batched(sim: SimState, cfg: SimConfig, policy: Policy) -> SimState:
         retry=ct.retry.at[cand].set(jnp.where(ok, 0, ct.retry[cand])),
     )
     hosts = sim.hosts._replace(used=used, n_containers=ncont)
-    sched = policy.carry_commit(sim.sched, pcarry)._replace(
+    sched = scheduling.commit_place_carry(sim.sched, pcarry)._replace(
         decisions=sim.sched.decisions + ok.sum().astype(I32))
     return sim._replace(hosts=hosts, containers=conts, sched=sched)
 
 
-def _migrate_batched(sim: SimState, cfg: SimConfig, policy: Policy) -> SimState:
+def _migrate_batched(sim: SimState, cfg: SimConfig, params: RunParams,
+                     policy: PolicyParams) -> SimState:
     """Migration decision round.
 
     The decision scan carries only the fields a migration start can change
     (host ``used``/slot counters, container status) instead of threading the
     whole SimState; the chosen (container, destination) pairs are applied in
-    one vectorized pass afterwards.  Decisions are identical to the former
-    full-state loop: ``migrate`` reads exactly those carried fields.
+    one vectorized pass afterwards.  The migration rule is switch-dispatched
+    like every other policy hook — branches without one hit the no-op branch
+    and the round leaves the state untouched.
     """
     C = sim.containers.status.shape[0]
     H = sim.hosts.cap.shape[0]
@@ -235,7 +238,7 @@ def _migrate_batched(sim: SimState, cfg: SimConfig, policy: Policy) -> SimState:
         view = sim._replace(
             hosts=sim.hosts._replace(used=used, n_containers=ncont),
             containers=sim.containers._replace(status=status))
-        c, dst = policy.migrate(view, cfg)
+        c, dst = scheduling.migrate(view, cfg, params, policy)
         ok = (c >= 0) & (dst >= 0)
         cc = jnp.clip(c, 0, C - 1)
         hh = jnp.clip(dst, 0, H - 1)
@@ -271,25 +274,27 @@ def _migrate_batched(sim: SimState, cfg: SimConfig, policy: Policy) -> SimState:
     return sim._replace(hosts=hosts, containers=conts, sched=sched)
 
 
-def phase_schedule(sim: SimState, cfg: SimConfig, policy: Policy) -> SimState:
+def phase_schedule(sim: SimState, cfg: SimConfig, policy: PolicyParams,
+                   params: RunParams | None = None) -> SimState:
     """Paper ``schedule`` process: place up to ``placements_per_tick``
     containers, then start up to ``migrations_per_tick`` migrations.
 
-    Both placement paths evaluate the policy's unified scoring API
-    (select_key / place_score / DynamicTerm); ``cfg.batched_placement``
-    selects the batched round or the K=1-derived sequential reference.
+    Both placement paths evaluate the switch-dispatched scoring hooks
+    (``scheduling.select_key`` / ``host_row`` / the ``PlaceCarry``);
+    ``cfg.batched_placement`` selects the batched round or the K=1-derived
+    sequential reference.  The migration round always runs — which rule (or
+    the no-op branch) is the policy's data, not Python structure.
     """
+    params = cfg.run_params() if params is None else params
     sim = sim._replace(sched=sim.sched._replace(
         decisions=jnp.zeros((), I32), migrations=jnp.zeros((), I32)))
 
     if cfg.batched_placement:
-        sim = _place_batched(sim, cfg, policy)
+        sim = _place_batched(sim, cfg, params, policy)
     else:
-        sim = _place_sequential(sim, cfg, policy)
+        sim = _place_sequential(sim, cfg, params, policy)
 
-    if policy.migrate is not None:
-        sim = _migrate_batched(sim, cfg, policy)
-    return sim
+    return _migrate_batched(sim, cfg, params, policy)
 
 
 def pick_comm_peers(ct: ContainerState) -> jnp.ndarray:
@@ -468,12 +473,19 @@ def phase_cost(sim: SimState) -> SimState:
 # ---------------------------------------------------------------------------
 # The tick and the scan driver
 # ---------------------------------------------------------------------------
-def make_tick(cfg: SimConfig, policy: Policy, n_hosts: int, n_nodes: int):
-    """Build the jit-able tick function ``(sim, _) -> (sim', metrics)``."""
+def make_tick(cfg: SimConfig, policy: PolicyParams, params: RunParams,
+              n_hosts: int, n_nodes: int):
+    """Build the jit-able tick function ``(sim, _) -> (sim', metrics)``.
+
+    ``policy`` and ``params`` are traced pytrees closed over by the tick —
+    the whole point of the policy-as-data split: a different policy id,
+    weight vector, or runtime knob is new *data* through the SAME compiled
+    tick, and a batch axis on either sweeps them under ``vmap``.
+    """
 
     def tick(sim: SimState, _) -> Tuple[SimState, TickMetrics]:
         sim, n_arrived = phase_arrive(sim)
-        sim = phase_schedule(sim, cfg, policy)
+        sim = phase_schedule(sim, cfg, policy, params)
         sim, comm_rates, mig_rates, flow_active, all_rates = \
             phase_flows(sim, cfg)
         sim = phase_communicate(sim, cfg, comm_rates)
@@ -486,16 +498,16 @@ def make_tick(cfg: SimConfig, policy: Policy, n_hosts: int, n_nodes: int):
         def refresh(net):
             return network.update_delay_matrix(
                 net, n_hosts, n_nodes, mode=cfg.delay_mode,
-                use_kernel=cfg.fw_use_kernel, q_coef=cfg.queue_coef,
-                util_weight=cfg.netaware_util_weight,
-                cross_leaf_ms=cfg.netaware_cross_leaf_ms)
+                use_kernel=cfg.fw_use_kernel, q_coef=params.queue_coef,
+                util_weight=policy.weights[W_UTIL],
+                cross_leaf_ms=policy.weights[W_CROSS_LEAF])
 
         every = jnp.mod(sim.t.astype(I32), cfg.delay_update_interval) == 0
         sim = sim._replace(
             net=jax.lax.cond(every, refresh, lambda n: n, sim.net))
 
         m = stats.collect(sim, n_arrived, sim.sched.decisions,
-                          sim.sched.migrations, cfg.overload_threshold,
+                          sim.sched.migrations, params,
                           flow_active, all_rates)
         sim = sim._replace(t=sim.t + 1.0)
         return sim, m
@@ -503,23 +515,44 @@ def make_tick(cfg: SimConfig, policy: Policy, n_hosts: int, n_nodes: int):
     return tick
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "policy", "n_hosts",
-                                             "n_nodes", "horizon"))
-def run_sim(sim0: SimState, cfg: SimConfig, policy: Policy, n_hosts: int,
-            n_nodes: int, horizon: int) -> Tuple[SimState, TickMetrics]:
-    """Run ``horizon`` ticks; returns (final state, stacked per-tick metrics).
-
-    ``cfg`` (frozen dataclass) and ``policy`` (frozen dataclass of functions)
-    are static: one compilation per (config, policy, shapes) combination.
+def simulate(sim0: SimState, cfg: SimConfig, policy: PolicyParams,
+             n_hosts: int, n_nodes: int, horizon: int,
+             params: RunParams) -> Tuple[SimState, TickMetrics]:
+    """The un-jitted simulation core: apply the runtime link params, then
+    scan ``horizon`` ticks.  ``run_sim`` jits it for standalone runs;
+    ``repro/launch/sweep.py`` vmaps it over policy x scenario x seed and
+    jits ONCE — both paths trace the identical function, which is what
+    makes sweep cells bit-for-bit equal to standalone runs.
     """
-    tick = make_tick(cfg, policy, n_hosts, n_nodes)
+    sim0 = sim0._replace(net=network.apply_link_params(
+        sim0.net, params.bw_mbps, params.loss))
+    tick = make_tick(cfg, policy, params, n_hosts, n_nodes)
     return jax.lax.scan(tick, sim0, None, length=horizon)
 
 
-def run_sim_vmapped(sims: SimState, cfg: SimConfig, policy: Policy,
-                    n_hosts: int, n_nodes: int, horizon: int):
-    """Batch of scenarios (leading axis on every leaf) in one compiled run —
-    the embarrassing parallelism the paper's process-per-entity design
-    cannot express."""
-    f = lambda s: run_sim(s, cfg, policy, n_hosts, n_nodes, horizon)
-    return jax.vmap(f)(sims)
+# ``registry`` keys the cache on scheduling.registry_version(): the switch
+# branch tables are baked into the compiled program, so registering a new
+# policy must invalidate it (a stale table would clamp the new branch index
+# and silently run another policy's hooks).
+@functools.partial(jax.jit, static_argnames=("cfg", "n_hosts", "n_nodes",
+                                             "horizon", "registry"))
+def _run_sim_jit(sim0, cfg, policy, params, n_hosts, n_nodes, horizon,
+                 registry):
+    return simulate(sim0, cfg, policy, n_hosts, n_nodes, horizon, params)
+
+
+def run_sim(sim0: SimState, cfg: SimConfig, policy: PolicyParams,
+            n_hosts: int, n_nodes: int, horizon: int,
+            params: RunParams | None = None
+            ) -> Tuple[SimState, TickMetrics]:
+    """Run ``horizon`` ticks; returns (final state, stacked per-tick metrics).
+
+    Only ``cfg`` and the shape arguments are static.  ``policy`` (branch id
+    + weights) and ``params`` (bw/loss/queue/threshold knobs, defaulting
+    from the config) are DATA: every policy and every runtime-parameter
+    point reuses one compilation per (config, shapes, policy-registry)
+    combination.
+    """
+    params = cfg.run_params() if params is None else params
+    return _run_sim_jit(sim0, cfg, policy, params, n_hosts, n_nodes, horizon,
+                        registry=scheduling.registry_version())

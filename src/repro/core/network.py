@@ -26,10 +26,10 @@ from repro.core.types import NetState
 INF = jnp.float32(1e9)
 MBPS_TO_KBPS = 125.0  # 1 Mbps = 125 KB/s
 LOCAL_RATE_KBPS = 4.0e6  # same-host "loopback" transfer rate
-# comm-cost weights: single source of truth — SimConfig's
-# netaware_util_weight / netaware_cross_leaf_ms default to these, and
-# build_network/set_link_params (which have no SimConfig) use them for the
-# initial table; the engine re-weights from cfg at the first delay refresh.
+# comm-cost weights: single source of truth — PolicyParams.weights defaults
+# to these (scheduling.DEFAULT_WEIGHTS), and build_network/set_link_params
+# (which have no policy in scope) use them for the initial table; the engine
+# re-weights from the policy's weight vector at every delay refresh.
 DEFAULT_UTIL_WEIGHT = 1.0     # ms-equivalent at 100% path utilization
 DEFAULT_CROSS_LEAF_MS = 0.05  # penalty for transiting the spine
 
@@ -121,19 +121,45 @@ def build_network(spec: SpineLeafSpec) -> NetState:
     return net._replace(comm_cost=pairwise_comm_cost(net))
 
 
+def apply_link_params(net: NetState, bw_mbps: jnp.ndarray,
+                      loss: jnp.ndarray) -> NetState:
+    """Trace-friendly uniform bandwidth/loss override (RunParams semantics).
+
+    ``bw_mbps <= 0`` / ``loss < 0`` keep the topology's per-link values, so
+    the no-override default is expressible as data and a (bw, loss) ladder
+    is a batch axis on two scalars — the engine applies this at t=0, which
+    is how ``launch/sweep.py`` runs a whole Fig 5/8-style sweep in one
+    compiled program.  The derived tables (``link_bw_kbps``, ``path_loss``,
+    ``comm_cost``) are rebuilt in the same pass.
+    """
+    bw_mbps = jnp.asarray(bw_mbps, jnp.float32)
+    loss = jnp.asarray(loss, jnp.float32)
+    new_bw = jnp.where(bw_mbps > 0, bw_mbps, net.link_bw)
+    new_loss = jnp.where(loss >= 0, loss, net.link_loss)
+    net = net._replace(
+        link_bw=new_bw,
+        link_bw_kbps=new_bw * MBPS_TO_KBPS,
+        link_loss=new_loss,
+        path_loss=path_loss_matrix(new_loss, net.path_links))
+    return net._replace(comm_cost=pairwise_comm_cost(net))
+
+
 def set_link_params(net: NetState, bw: float | None = None,
                     loss: float | None = None) -> NetState:
-    """Override bandwidth / loss on every link (paper Fig 5/8 sweeps)."""
-    if bw is not None:
-        new_bw = jnp.full_like(net.link_bw, bw)
-        net = net._replace(link_bw=new_bw,
-                           link_bw_kbps=new_bw * MBPS_TO_KBPS)
-    if loss is not None:
-        new_loss = jnp.full_like(net.link_loss, loss)
-        net = net._replace(
-            link_loss=new_loss,
-            path_loss=path_loss_matrix(new_loss, net.path_links))
-    return net._replace(comm_cost=pairwise_comm_cost(net))
+    """Override bandwidth / loss on every link (paper Fig 5/8 sweeps).
+
+    Host-side convenience over :func:`apply_link_params`; ``None`` maps to
+    the keep-the-topology sentinel.  Values inside the sentinel domain
+    (``bw <= 0``, ``loss < 0``) are rejected loudly — they would otherwise
+    silently keep the topology instead of overriding it.
+    """
+    if bw is not None and bw <= 0:
+        raise ValueError(f"bw override must be > 0 Mbps, got {bw}")
+    if loss is not None and loss < 0:
+        raise ValueError(f"loss override must be >= 0, got {loss}")
+    return apply_link_params(net,
+                             -1.0 if bw is None else bw,
+                             -1.0 if loss is None else loss)
 
 
 # ---------------------------------------------------------------------------
@@ -176,6 +202,19 @@ def path_util_matrix(net: NetState) -> jnp.ndarray:
     padded = jnp.concatenate([net.link_util,
                               jnp.zeros((1,), net.link_util.dtype)])
     return padded[net.path_links].max(axis=-1)
+
+
+def path_util_row(net: NetState, src: jnp.ndarray) -> jnp.ndarray:
+    """One source row of :func:`path_util_matrix` — f32[H].
+
+    The congestion-aware migration picker needs the bottleneck utilization
+    from ONE source host to every destination; gathering ``path_links[src]``
+    first keeps that O(H·4) instead of materializing the O(H²·4) matrix
+    inside the per-tick migration scan.
+    """
+    padded = jnp.concatenate([net.link_util,
+                              jnp.zeros((1,), net.link_util.dtype)])
+    return padded[net.path_links[src]].max(axis=-1)
 
 
 def pairwise_comm_cost(net: NetState,

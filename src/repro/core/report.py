@@ -2,14 +2,34 @@
 
 The paper reports average container response time, average container
 runtime, and total cost; plus the per-tick series used in Figs 4-10.
+``sweep_summaries``/``sweep_table`` extend that to the sweep driver's
+[P, S, N]-batched outputs: one summary row per (policy, scenario, seed)
+cell and a grouped text table (seed-averaged, scenario rows x policy
+columns) for any summary metric.
 """
 from __future__ import annotations
 
-from typing import Any, Dict
+import math
+from typing import Any, Dict, List, Sequence
 
+import jax
 import numpy as np
 
 from repro.core.types import STATUS_COMPLETED, SimState, TickMetrics
+
+
+def json_clean(obj):
+    """Recursively replace non-finite floats with None so summary rows
+    serialize to STRICTLY valid JSON (``json.dump`` would happily emit the
+    ``NaN`` literal that jq / JSON.parse / pandas reject; a zero-completion
+    run makes ``avg_runtime`` etc. NaN)."""
+    if isinstance(obj, float) and not math.isfinite(obj):
+        return None
+    if isinstance(obj, dict):
+        return {k: json_clean(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [json_clean(v) for v in obj]
+    return obj
 
 
 def summarize(final: SimState, metrics: TickMetrics) -> Dict[str, Any]:
@@ -31,6 +51,7 @@ def summarize(final: SimState, metrics: TickMetrics) -> Dict[str, Any]:
         x = x[np.isfinite(x)]
         return float(x.mean()) if x.size else float("nan")
 
+    comm_time = np.asarray(ct.comm_time)[born]
     return {
         "n_containers": int(born.sum()),
         "n_completed": int(completed.sum()),
@@ -38,7 +59,10 @@ def summarize(final: SimState, metrics: TickMetrics) -> Dict[str, Any]:
         "avg_response_time": nanmean(resp),
         "avg_runtime": nanmean(runtime),           # submit -> finish
         "avg_exec_time": nanmean(exec_time),       # deploy -> finish
-        "avg_comm_time": float(np.asarray(ct.comm_time)[born].mean()),
+        # empty-slice mean warns and an all-unborn state has no comm series;
+        # zero completions / zero arrivals must stay a summarizable run
+        "avg_comm_time": float(comm_time.mean()) if comm_time.size
+        else float("nan"),
         "total_cost": float(final.total_cost),
         "total_migrations": int(np.asarray(ct.n_migrations).sum()),
         "mean_util_variance": float(np.asarray(metrics.util_variance).mean()),
@@ -60,3 +84,55 @@ def to_csv(metrics: TickMetrics, path: str) -> None:
     rows = np.stack([ts[k].astype(np.float64) for k in keys], axis=1)
     header = ",".join(keys)
     np.savetxt(path, rows, delimiter=",", header=header, comments="")
+
+
+# ---------------------------------------------------------------------------
+# Sweep reporting: [P, S, N]-batched finals/metrics -> rows -> grouped table
+# ---------------------------------------------------------------------------
+def sweep_summaries(finals: SimState, metrics: TickMetrics,
+                    policies: Sequence[str], scenarios: Sequence[str],
+                    seeds: Sequence[int]) -> List[Dict[str, Any]]:
+    """One :func:`summarize` row per sweep cell, tagged with its coordinates.
+
+    ``finals``/``metrics`` carry leading [P, S, N] axes (policy, scenario,
+    seed) as returned by ``repro.launch.sweep.run_sweep``.  Each cell's row
+    is numerically identical to summarizing the corresponding standalone
+    ``run_sim`` — the sweep acceptance property.
+    """
+    finals_np = jax.tree.map(np.asarray, finals)
+    metrics_np = jax.tree.map(np.asarray, metrics)
+    rows = []
+    for p, pol in enumerate(policies):
+        for s, scen in enumerate(scenarios):
+            for n, seed in enumerate(seeds):
+                cell = lambda x: x[p, s, n]
+                rep = summarize(jax.tree.map(cell, finals_np),
+                                jax.tree.map(cell, metrics_np))
+                rep.update(policy=pol, scenario=scen, seed=int(seed))
+                rows.append(rep)
+    return rows
+
+
+def sweep_table(rows: Sequence[Dict[str, Any]],
+                value: str = "avg_runtime") -> str:
+    """Grouped summary table: scenario rows x policy columns, the ``value``
+    metric averaged over seeds — the sweep-level view of paper Figs 4-10.
+    """
+    policies = sorted({r["policy"] for r in rows})
+    scenarios = list(dict.fromkeys(r["scenario"] for r in rows))
+    cells = {}
+    for r in rows:
+        cells.setdefault((r["scenario"], r["policy"]), []).append(r[value])
+    width = max(12, max(len(p) for p in policies) + 2)
+    swidth = max(10, max(len(s) for s in scenarios) + 2)
+    lines = [f"{value} (mean over seeds)",
+             "".join([" " * swidth] + [p.rjust(width) for p in policies])]
+    for scen in scenarios:
+        cols = []
+        for pol in policies:
+            vals = np.asarray(cells.get((scen, pol), []), np.float64)
+            vals = vals[np.isfinite(vals)]
+            cols.append((f"{vals.mean():.3f}" if vals.size else "nan")
+                        .rjust(width))
+        lines.append("".join([scen.ljust(swidth)] + cols))
+    return "\n".join(lines)

@@ -1,0 +1,135 @@
+"""Scenario layer: declarative sweep points -> batched simulator inputs.
+
+A :class:`ScenarioSpec` names everything one cell of a sweep varies — link
+bandwidth/loss, arrival pattern, host price/capacity mix, runtime
+thresholds — WITHOUT touching anything shape- or compile-affecting.  The
+builders turn a list of specs into exactly two batched pytrees:
+
+* a ``SimState`` with leading axes ``[S, N]`` (scenario x seed): hosts,
+  workload, base network (different host mixes and arrival processes are
+  different *state*, which vmaps for free);
+* a ``RunParams`` with leading axis ``[S]``: bw/loss overrides and the
+  runtime knobs, applied inside ``engine.simulate`` at t=0.
+
+``repro/launch/sweep.py`` feeds both (plus a policy batch) to one
+``jax.jit(vmap(vmap(vmap(simulate))))`` call — the paper's Figs 4-10
+evaluation grid as a single compiled program.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.datacenter import SimConfig, mixed_hosts
+from repro.core.engine import init_sim
+from repro.core.network import SpineLeafSpec, build_network
+from repro.core.types import RunParams, SimState
+from repro.core.workload import bursty_workload, paper_workload, trace_workload
+
+ARRIVALS: dict[str, Callable] = {
+    "paper": paper_workload,
+    "trace": trace_workload,
+    "bursty": bursty_workload,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    """One sweep point.  ``None`` means "keep the config/topology default"
+    — it maps onto the RunParams keep-sentinels, so every spec produces the
+    same pytree structure and a ladder stacks into one batch axis."""
+
+    name: str
+    bw: float | None = None            # uniform link bandwidth (Mbps)
+    loss: float | None = None          # uniform link loss fraction
+    arrival: str = "paper"             # paper | trace | bursty
+    host_mix: str = "paper"            # datacenter.HOST_MIXES key
+    queue_coef: float | None = None
+    overload_threshold: float | None = None
+    idle_threshold: float | None = None
+
+    def __post_init__(self):
+        # the RunParams sentinels (<=0 bw, <0 loss) mean "keep"; reject
+        # spec values inside that domain instead of silently not overriding
+        if self.bw is not None and self.bw <= 0:
+            raise ValueError(f"{self.name}: bw must be > 0 Mbps, "
+                             f"got {self.bw}")
+        if self.loss is not None and self.loss < 0:
+            raise ValueError(f"{self.name}: loss must be >= 0, "
+                             f"got {self.loss}")
+        if self.arrival not in ARRIVALS:
+            raise KeyError(f"{self.name}: unknown arrival "
+                           f"{self.arrival!r}; known: {sorted(ARRIVALS)}")
+
+    def run_params(self, cfg: SimConfig) -> RunParams:
+        base = cfg.run_params()
+        f32 = lambda v, dflt: dflt if v is None else jnp.asarray(
+            v, jnp.float32)
+        return RunParams(
+            bw_mbps=f32(self.bw, base.bw_mbps),
+            loss=f32(self.loss, base.loss),
+            queue_coef=f32(self.queue_coef, base.queue_coef),
+            overload_threshold=f32(self.overload_threshold,
+                                   base.overload_threshold),
+            idle_threshold=f32(self.idle_threshold, base.idle_threshold),
+        )
+
+
+def default_scenarios() -> list[ScenarioSpec]:
+    """The paper's evaluation grid as data: a healthy fabric, the Fig 5/8
+    degraded-network ladder, a flash-crowd arrival process, and a
+    heterogeneous-fleet price/capacity mix."""
+    return [
+        ScenarioSpec("baseline"),
+        ScenarioSpec("slow_net", bw=200.0),
+        ScenarioSpec("lossy_net", bw=500.0, loss=0.02),
+        ScenarioSpec("bursty", arrival="bursty"),
+        ScenarioSpec("premium_hosts", host_mix="premium"),
+    ]
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def build_scenario(spec: ScenarioSpec, cfg: SimConfig, n_hosts: int = 20,
+                   n_spine: int = 2, n_leaf: int = 4,
+                   seeds: Sequence[int] = (0,), net=None):
+    """One scenario -> (SpineLeafSpec, SimState batched over seeds [N, ...],
+    RunParams).  The network is built at topology defaults; the spec's
+    bw/loss ride in the RunParams and hit the links inside the compiled run.
+    ``net`` lets callers share one built topology across scenarios.
+    """
+    net_spec = SpineLeafSpec(n_spine=n_spine, n_leaf=n_leaf, n_hosts=n_hosts)
+    net = build_network(net_spec) if net is None else net
+    hosts = mixed_hosts(spec.host_mix, n_hosts, n_leaf)
+    gen = ARRIVALS[spec.arrival]
+    sims = [init_sim(hosts, gen(cfg, seed=s), net, seed=s) for s in seeds]
+    return net_spec, _stack(sims), spec.run_params(cfg)
+
+
+def build_scenarios(specs: Sequence[ScenarioSpec], cfg: SimConfig,
+                    n_hosts: int = 20, n_spine: int = 2, n_leaf: int = 4,
+                    seeds: Sequence[int] = (0,)):
+    """Scenario list -> (SpineLeafSpec, SimState [S, N, ...], RunParams [S]).
+
+    Every spec must share the topology shape (same host/leaf/spine counts)
+    — that is the compile-relevant part; everything a spec *does* vary is
+    state or RunParams, so the stacked batch runs under one compilation,
+    and the O(H^2) topology build happens once, not once per scenario.
+    """
+    net = build_network(SpineLeafSpec(n_spine=n_spine, n_leaf=n_leaf,
+                                      n_hosts=n_hosts))
+    spec_net = None
+    sims, params = [], []
+    for spec in specs:
+        net_spec, sim, rp = build_scenario(spec, cfg, n_hosts=n_hosts,
+                                           n_spine=n_spine, n_leaf=n_leaf,
+                                           seeds=seeds, net=net)
+        spec_net = spec_net or net_spec
+        sims.append(sim)
+        params.append(rp)
+    return spec_net, _stack(sims), _stack(params)

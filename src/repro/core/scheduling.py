@@ -1,29 +1,39 @@
-"""Container scheduling module (paper §3.5) — unified score-based Policy API.
+"""Container scheduling module (paper §3.5) — policy-as-data.
 
-Every algorithm is expressed through ONE batched scoring interface:
+A scheduling algorithm is split into a *code* half and a *data* half:
 
-* ``select_key(sim) -> i32[C]`` — selection order over containers (lower =
-  scheduled earlier, ``INT_BIG`` = not schedulable this tick);
-* ``place_score(sim, cand, cfg) -> f32[K, H]`` — per-candidate host
-  preference (lower = better), computed once per placement round;
-* optional ``DynamicTerm`` — a scan-carried score component for policies
-  whose host preference depends on decisions made earlier in the same round
-  (Round's rotating pointer, JobGroup/NetAware same-job co-location counts).
+* the code half is a :class:`PolicyDef` — a named set of scoring branch
+  functions (selection key, per-candidate host-preference row, placement
+  carry hooks, optional migration rule) registered into a branch table;
+* the data half is a :class:`PolicyParams` pytree (``types.py``) — the
+  branch index plus a weight vector.
 
-Both engine paths consume the SAME hooks: the batched conflict-resolved
-round (``engine._place_batched``) and the sequential reference path
-(``engine._place_sequential``, a K=1 degenerate round applied
-``placements_per_tick`` times) — so batched == sequential placements by
-construction for every registered policy, including the co-location ones.
+The engine never sees a ``PolicyDef`` directly: every hook is evaluated
+through a ``lax.switch`` over the registered branches, indexed by
+``PolicyParams.policy_id``.  What varies between policies is therefore pure
+data, so a batch of policies is a ``PolicyParams`` with a leading axis and a
+policy sweep is ONE compiled program (see ``repro/launch/sweep.py``) —
+instead of one XLA compilation per algorithm.
 
-Migration signature: ``migrate(sim, cfg) -> (container | -1, dst | -1)``.
-Users extend by registering a Policy — the paper's "flexible and scalable
-interface for scheduling algorithms".
+The scoring interface itself is unchanged from the unified score-based API:
+
+* ``select_key(sim, pol) -> i32[C]`` — selection order over containers
+  (lower = scheduled earlier, ``INT_BIG`` = not schedulable this tick);
+* ``host_row(sim, cfg, params, pol, carry, k, cand, used) -> f32[H]`` —
+  candidate ``k``'s host preference (lower = better);
+* a scan-carried :class:`PlaceCarry` (Round's rotating pointer + the
+  same-job co-location counts) updated after every admit, so intra-round
+  decisions see each other and batched == sequential placements exactly.
+
+Migration: ``migrate(sim, cfg, params, pol) -> (container | -1, dst | -1)``,
+dispatched through the same branch table (policies without a migration rule
+hit a no-op branch).  Users extend by registering a ``PolicyDef`` — the
+paper's "flexible and scalable interface for scheduling algorithms".
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -31,12 +41,15 @@ import jax.numpy as jnp
 from repro.core import network
 from repro.core.datacenter import SimConfig
 from repro.core.types import (
-    STATUS_COMMUNICATING, STATUS_INACTIVE, STATUS_MIGRATING, STATUS_RUNNING,
-    STATUS_WAITING, SimState,
+    NUM_POLICY_WEIGHTS, STATUS_COMMUNICATING, STATUS_INACTIVE,
+    STATUS_MIGRATING, STATUS_RUNNING, STATUS_WAITING, PolicyParams, RunParams,
+    SimState,
 )
 
 BIG = jnp.float32(1e18)          # host-score sentinel (infeasible)
 INT_BIG = jnp.int32(2**31 - 1)   # selection-key sentinel (unschedulable)
+
+DEFAULT_WEIGHTS = (network.DEFAULT_UTIL_WEIGHT, network.DEFAULT_CROSS_LEAF_MS)
 
 
 # ---------------------------------------------------------------------------
@@ -91,75 +104,18 @@ def _first_true(order_key: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
-# Static placement scores (paper §3.5 algorithms 2-3)
+# The unified placement carry
 #
-# ``place_score(sim, cand, cfg) -> f32[K, H]``: per-candidate host preference
-# (lower = better; argmin breaks ties toward the lowest host index).
-# Feasibility is NOT baked in — the engine masks infeasible hosts against its
-# live resource counters so intra-round decisions see each other.
+# One pytree shape shared by every branch, so ``lax.switch`` can dispatch
+# over policies whose scores carry different things: Round rotates ``rr``,
+# the co-location policies (JobGroup, NetAware) update ``counts``, the
+# static scores touch neither.
 # ---------------------------------------------------------------------------
-def score_firstfit(sim: SimState, cand: jnp.ndarray,
-                   cfg: SimConfig) -> jnp.ndarray:
-    """FirstFit [36]: lowest-numbered host satisfying the constraints."""
-    H = sim.hosts.cap.shape[0]
-    return jnp.broadcast_to(jnp.arange(H, dtype=jnp.float32),
-                            (cand.shape[0], H))
+class PlaceCarry(NamedTuple):
+    rr: jnp.ndarray      # i32[]    Round's rotating last-used-host pointer
+    counts: jnp.ndarray  # f32[K,H] deployed same-job containers per host
 
 
-def score_performance_first(sim: SimState, cand: jnp.ndarray,
-                            cfg: SimConfig) -> jnp.ndarray:
-    """PerformanceFirst (DRAPS-derived): fastest host for the candidate's
-    primary resource."""
-    ctype = sim.containers.ctype[cand]                       # [K]
-    return -sim.hosts.speed.T[ctype]                         # [K, H]
-
-
-# ---------------------------------------------------------------------------
-# Scan-carried dynamic terms
-#
-# A DynamicTerm replaces the static score row for policies whose preference
-# depends on the round's earlier decisions.  The carry is a pytree threaded
-# through the engine's admit scan:
-#   init(sim, cand, cfg) -> carry            once per round
-#   row(sim, cfg, carry, k, cand, used) -> f32[H]   per candidate
-#   update(sim, cfg, carry, k, cand, hh, ok) -> carry   after each admit
-#   commit(sched, carry) -> sched            persist across ticks (Round)
-# ---------------------------------------------------------------------------
-def _commit_noop(sched, carry):
-    return sched
-
-
-@dataclasses.dataclass(frozen=True)
-class DynamicTerm:
-    init: Callable
-    row: Callable
-    update: Callable
-    commit: Callable = _commit_noop
-
-
-# --- Round (paper §3.5 algorithm: first feasible host after the last used) --
-def _round_init(sim: SimState, cand: jnp.ndarray, cfg: SimConfig):
-    return sim.sched.rr_pointer
-
-
-def _round_row(sim: SimState, cfg: SimConfig, rr, k, cand, used):
-    H = sim.hosts.cap.shape[0]
-    return jnp.mod(jnp.arange(H) - rr - 1, H).astype(jnp.float32)
-
-
-def _round_update(sim: SimState, cfg: SimConfig, rr, k, cand, hh, ok):
-    return jnp.where(ok, hh, rr)
-
-
-def _round_commit(sched, rr):
-    return sched._replace(rr_pointer=rr)
-
-
-ROUND_DYNAMIC = DynamicTerm(_round_init, _round_row, _round_update,
-                            _round_commit)
-
-
-# --- Same-job co-location carry (JobGroup, NetAware) -----------------------
 def same_job_host_counts(sim: SimState, cand: jnp.ndarray) -> jnp.ndarray:
     """[K, H] deployed same-job container count per host, per candidate."""
     H = sim.hosts.cap.shape[0]
@@ -174,17 +130,62 @@ def same_job_host_counts(sim: SimState, cand: jnp.ndarray) -> jnp.ndarray:
     )(same.astype(jnp.float32))
 
 
-def _coloc_init(sim: SimState, cand: jnp.ndarray, cfg: SimConfig):
-    return same_job_host_counts(sim, cand)
+def _zero_counts(sim: SimState, cand: jnp.ndarray) -> jnp.ndarray:
+    return jnp.zeros((cand.shape[0], sim.hosts.cap.shape[0]), jnp.float32)
 
 
-def _coloc_update(sim: SimState, cfg: SimConfig, counts, k, cand, hh, ok):
+# --- carry init branches: (sim, cand) -> PlaceCarry ------------------------
+def _init_static(sim: SimState, cand: jnp.ndarray) -> PlaceCarry:
+    return PlaceCarry(rr=sim.sched.rr_pointer, counts=_zero_counts(sim, cand))
+
+
+def _init_coloc(sim: SimState, cand: jnp.ndarray) -> PlaceCarry:
+    return PlaceCarry(rr=sim.sched.rr_pointer,
+                      counts=same_job_host_counts(sim, cand))
+
+
+# --- carry update branches: (sim, carry, k, cand, hh, ok) -> PlaceCarry ----
+def _update_noop(sim, carry, k, cand, hh, ok) -> PlaceCarry:
+    return carry
+
+
+def _update_round(sim, carry, k, cand, hh, ok) -> PlaceCarry:
+    return carry._replace(rr=jnp.where(ok, hh, carry.rr))
+
+
+def _update_coloc(sim, carry, k, cand, hh, ok) -> PlaceCarry:
     """Admitting candidate k onto host hh raises the co-location count of
     every later same-job candidate — the intra-round carry that makes the
     batched round match the sequential reference exactly."""
     same = sim.containers.job[cand] == sim.containers.job[cand[k]]
     inc = same.astype(jnp.float32) * ok.astype(jnp.float32)
-    return counts.at[:, hh].add(inc)
+    return carry._replace(counts=carry.counts.at[:, hh].add(inc))
+
+
+# ---------------------------------------------------------------------------
+# Host-preference rows (paper §3.5 algorithms 2-3)
+#
+# ``row(sim, cfg, params, w, carry, k, cand, used) -> f32[H]``: candidate
+# ``k``'s host preference (lower = better; argmin breaks ties toward the
+# lowest host index).  Feasibility is NOT baked in — the engine masks
+# infeasible hosts against its live resource counters so intra-round
+# decisions see each other.  ``w`` is the policy's weight vector.
+# ---------------------------------------------------------------------------
+def _row_firstfit(sim, cfg, params, w, carry, k, cand, used):
+    """FirstFit [36]: lowest-numbered host satisfying the constraints."""
+    return jnp.arange(sim.hosts.cap.shape[0], dtype=jnp.float32)
+
+
+def _row_performance_first(sim, cfg, params, w, carry, k, cand, used):
+    """PerformanceFirst (DRAPS-derived): fastest host for the candidate's
+    primary resource."""
+    return -sim.hosts.speed[:, sim.containers.ctype[cand[k]]]
+
+
+def _row_round(sim, cfg, params, w, carry, k, cand, used):
+    """Round (paper §3.5): first feasible host after the last used one."""
+    H = sim.hosts.cap.shape[0]
+    return jnp.mod(jnp.arange(H) - carry.rr - 1, H).astype(jnp.float32)
 
 
 def _worst_fit_row(sim: SimState, used: jnp.ndarray) -> jnp.ndarray:
@@ -193,39 +194,34 @@ def _worst_fit_row(sim: SimState, used: jnp.ndarray) -> jnp.ndarray:
     return -free.sum(axis=1)
 
 
-def _jobgroup_row(sim: SimState, cfg: SimConfig, counts, k, cand, used):
+def _row_jobgroup(sim, cfg, params, w, carry, k, cand, used):
     """JobGroup (CA-WFD-derived): host holding the most same-job containers;
     worst-fit on free resources while the job has none deployed."""
-    cnt = counts[k]
+    cnt = carry.counts[k]
     return jnp.where(cnt.sum() > 0, -cnt, _worst_fit_row(sim, used))
 
 
-JOBGROUP_DYNAMIC = DynamicTerm(_coloc_init, _jobgroup_row, _coloc_update)
-
-
-def _netaware_row(sim: SimState, cfg: SimConfig, counts, k, cand, used):
+def _row_netaware(sim, cfg, params, w, carry, k, cand, used):
     """NetAware: mean expected communication cost from each host to the
     candidate's deployed same-job peers, under the current fabric state.
 
     ``NetState.comm_cost`` (delay matrix + bottleneck link utilization along
-    the ECMP path + cross-leaf penalty, refreshed with the delay matrix)
-    prices every host pair; peers placed earlier in the same round are in
-    ``counts`` via the co-location carry.  Jobs with no deployed peers fall
-    back to worst-fit, like JobGroup.
+    the ECMP path + cross-leaf penalty, re-weighted from the policy's weight
+    vector at every delay refresh) prices every host pair; peers placed
+    earlier in the same round are in ``carry.counts`` via the co-location
+    carry.  Jobs with no deployed peers fall back to worst-fit, like
+    JobGroup.
     """
-    cnt = counts[k]                                          # [H] peers/host
+    cnt = carry.counts[k]                                    # [H] peers/host
     cost = cnt @ sim.net.comm_cost                           # [H] total cost
     return jnp.where(cnt.sum() > 0, cost / jnp.maximum(cnt.sum(), 1.0),
                      _worst_fit_row(sim, used))
 
 
-NETAWARE_DYNAMIC = DynamicTerm(_coloc_init, _netaware_row, _coloc_update)
-
-
 # ---------------------------------------------------------------------------
 # Migration (paper §3.5 algorithm 1, DRAPS-derived)
 # ---------------------------------------------------------------------------
-def _overload_source(sim: SimState, cfg: SimConfig):
+def _overload_source(sim: SimState, cfg: SimConfig, params: RunParams):
     """Shared source/container selection for the migration policies.
 
     Returns (src, cont, src_c, dst_mask):
@@ -236,12 +232,11 @@ def _overload_source(sim: SimState, cfg: SimConfig):
     """
     util = sim.hosts.used / jnp.maximum(sim.hosts.cap, 1e-6)   # [H, 3]
     worst = util.max(axis=1)
-    overloaded = worst > cfg.overload_threshold
+    overloaded = worst > params.overload_threshold
     H = worst.shape[0]
     src = _first_true(-worst, overloaded)
     src_c = jnp.clip(src, 0, H - 1)
     bottleneck = jnp.argmax(util[src_c])                       # resource index
-
     st = sim.containers.status
     movable = (st == STATUS_RUNNING) & (sim.containers.host == src_c)
     usage = sim.containers.req[:, bottleneck]
@@ -252,7 +247,7 @@ def _overload_source(sim: SimState, cfg: SimConfig):
     req = sim.containers.req[cont_c]
     feas = feasible_hosts(sim.hosts.cap, sim.hosts.used,
                           sim.hosts.n_containers, req, cfg)
-    idle = (util < cfg.idle_threshold).all(axis=1)
+    idle = (util < params.idle_threshold).all(axis=1)
     dst_mask = feas & idle & (jnp.arange(H) != src_c)
     return src, cont, src_c, dst_mask
 
@@ -262,24 +257,34 @@ def _migration_pair(src, cont, dst):
     return jnp.where(ok, cont, -1), jnp.where(ok, dst, -1)
 
 
-def overload_migrate(sim: SimState, cfg: SimConfig):
+def _migrate_none(sim: SimState, cfg: SimConfig, params: RunParams):
+    """No-migration branch: uniform (container, dst) = (-1, -1)."""
+    minus1 = jnp.full((), -1, jnp.int32)
+    return minus1, minus1
+
+
+def overload_migrate(sim: SimState, cfg: SimConfig,
+                     params: RunParams | None = None):
     """Relieve the most overloaded host; first-fit destination.
 
     Returns (-1, -1) when no (source, container, destination) triple exists.
     """
-    src, cont, src_c, dst_mask = _overload_source(sim, cfg)
+    params = cfg.run_params() if params is None else params
+    src, cont, src_c, dst_mask = _overload_source(sim, cfg, params)
     H = dst_mask.shape[0]
     dst = _first_true(jnp.arange(H, dtype=jnp.float32), dst_mask)
     return _migration_pair(src, cont, dst)
 
 
-def congestion_migrate(sim: SimState, cfg: SimConfig):
+def congestion_migrate(sim: SimState, cfg: SimConfig,
+                       params: RunParams | None = None):
     """Congestion-aware variant: same source/container selection, but the
     destination minimizes the bottleneck link utilization of the ECMP path
     the migration flow will traverse (index tie-break) — instead of blindly
     taking the first feasible idle host across a hot spine."""
-    src, cont, src_c, dst_mask = _overload_source(sim, cfg)
-    path_util = network.path_util_matrix(sim.net)[src_c]       # f32[H]
+    params = cfg.run_params() if params is None else params
+    src, cont, src_c, dst_mask = _overload_source(sim, cfg, params)
+    path_util = network.path_util_row(sim.net, src_c)          # f32[H]
     dst = _first_true(path_util, dst_mask)
     return _migration_pair(src, cont, dst)
 
@@ -288,77 +293,152 @@ def congestion_migrate(sim: SimState, cfg: SimConfig):
 # Registry (paper: "easy extensibility of container scheduling algorithms")
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
-class Policy:
-    """Scheduling algorithm = selection key + placement score (+ migration).
+class PolicyDef:
+    """The *code* half of a scheduling algorithm: one registered branch of
+    the ``lax.switch`` dispatch tables.
 
-    ``place_score`` may be omitted when ``dynamic`` fully determines the
-    host preference (JobGroup, NetAware); ``dynamic`` may be omitted for
-    purely static scores (FirstFit, PerformanceFirst).  The engine consumes
-    either through :meth:`host_row`, identically on the batched and the
-    derived sequential path.
+    ``row`` is mandatory; the carry hooks default to no-ops (static scores)
+    and ``migrate`` to the no-op branch.  ``weights`` seeds
+    ``PolicyParams.weights`` — the cost-model-driven knobs a sweep (or a
+    future learned-weight search) varies without recompiling.
     """
 
     name: str
-    place_score: Callable | None = None  # (sim, cand, cfg) -> f32[K, H]
-    select_key: Callable = select_key_fifo  # (sim) -> i32[C], INT_BIG = skip
-    dynamic: DynamicTerm | None = None
-    migrate: Callable | None = None      # (sim, cfg) -> (container, dst)
+    row: Callable                    # (sim, cfg, params, w, carry, k, cand,
+    #                                   used) -> f32[H]
+    init: Callable = _init_static    # (sim, cand) -> PlaceCarry
+    update: Callable = _update_noop  # (sim, carry, k, cand, hh, ok) -> carry
+    select: Callable = select_key_fifo  # (sim) -> i32[C], INT_BIG = skip
+    migrate: Callable = _migrate_none   # (sim, cfg, params) -> (cont, dst)
+    weights: tuple[float, ...] = DEFAULT_WEIGHTS
 
     def __post_init__(self):
-        if self.place_score is None and self.dynamic is None:
+        if len(self.weights) != NUM_POLICY_WEIGHTS:
             raise ValueError(
-                f"policy {self.name!r} needs a place_score or a DynamicTerm")
-        if self.place_score is not None and self.dynamic is not None:
-            raise ValueError(
-                f"policy {self.name!r}: a DynamicTerm replaces the static "
-                "score row entirely — fold the static part into "
-                "DynamicTerm.row instead of providing both")
-
-    # -- engine hooks (no-ops when the policy has no dynamic term) ----------
-    def host_row(self, sim, cfg, score, carry, k, cand, used) -> jnp.ndarray:
-        """The one scoring rule both engine paths evaluate: the f32[H]
-        preference row for candidate ``k`` given the round's live state."""
-        if self.dynamic is None:
-            return score[k]
-        return self.dynamic.row(sim, cfg, carry, k, cand, used)
-
-    def carry_init(self, sim, cand, cfg):
-        return () if self.dynamic is None else self.dynamic.init(sim, cand, cfg)
-
-    def carry_update(self, sim, cfg, carry, k, cand, hh, ok):
-        if self.dynamic is None:
-            return carry
-        return self.dynamic.update(sim, cfg, carry, k, cand, hh, ok)
-
-    def carry_commit(self, sched, carry):
-        return sched if self.dynamic is None else self.dynamic.commit(
-            sched, carry)
+                f"policy {self.name!r}: weights must have "
+                f"{NUM_POLICY_WEIGHTS} entries, got {len(self.weights)}")
 
 
-_REGISTRY: dict[str, Policy] = {}
+_REGISTRY: dict[str, int] = {}   # name -> branch index (registration order)
+_DEFS: list[PolicyDef] = []
+_REGISTRY_VERSION = 0
 
 
-def register(policy: Policy) -> Policy:
-    _REGISTRY[policy.name] = policy
-    return policy
+def registry_version() -> int:
+    """Monotone counter bumped by every (re-)registration.  The engine keys
+    its jit caches on it: the branch tables are baked into compiled switch
+    dispatch, so a registration AFTER a compiled run must invalidate that
+    cache — otherwise ``lax.switch`` would clamp the new branch index into
+    the stale table and silently run the wrong policy."""
+    return _REGISTRY_VERSION
 
 
-def get_policy(name: str) -> Policy:
+def register(pdef: PolicyDef) -> PolicyDef:
+    """Add (or replace, by name) a scoring branch.  The branch tables are
+    read at trace time; :func:`registry_version` makes sure previously
+    compiled runs are re-traced after a new registration."""
+    global _REGISTRY_VERSION
+    if pdef.name in _REGISTRY:
+        _DEFS[_REGISTRY[pdef.name]] = pdef
+    else:
+        _REGISTRY[pdef.name] = len(_DEFS)
+        _DEFS.append(pdef)
+    _REGISTRY_VERSION += 1
+    return pdef
+
+
+def get_policy(name: str, weights=None) -> PolicyParams:
+    """The data handle for a registered policy: branch id + weight vector.
+
+    ``weights`` overrides the branch's default weight vector — policy
+    variants (e.g. a heavier cross-leaf penalty) are new *data*, not new
+    code, so they share the compiled program.
+    """
     try:
-        return _REGISTRY[name]
+        idx = _REGISTRY[name]
     except KeyError:
         raise KeyError(
             f"unknown policy {name!r}; known: {sorted(_REGISTRY)}") from None
+    w = _DEFS[idx].weights if weights is None else tuple(weights)
+    if len(w) != NUM_POLICY_WEIGHTS:
+        # a short vector would be silently clamped by jit-mode gathers
+        # (weights[W_CROSS_LEAF] -> index 0), a long one breaks stacking
+        raise ValueError(
+            f"policy {name!r}: weights must have {NUM_POLICY_WEIGHTS} "
+            f"entries, got {len(w)}")
+    return PolicyParams(policy_id=jnp.asarray(idx, jnp.int32),
+                        weights=jnp.asarray(w, jnp.float32))
+
+
+def policy_name(pol: PolicyParams) -> str:
+    """Registered name for a (concrete, unbatched) PolicyParams."""
+    return _DEFS[int(pol.policy_id)].name
 
 
 def list_policies() -> list[str]:
     return sorted(_REGISTRY)
 
 
-register(Policy("firstfit", score_firstfit))
-register(Policy("round", dynamic=ROUND_DYNAMIC))
-register(Policy("performance_first", score_performance_first))
-register(Policy("jobgroup", dynamic=JOBGROUP_DYNAMIC))
-register(Policy("netaware", dynamic=NETAWARE_DYNAMIC,
-                migrate=congestion_migrate))
-register(Policy("overload_migrate", score_firstfit, migrate=overload_migrate))
+# ---------------------------------------------------------------------------
+# Switch-dispatched hooks — the ONLY policy surface the engine consumes.
+# Branch index is data (PolicyParams.policy_id), so under a policy-batched
+# vmap every branch is evaluated and selected per cell; on an unbatched run
+# only the selected branch executes.
+# ---------------------------------------------------------------------------
+def select_key(sim: SimState, pol: PolicyParams) -> jnp.ndarray:
+    return jax.lax.switch(pol.policy_id,
+                          tuple(d.select for d in _DEFS), sim)
+
+
+def init_place_carry(sim: SimState, cand: jnp.ndarray,
+                     pol: PolicyParams) -> PlaceCarry:
+    return jax.lax.switch(pol.policy_id,
+                          tuple(d.init for d in _DEFS), sim, cand)
+
+
+def host_row(sim: SimState, cfg: SimConfig, params: RunParams,
+             pol: PolicyParams, carry: PlaceCarry, k, cand,
+             used) -> jnp.ndarray:
+    """The one scoring rule both engine paths evaluate: the f32[H]
+    preference row for candidate ``k`` given the round's live state."""
+    branches = tuple(
+        (lambda d: lambda s, p, w, cr, kk, cd, us:
+            d.row(s, cfg, p, w, cr, kk, cd, us))(d)
+        for d in _DEFS)
+    return jax.lax.switch(pol.policy_id, branches,
+                          sim, params, pol.weights, carry, k, cand, used)
+
+
+def update_place_carry(sim: SimState, pol: PolicyParams, carry: PlaceCarry,
+                       k, cand, hh, ok) -> PlaceCarry:
+    return jax.lax.switch(pol.policy_id,
+                          tuple(d.update for d in _DEFS),
+                          sim, carry, k, cand, hh, ok)
+
+
+def commit_place_carry(sched, carry: PlaceCarry):
+    """Persist the round's carry across ticks.  Only the rotating pointer
+    outlives the round; non-Round branches never move it, so the write is
+    an identity for them."""
+    return sched._replace(rr_pointer=carry.rr)
+
+
+def migrate(sim: SimState, cfg: SimConfig, params: RunParams,
+            pol: PolicyParams):
+    branches = tuple(
+        (lambda d: lambda s, p: d.migrate(s, cfg, p))(d) for d in _DEFS)
+    return jax.lax.switch(pol.policy_id, branches, sim, params)
+
+
+# ---------------------------------------------------------------------------
+# The six registered branches (paper §3.5 + the PR 2 network-aware pair)
+# ---------------------------------------------------------------------------
+register(PolicyDef("firstfit", _row_firstfit))
+register(PolicyDef("round", _row_round, update=_update_round))
+register(PolicyDef("performance_first", _row_performance_first))
+register(PolicyDef("jobgroup", _row_jobgroup, init=_init_coloc,
+                   update=_update_coloc))
+register(PolicyDef("netaware", _row_netaware, init=_init_coloc,
+                   update=_update_coloc, migrate=congestion_migrate))
+register(PolicyDef("overload_migrate", _row_firstfit,
+                   migrate=overload_migrate))

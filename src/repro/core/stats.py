@@ -11,13 +11,15 @@ import jax.numpy as jnp
 
 from repro.core.types import (
     STATUS_COMMUNICATING, STATUS_COMPLETED, STATUS_INACTIVE, STATUS_MIGRATING,
-    STATUS_RUNNING, STATUS_WAITING, SimState, TickMetrics,
+    STATUS_RUNNING, STATUS_WAITING, RunParams, SimState, TickMetrics,
 )
 
 
 def collect(sim: SimState, new_arrivals: jnp.ndarray, decisions: jnp.ndarray,
-            migrations: jnp.ndarray, overload_threshold: float,
+            migrations: jnp.ndarray, params: RunParams,
             flow_active: jnp.ndarray, flow_rates: jnp.ndarray) -> TickMetrics:
+    """Per-tick metrics; ``params`` carries the (traced, sweepable)
+    overload threshold the ``n_overloaded`` count is judged against."""
     st = sim.containers.status
     util = sim.hosts.used / jnp.maximum(sim.hosts.cap, 1e-6)      # [H, 3]
     worst = util.max(axis=1)
@@ -30,7 +32,7 @@ def collect(sim: SimState, new_arrivals: jnp.ndarray, decisions: jnp.ndarray,
     count = lambda code: (st == code).sum()
     return TickMetrics(
         t=sim.t,
-        n_overloaded=(worst > overload_threshold).sum(),
+        n_overloaded=(worst > params.overload_threshold).sum(),
         n_inactive=count(STATUS_INACTIVE) + count(STATUS_WAITING),
         n_running=count(STATUS_RUNNING),
         n_deployed=(count(STATUS_RUNNING) + count(STATUS_COMMUNICATING)

@@ -104,6 +104,49 @@ class NetState(NamedTuple):
     comm_cost: jnp.ndarray    # f32[H, H]
 
 
+class PolicyParams(NamedTuple):
+    """The *data* half of a scheduling policy (the code half is the branch
+    table in ``repro.core.scheduling``).
+
+    What distinguishes one policy from another in a compiled run is pure
+    data: a branch index dispatched with ``lax.switch`` plus a weight vector
+    consumed by the cost-model-driven scores.  Because both leaves are
+    arrays, a *batch* of policies is just a ``PolicyParams`` with a leading
+    axis — ``vmap`` sweeps every registered algorithm inside one XLA
+    program instead of recompiling per policy.
+    """
+
+    policy_id: jnp.ndarray   # i32[]  branch index into the registry
+    weights: jnp.ndarray     # f32[NUM_POLICY_WEIGHTS]
+
+
+# PolicyParams.weights layout — the first entries are the cost-model-driven
+# comm-cost weights the netaware score consumes (via NetState.comm_cost,
+# re-weighted at every delay refresh).
+W_UTIL = 0        # ms-equivalent per unit of bottleneck ECMP-path utilization
+W_CROSS_LEAF = 1  # ms penalty for paths that transit the spine
+NUM_POLICY_WEIGHTS = 2
+
+
+class RunParams(NamedTuple):
+    """Runtime simulation parameters — everything a sweep varies that is NOT
+    shape- or control-flow-affecting.
+
+    The static ``SimConfig`` keeps tensor shapes and compiled structure
+    (horizon, scan lengths, engine flags); these knobs ride through the tick
+    as traced scalars, so a ladder of (bw, loss, queue_coef, thresholds)
+    points is a ``RunParams`` with a leading batch axis and ZERO extra
+    compilations.  Defaults come from ``SimConfig.run_params()``.
+    """
+
+    bw_mbps: jnp.ndarray            # f32[] uniform link-bw override; <=0 keeps
+    #                                       the topology's per-link bandwidth
+    loss: jnp.ndarray               # f32[] uniform loss override; <0 keeps
+    queue_coef: jnp.ndarray         # f32[] M/M/1 queueing-delay coefficient
+    overload_threshold: jnp.ndarray  # f32[] migration source / stats threshold
+    idle_threshold: jnp.ndarray     # f32[] migration destination threshold
+
+
 class SchedState(NamedTuple):
     """Mutable scheduler bookkeeping (e.g. Round pointer)."""
 

@@ -1,12 +1,14 @@
 """Workload generation (paper §3.3): Job -> Task -> Container three-tier model.
 
-Two generators:
+Three generators (the scenario layer selects one by name):
 * ``paper_workload``     — paper Table 6 synthetic distribution.
 * ``trace_workload``     — Alibaba GPU-trace-shaped generator (job sizes and
                            inter-arrival follow heavy-tailed draws like
                            cluster-trace-gpu-v2020), same SoA output.
+* ``bursty_workload``    — flash-crowd arrivals: jobs land in a few tight
+                           bursts instead of uniformly over the window.
 
-Both emit a fully-populated ``ContainerState`` with STATUS_UNBORN slots that
+All emit a fully-populated ``ContainerState`` with STATUS_UNBORN slots that
 the engine activates when ``t >= submit_t``.
 """
 from __future__ import annotations
@@ -101,6 +103,29 @@ def paper_workload(cfg: SimConfig, seed: int = 0,
         rng, cfg.n_jobs, cfg.n_tasks, cfg.n_containers)
     job_arrival = np.sort(rng.uniform(0.0, cfg.arrival_window,
                                       size=cfg.n_jobs)).astype(np.float32)
+    submit = job_arrival[cont_job]
+    return _fill(empty_containers(C), rng, cfg, cont_job, cont_task, submit)
+
+
+def bursty_workload(cfg: SimConfig, seed: int = 0,
+                    capacity: int | None = None, n_bursts: int = 4,
+                    burst_width: float = 1.5) -> ContainerState:
+    """Flash-crowd arrivals: jobs cluster around ``n_bursts`` burst centers
+    spread over the arrival window (Gaussian jitter of ``burst_width`` s).
+
+    The paper's uniform window exercises steady-state scheduling; bursts
+    stress the placement round's burst capacity (``placements_per_tick``)
+    and the waiting queue — the overload-recovery axis of a scenario sweep.
+    """
+    rng = np.random.default_rng(seed)
+    C = capacity or cfg.n_containers
+    cont_job, cont_task = _assign_jobs_tasks(
+        rng, cfg.n_jobs, cfg.n_tasks, cfg.n_containers)
+    centers = np.sort(rng.uniform(0.0, cfg.arrival_window, size=n_bursts))
+    which = rng.integers(0, n_bursts, size=cfg.n_jobs)
+    jitter = rng.normal(0.0, burst_width, size=cfg.n_jobs)
+    job_arrival = np.clip(centers[which] + jitter, 0.0,
+                          None).astype(np.float32)
     submit = job_arrival[cont_job]
     return _fill(empty_containers(C), rng, cfg, cont_job, cont_task, submit)
 

@@ -3,6 +3,12 @@
     PYTHONPATH=src python -m repro.launch.sim --policy jobgroup --horizon 120
     PYTHONPATH=src python -m repro.launch.sim --policy netaware --bw 200
     PYTHONPATH=src python -m repro.launch.sim --policy all --bw 200 --loss 0.02
+    PYTHONPATH=src python -m repro.launch.sim --policy all --hosts 500 \\
+        --containers 3000 --horizon 40 --out reports.json
+
+With policies as data, ``--policy all`` is six runs of ONE compiled program
+over ONE prebuilt state — no per-policy rebuild, no per-policy compile.
+The full policy x scenario x seed grid lives in ``repro.launch.sweep``.
 """
 from __future__ import annotations
 
@@ -12,21 +18,40 @@ import time
 
 from repro.core import (SimConfig, build_paper_hosts, build_paper_network,
                         get_policy, init_sim, list_policies, paper_workload,
-                        run_sim, summarize, to_csv, trace_workload)
-from repro.core.network import set_link_params
+                        run_sim, scaled_hosts, summarize, to_csv,
+                        trace_workload)
+from repro.core.report import json_clean
 
 
-def run_one(policy_name: str, cfg: SimConfig, bw=None, loss=None, seed=0,
-            workload="paper", n_hosts=20, csv=None):
-    hosts = build_paper_hosts()
-    spec, net = build_paper_network(cfg, n_hosts=n_hosts)
-    if bw is not None or loss is not None:
-        net = set_link_params(net, bw=bw, loss=loss)
+def build_once(cfg: SimConfig, bw=None, loss=None, seed=0, workload="paper",
+               n_hosts=20):
+    """Hosts + network + workload + initial state, built ONCE and reused
+    for every policy: the policy is data, the state is shared.  The bw/loss
+    overrides ride the RunParams (applied at t=0 inside the run) instead of
+    mutating the built network per policy."""
+    # same domain checks as set_link_params/ScenarioSpec: values inside the
+    # RunParams keep-sentinel range must fail loudly, not silently no-op
+    if bw is not None and bw <= 0:
+        raise ValueError(f"--bw must be > 0 Mbps, got {bw}")
+    if loss is not None and loss < 0:
+        raise ValueError(f"--loss must be >= 0, got {loss}")
+    hosts = (build_paper_hosts() if n_hosts == 20
+             else scaled_hosts(n_hosts, max(4, n_hosts // 5)))
+    spec, net = build_paper_network(cfg, n_hosts=n_hosts,
+                                    n_leaf=max(4, n_hosts // 5))
     gen = paper_workload if workload == "paper" else trace_workload
     sim0 = init_sim(hosts, gen(cfg, seed=seed), net, seed=seed)
+    params = cfg.run_params()._replace(
+        **{k: v for k, v in
+           (("bw_mbps", bw), ("loss", loss)) if v is not None})
+    return spec, sim0, params
+
+
+def run_one(policy_name: str, cfg: SimConfig, spec, sim0, params, csv=None):
     t0 = time.time()
     final, metrics = run_sim(sim0, cfg, get_policy(policy_name),
-                             spec.n_hosts, spec.n_nodes, cfg.horizon)
+                             spec.n_hosts, spec.n_nodes, cfg.horizon,
+                             params=params)
     final.t.block_until_ready()
     rep = summarize(final, metrics)
     rep["policy"] = policy_name
@@ -41,6 +66,10 @@ def main() -> None:
     ap.add_argument("--policy", default="all",
                     help=f"one of {list_policies()} or 'all'")
     ap.add_argument("--horizon", type=int, default=120)
+    ap.add_argument("--hosts", type=int, default=20,
+                    help="fleet size (paper Table 5 mix, scaled)")
+    ap.add_argument("--containers", type=int, default=None,
+                    help="workload size (containers; jobs/tasks scale along)")
     ap.add_argument("--bw", type=float, default=None, help="link Mbps")
     ap.add_argument("--loss", type=float, default=None,
                     help="link loss fraction")
@@ -48,18 +77,30 @@ def main() -> None:
     ap.add_argument("--workload", default="paper",
                     choices=["paper", "trace"])
     ap.add_argument("--csv", default=None, help="per-tick metrics CSV path")
+    ap.add_argument("--out", default=None,
+                    help="write the summary reports as a JSON list")
     ap.add_argument("--sequential", action="store_true",
                     help="run the sequential reference placement path "
                          "instead of the batched round")
     args = ap.parse_args()
 
+    wl = ({} if args.containers is None else
+          dict(n_containers=args.containers, n_tasks=args.containers,
+               n_jobs=max(10, args.containers // 3)))
     cfg = SimConfig(horizon=args.horizon,
-                    batched_placement=not args.sequential)
+                    batched_placement=not args.sequential, **wl)
+    spec, sim0, params = build_once(cfg, bw=args.bw, loss=args.loss,
+                                    seed=args.seed, workload=args.workload,
+                                    n_hosts=args.hosts)
     policies = list_policies() if args.policy == "all" else [args.policy]
+    reports = []
     for p in policies:
-        rep = run_one(p, cfg, bw=args.bw, loss=args.loss, seed=args.seed,
-                      workload=args.workload, csv=args.csv)
+        rep = json_clean(run_one(p, cfg, spec, sim0, params, csv=args.csv))
+        reports.append(rep)
         print(json.dumps(rep, indent=None, sort_keys=True))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(reports, f, indent=1)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,196 @@
+"""Sweep driver: policy x scenario x seed in ONE compiled program.
+
+The paper's headline use case is comparing scheduling strategies under
+varying network conditions (Figs 4-10).  With policies and runtime
+parameters as data (``PolicyParams``/``RunParams``), the whole evaluation
+grid is three nested ``vmap``s over one ``engine.simulate`` trace, jitted
+exactly once:
+
+    policies [P]  --vmap--+
+    scenarios [S] --vmap--+--> jax.jit(...)  ->  finals/metrics [P, S, N]
+    seeds     [N] --vmap--+
+
+    PYTHONPATH=src python -m repro.launch.sweep --policies all \\
+        --seeds 2 --horizon 120 --table avg_runtime --out sweep.json
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import json
+import time
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (SimConfig, get_policy, list_policies,
+                        sweep_summaries, sweep_table)
+from repro.core import scheduling
+from repro.core.engine import simulate
+from repro.core.scenario import (ScenarioSpec, build_scenarios,
+                                 default_scenarios)
+from repro.core.types import PolicyParams, RunParams, SimState, TickMetrics
+
+
+def stack_policies(names: Sequence[str]) -> PolicyParams:
+    """[P]-batched PolicyParams for a list of registered policy names."""
+    pols = [get_policy(n) for n in names]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *pols)
+
+
+def make_sweep_fn(cfg: SimConfig, n_hosts: int, n_nodes: int, horizon: int):
+    """The compiled sweep: (sims [S,N], policies [P], params [S]) ->
+    (finals, metrics) with [P, S, N] leading axes.
+
+    One jit over the SAME ``engine.simulate`` trace standalone ``run_sim``
+    jits — so each cell is bit-for-bit a standalone run, and the whole grid
+    costs exactly one XLA compilation (asserted in ``tests/test_sweep.py``
+    via the jit cache-miss counter).  Axis mechanics (docs/sweeps.md):
+
+    * seeds ride ``vmap`` — pure data parallelism over an identical program
+      (squeezed when N == 1: a size-1 batch axis still forces XLA:CPU's
+      slow batched-scatter lowering on this scatter-heavy tick, ~2x);
+    * policies ride ``lax.map`` INSIDE the jit — with the branch index
+      unbatched per iteration each cell executes only its own policy's
+      ``lax.switch`` branch at runtime, where a vmapped index would
+      evaluate every branch on every cell and select;
+    * scenarios ride ``lax.map`` for the same batched-scatter reason.
+    """
+    def cell(sim: SimState, pol: PolicyParams, rp: RunParams):
+        return simulate(sim, cfg, pol, n_hosts, n_nodes, horizon, rp)
+
+    def seeds_f(sim, pol, rp):                    # seeds    [N]
+        if sim.t.shape[0] == 1:
+            out = cell(jax.tree.map(lambda x: x[0], sim), pol, rp)
+            return jax.tree.map(lambda x: x[None], out)
+        return jax.vmap(cell, in_axes=(0, None, None))(sim, pol, rp)
+
+    def grid(sims, pols, rps):
+        def scen_f(pol):                          # scenarios [S]
+            return jax.lax.map(lambda sr: seeds_f(sr[0], pol, sr[1]),
+                               (sims, rps))
+        return jax.lax.map(scen_f, pols)          # policies  [P]
+
+    jitted = jax.jit(grid)
+    # the registered branch tables are baked into the compiled grid; a
+    # policy registered after this point would be silently clamped onto the
+    # old last branch by lax.switch — fail loudly instead (run_sim keys its
+    # jit cache the same way, via scheduling.registry_version()).
+    version = scheduling.registry_version()
+
+    def checked(sims, pols, rps):
+        if scheduling.registry_version() != version:
+            raise RuntimeError(
+                "policy registry changed since make_sweep_fn(); rebuild the "
+                "sweep function to compile the new branch table in")
+        return jitted(sims, pols, rps)
+
+    checked._cache_size = jitted._cache_size
+    return checked
+
+
+@dataclasses.dataclass
+class SweepResult:
+    policies: list[str]
+    scenarios: list[ScenarioSpec]
+    seeds: tuple[int, ...]
+    finals: SimState          # [P, S, N, ...]
+    metrics: TickMetrics      # [P, S, N, T, ...]
+    wall_s: float
+    compile_cache_misses: int  # jit cache entries the sweep call created
+    _rows: list | None = dataclasses.field(default=None, repr=False)
+
+    def summaries(self) -> list[dict[str, Any]]:
+        if self._rows is None:  # per-cell summarize is host-side O(cells)
+            self._rows = sweep_summaries(
+                self.finals, self.metrics, self.policies,
+                [s.name for s in self.scenarios], self.seeds)
+        return self._rows
+
+    def table(self, value: str = "avg_runtime") -> str:
+        return sweep_table(self.summaries(), value=value)
+
+
+def run_sweep(policies: Sequence[str] | None = None,
+              scenarios: Sequence[ScenarioSpec] | None = None,
+              seeds: Sequence[int] = (0,), cfg: SimConfig | None = None,
+              n_hosts: int = 20, n_spine: int = 2,
+              n_leaf: int = 4) -> SweepResult:
+    """Build the grid and run it as one compiled call."""
+    policies = list(policies if policies is not None else list_policies())
+    scenarios = list(scenarios if scenarios is not None
+                     else default_scenarios())
+    cfg = cfg or SimConfig()
+    net_spec, sims, rps = build_scenarios(scenarios, cfg, n_hosts=n_hosts,
+                                          n_spine=n_spine, n_leaf=n_leaf,
+                                          seeds=seeds)
+    pol = stack_policies(policies)
+    fn = make_sweep_fn(cfg, net_spec.n_hosts, net_spec.n_nodes, cfg.horizon)
+    t0 = time.time()
+    finals, metrics = fn(sims, pol, rps)
+    jax.tree.leaves(finals)[0].block_until_ready()
+    return SweepResult(policies=policies, scenarios=scenarios,
+                       seeds=tuple(seeds), finals=finals, metrics=metrics,
+                       wall_s=round(time.time() - t0, 2),
+                       compile_cache_misses=fn._cache_size())
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "n_hosts", "n_nodes",
+                                             "horizon", "registry"))
+def _run_sim_vmapped_jit(sims, cfg, policy, params, n_hosts, n_nodes,
+                         horizon, registry):
+    return jax.vmap(lambda s: simulate(s, cfg, policy, n_hosts, n_nodes,
+                                       horizon, params))(sims)
+
+
+def run_sim_vmapped(sims: SimState, cfg: SimConfig, policy: PolicyParams,
+                    n_hosts: int, n_nodes: int, horizon: int,
+                    params: RunParams | None = None):
+    """Seed-batched single-policy run (leading axis on every SimState leaf)
+    — the degenerate 1x1xN sweep, kept as a convenience for benchmarks.
+    Jitted at module level so repeat calls hit the warm cache (keyed on
+    config/shapes + the policy-registry version, like ``run_sim``)."""
+    params = cfg.run_params() if params is None else params
+    return _run_sim_vmapped_jit(sims, cfg, policy, params, n_hosts, n_nodes,
+                                horizon,
+                                registry=scheduling.registry_version())
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--policies", default="all",
+                    help=f"comma-separated subset of {list_policies()} "
+                         "or 'all'")
+    ap.add_argument("--seeds", type=int, default=1,
+                    help="number of seeds (0..n-1) per cell")
+    ap.add_argument("--horizon", type=int, default=120)
+    ap.add_argument("--hosts", type=int, default=20)
+    ap.add_argument("--table", default="avg_runtime",
+                    help="summary metric for the grouped table")
+    ap.add_argument("--out", default=None,
+                    help="write per-cell summary rows as JSON")
+    args = ap.parse_args()
+
+    policies = (list_policies() if args.policies == "all"
+                else args.policies.split(","))
+    cfg = SimConfig(horizon=args.horizon)
+    n_leaf = max(4, args.hosts // 5)
+    res = run_sweep(policies=policies, seeds=range(args.seeds), cfg=cfg,
+                    n_hosts=args.hosts, n_spine=max(2, n_leaf // 4),
+                    n_leaf=n_leaf)
+    cells = len(res.policies) * len(res.scenarios) * len(res.seeds)
+    print(f"# {cells} cells ({len(res.policies)} policies x "
+          f"{len(res.scenarios)} scenarios x {len(res.seeds)} seeds) in "
+          f"{res.wall_s}s, {res.compile_cache_misses} compilation(s)")
+    print(res.table(args.table))
+    if args.out:
+        from repro.core.report import json_clean
+        with open(args.out, "w") as f:
+            json.dump(json_clean(res.summaries()), f, indent=1)
+        print(f"# wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Report module: CSV round-trip fidelity, the zero-completions edge case,
+and the summary/timeseries contracts (ISSUE 3 satellite)."""
+import numpy as np
+
+from repro.core import (SimConfig, build_paper_hosts, build_paper_network,
+                        get_policy, init_sim, paper_workload, run_sim,
+                        summarize, timeseries, to_csv)
+from repro.core.types import TickMetrics
+
+
+def run_small(horizon=30, seed=0):
+    cfg = SimConfig(n_jobs=8, n_tasks=30, n_containers=30, horizon=horizon,
+                    arrival_window=8.0, placements_per_tick=16,
+                    migrations_per_tick=2)
+    hosts = build_paper_hosts()
+    spec, net = build_paper_network(cfg)
+    sim0 = init_sim(hosts, paper_workload(cfg, seed=seed), net, seed=seed)
+    final, metrics = run_sim(sim0, cfg, get_policy("firstfit"), spec.n_hosts,
+                             spec.n_nodes, cfg.horizon)
+    return final, metrics
+
+
+def test_csv_round_trip_preserves_every_field(tmp_path):
+    final, metrics = run_small()
+    path = str(tmp_path / "ticks.csv")
+    to_csv(metrics, path)
+    data = np.genfromtxt(path, delimiter=",", names=True)
+    assert set(data.dtype.names) == set(TickMetrics._fields)
+    ts = timeseries(metrics)
+    assert len(data) == len(ts["t"])
+    for field in TickMetrics._fields:
+        np.testing.assert_allclose(data[field], ts[field].astype(np.float64),
+                                   rtol=0, atol=0, err_msg=field)
+
+
+def test_timeseries_covers_every_tick_metric():
+    _, metrics = run_small(horizon=12)
+    ts = timeseries(metrics)
+    assert set(ts) == set(TickMetrics._fields)
+    assert all(len(v) == 12 for v in ts.values())
+
+
+def test_summarize_zero_completions_does_not_raise():
+    """A horizon too short for anything to finish (or even arrive) must
+    still summarize cleanly — the all-NaN means stay NaN, counts zero."""
+    final, metrics = run_small(horizon=1)
+    with np.errstate(all="raise"):                 # surface numpy warnings
+        rep = summarize(final, metrics)
+    assert rep["n_completed"] == 0
+    assert rep["completion_rate"] == 0.0
+    assert np.isnan(rep["avg_runtime"]) and np.isnan(rep["avg_exec_time"])
+    assert rep["total_cost"] >= 0.0
+
+
+def test_summarize_no_arrivals_does_not_raise():
+    """Zero *born* containers: every population is empty, including the
+    comm-time slice whose bare ``.mean()`` used to warn on empty input."""
+    cfg = SimConfig(arrival_window=1.0)
+    hosts = build_paper_hosts()
+    spec, net = build_paper_network(cfg)
+    # push every submit time beyond the horizon: nothing is ever born
+    wl = paper_workload(cfg, seed=0)
+    wl = wl._replace(submit_t=wl.submit_t + np.inf)
+    sim0 = init_sim(hosts, wl, net, seed=0)
+    final, metrics = run_sim(sim0, cfg, get_policy("firstfit"), spec.n_hosts,
+                             spec.n_nodes, 3)
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        rep = summarize(final, metrics)
+    assert rep["n_containers"] == 0
+    assert np.isnan(rep["avg_comm_time"])
+
+
+def test_summarize_matches_known_counts():
+    final, metrics = run_small(horizon=60)
+    rep = summarize(final, metrics)
+    assert rep["n_containers"] == 30
+    assert rep["n_completed"] == rep["completion_rate"] * 30
+    assert rep["final_t"] == 60.0

@@ -1,0 +1,196 @@
+"""Sweep driver acceptance: the policy x scenario x seed grid must run as
+ONE compiled call (1 jit cache miss) and every cell must be bit-for-bit the
+corresponding standalone ``run_sim`` — for all six registered policies.
+
+Also covers the scenario layer (bursty arrivals, host mixes, RunParams
+ladders) and the seed-vmapped batch against per-seed runs (the former
+``run_sim_vmapped``, subsumed into the sweep driver).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (SimConfig, get_policy, list_policies, run_sim,
+                        summarize)
+from repro.core.datacenter import HOST_MIXES, mixed_hosts
+from repro.core.scenario import (ScenarioSpec, build_scenario,
+                                 build_scenarios, default_scenarios)
+from repro.core.workload import bursty_workload
+from repro.launch.sweep import run_sim_vmapped, run_sweep, stack_policies
+
+SEEDS = (0, 3)
+
+
+def small_cfg(**kw):
+    base = dict(n_jobs=10, n_tasks=40, n_containers=40, horizon=40,
+                arrival_window=10.0, placements_per_tick=16,
+                migrations_per_tick=2)
+    base.update(kw)
+    return SimConfig(**base)
+
+
+def sweep_scenarios():
+    """>= 4 scenarios spanning every axis the layer supports: bw/loss
+    ladder, arrival pattern, host mix, runtime thresholds."""
+    return [
+        ScenarioSpec("baseline"),
+        ScenarioSpec("slow_net", bw=200.0),
+        ScenarioSpec("lossy", bw=500.0, loss=0.02),
+        ScenarioSpec("bursty_premium", arrival="bursty",
+                     host_mix="premium"),
+        ScenarioSpec("tight_overload", overload_threshold=0.5,
+                     idle_threshold=0.4),
+    ]
+
+
+@pytest.fixture(scope="module")
+def sweep_result():
+    return run_sweep(policies=list_policies(), scenarios=sweep_scenarios(),
+                     seeds=SEEDS, cfg=small_cfg())
+
+
+def test_sweep_compiles_exactly_once(sweep_result):
+    """6 policies x 5 scenarios x 2 seeds = 60 cells, ONE XLA compilation
+    (the jit cache-miss counter of the sweep function)."""
+    assert sweep_result.compile_cache_misses == 1
+    assert len(sweep_result.policies) == 6
+    assert len(sweep_result.scenarios) >= 4
+    assert len(sweep_result.seeds) >= 2
+
+
+def test_sweep_cells_match_standalone_bit_for_bit(sweep_result):
+    """Acceptance: every sweep cell's summarize output equals the
+    corresponding standalone run_sim bit-for-bit, all six policies."""
+    cfg = small_cfg()
+    rows = sweep_result.summaries()
+    by_cell = {(r["policy"], r["scenario"], r["seed"]): r for r in rows}
+    for spec in sweep_scenarios():
+        net_spec, sims, rp = build_scenario(spec, cfg, seeds=SEEDS)
+        for n, seed in enumerate(SEEDS):
+            sim0 = jax.tree.map(lambda x: x[n], sims)
+            for pol in sweep_result.policies:
+                final, metrics = run_sim(sim0, cfg, get_policy(pol),
+                                         net_spec.n_hosts, net_spec.n_nodes,
+                                         cfg.horizon, params=rp)
+                want = summarize(final, metrics)
+                got = dict(by_cell[(pol, spec.name, seed)])
+                for extra in ("policy", "scenario", "seed"):
+                    got.pop(extra)
+                assert set(got) == set(want)
+                for k in want:
+                    np.testing.assert_array_equal(
+                        got[k], want[k],
+                        err_msg=f"{pol}/{spec.name}/seed{seed}/{k}")
+
+
+def test_vmapped_seed_batch_matches_per_seed_runs():
+    """The seed-batched runner (ex run_sim_vmapped) is exact vs per-seed
+    standalone runs — state and metrics, not just summaries."""
+    cfg = small_cfg()
+    spec = ScenarioSpec("baseline")
+    net_spec, sims, rp = build_scenario(spec, cfg, seeds=SEEDS)
+    pol = get_policy("jobgroup")
+    bat_final, bat_metrics = run_sim_vmapped(
+        sims, cfg, pol, net_spec.n_hosts, net_spec.n_nodes, cfg.horizon,
+        params=rp)
+    for n in range(len(SEEDS)):
+        sim0 = jax.tree.map(lambda x: x[n], sims)
+        final, metrics = run_sim(sim0, cfg, pol, net_spec.n_hosts,
+                                 net_spec.n_nodes, cfg.horizon, params=rp)
+        for got, want in zip(jax.tree.leaves((bat_final, bat_metrics)),
+                             jax.tree.leaves((final, metrics))):
+            np.testing.assert_array_equal(np.asarray(got)[n],
+                                          np.asarray(want))
+
+
+def test_sweep_table_emits_grid(sweep_result):
+    table = sweep_result.table("avg_runtime")
+    for pol in sweep_result.policies:
+        assert pol in table
+    for spec in sweep_result.scenarios:
+        assert spec.name in table
+    # header + one line per scenario
+    assert len(table.splitlines()) == 2 + len(sweep_result.scenarios)
+
+
+# ---------------------------------------------------------------------------
+# Scenario layer
+# ---------------------------------------------------------------------------
+def test_scenario_run_params_override_and_keep():
+    cfg = small_cfg()
+    rp = ScenarioSpec("x", bw=250.0, overload_threshold=0.5).run_params(cfg)
+    assert float(rp.bw_mbps) == 250.0
+    assert float(rp.loss) == -1.0                     # keep sentinel
+    assert float(rp.overload_threshold) == 0.5
+    assert float(rp.queue_coef) == cfg.queue_coef     # config default
+
+
+def test_build_scenarios_stacks_axes():
+    cfg = small_cfg()
+    specs = default_scenarios()
+    net_spec, sims, rps = build_scenarios(specs, cfg, seeds=SEEDS)
+    S, N = len(specs), len(SEEDS)
+    assert sims.t.shape == (S, N)
+    assert sims.hosts.cap.shape[:2] == (S, N)
+    assert rps.bw_mbps.shape == (S,)
+    # host mixes really differ across scenarios sharing one shape
+    prem = [i for i, s in enumerate(specs) if s.host_mix == "premium"][0]
+    assert not np.allclose(np.asarray(sims.hosts.price[0, 0]),
+                           np.asarray(sims.hosts.price[prem, 0]))
+
+
+def test_bursty_workload_clusters_arrivals():
+    cfg = small_cfg(n_jobs=40, n_tasks=120, n_containers=120)
+    state = bursty_workload(cfg, seed=1, n_bursts=3, burst_width=0.5)
+    submit = np.asarray(state.submit_t)
+    submit = submit[np.isfinite(submit)]
+    assert submit.size == 120 and (submit >= 0).all()
+    # 3 tight bursts: arrival times collapse onto ~3 distinct clusters, so
+    # rounding to the nearest 2 s leaves far fewer distinct values than jobs
+    assert len(np.unique(np.round(submit / 2.0))) <= 8
+
+
+def test_late_registration_invalidates_jit_cache():
+    """Registering a policy AFTER a compiled run must re-trace: the switch
+    branch tables are baked into the executable, and a stale table would
+    clamp the new branch index onto the old last branch and silently run
+    the wrong policy (the jit cache is keyed on the registry version)."""
+    import jax.numpy as jnp
+
+    from repro.core import PolicyDef, register
+    from repro.core import scheduling as sched
+
+    cfg = small_cfg(horizon=5)
+    net_spec, sims, rp = build_scenario(ScenarioSpec("baseline"), cfg,
+                                        seeds=(0,))
+    sim0 = jax.tree.map(lambda x: x[0], sims)
+    # warm the (cfg, shapes) cache with the built-in branch table
+    run_sim(sim0, cfg, get_policy("firstfit"), net_spec.n_hosts,
+            net_spec.n_nodes, cfg.horizon)
+
+    def row_lastfit(sim, cfg_, params, w, carry, k, cand, used):
+        return -jnp.arange(sim.hosts.cap.shape[0], dtype=jnp.float32)
+
+    name = "lastfit_regression"
+    register(PolicyDef(name, row_lastfit))
+    try:
+        final, _ = run_sim(sim0, cfg, get_policy(name), net_spec.n_hosts,
+                           net_spec.n_nodes, cfg.horizon)
+        host = np.asarray(final.containers.host)
+        placed = host[host >= 0]
+        # last-fit fills from the top of the host range; the stale table
+        # would have dispatched a firstfit-scored branch (low hosts)
+        assert placed.size > 0
+        assert placed.min() >= net_spec.n_hosts // 2, placed
+    finally:
+        # keep the registry exactly as the other tests expect (the branch
+        # was appended last, so indices of built-ins are untouched)
+        del sched._DEFS[sched._REGISTRY.pop(name)]
+        sched._REGISTRY_VERSION += 1
+
+
+def test_host_mixes_share_shapes():
+    for mix in HOST_MIXES:
+        hosts = mixed_hosts(mix, 20, 4)
+        assert hosts.cap.shape == (20, 3), mix
+        assert hosts.price.shape == (20,), mix
