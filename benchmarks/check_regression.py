@@ -1,0 +1,180 @@
+"""CI bench-regression gate (PR 4).
+
+Compares the quick-run benchmark JSON (``experiments/BENCH_engine_quick.json``,
+produced by ``python -m benchmarks.engine_bench --quick``) against the
+committed ``BENCH_engine.json`` baseline and FAILS on regression, instead of
+only checking that the JSON parses:
+
+* every quick scale point's ``ticks_per_s`` must stay within ``tol`` of the
+  committed point at the same (n_hosts, n_containers, mode, policy);
+* the quick sweep's per-cell steady time must not exceed the committed
+  ``sweep_quick`` per-cell time by more than ``tol`` (the full-mode bench
+  records the quick-scale grid exactly so the two runs are comparable);
+* the sweep must still compile exactly once.
+
+Machine-skew correction: the committed baseline was measured on whatever
+box last ran the full bench, and a CI runner can legitimately be uniformly
+slower — absolute wall-clock gating would then be permanently red.  Every
+metric is therefore compared as a quick/committed speed ratio *normalized
+by the median ratio across all gated metrics*: a uniformly slower (or
+faster) machine moves every ratio together and cancels out, while a code
+regression that hits one path — a scatter creeping back into the tick, the
+sweep losing its single compilation's fusion — drags its ratio below the
+pack and fails.  (A perfectly uniform code slowdown is indistinguishable
+from a slow machine within one run; that is the price of cross-machine
+comparability, and the full-bench refresh on the next PR catches it.)
+
+The skew correction is blind to regressions that move most wall-clock
+metrics together, so two *within-run* ratios — machine-independent by
+construction — are gated absolutely as well: ``sparse_speedup`` (sparse vs
+dense ticks_per_s, same run) and ``vmap_cell_tax`` (vmapped per-cell vs
+warm standalone cell, same run).
+
+``tol`` defaults to 0.30 — headroom for per-metric CI noise on top of the
+skew correction; the gate is one-sided, so getting faster never fails.
+Override with ``BENCH_TOL``.
+
+    PYTHONPATH=src python -m benchmarks.check_regression
+"""
+from __future__ import annotations
+
+import json
+import os
+import statistics
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+BASELINE = os.path.join(HERE, "..", "BENCH_engine.json")
+QUICK = os.path.join(HERE, "..", "experiments", "BENCH_engine_quick.json")
+
+
+def point_key(p: dict) -> tuple:
+    return (p["n_hosts"], p["n_containers"], p["mode"],
+            p.get("policy", "firstfit"))
+
+
+def check(quick: dict, base: dict, tol: float) -> list[str]:
+    failures: list[str] = []
+
+    # -- shape sanity (was the whole CI check before PR 4) ------------------
+    if quick.get("bench") != "engine_tick_throughput":
+        failures.append(f"unexpected bench id: {quick.get('bench')!r}")
+    if not quick.get("points"):
+        failures.append("no scale points recorded")
+    sw = quick.get("sweep") or {}
+    if sw.get("cells") != (sw.get("policies", 0) * sw.get("scenarios", 0)
+                           * sw.get("seeds", 0)):
+        failures.append(f"sweep cell count inconsistent: {sw}")
+    if sw.get("cells", 0) < 24:
+        failures.append(f"sweep grid too small: {sw.get('cells')} cells")
+    if sw.get("compile_cache_misses") != 1:
+        failures.append(
+            f"sweep must compile exactly once, got "
+            f"{sw.get('compile_cache_misses')}")
+
+    # -- gather (name, speed ratio) per gated metric ------------------------
+    # ratio > 1 means this run is faster than the committed baseline; the
+    # median ratio estimates machine skew and normalizes it away (module
+    # docstring) so only relative regressions fail.
+    ratios: list[tuple[str, float]] = []
+    committed = {point_key(p): p for p in base.get("points", [])}
+    for p in quick.get("points", []):
+        if p["ticks_per_s"] <= 0:
+            failures.append(f"non-positive ticks_per_s: {p}")
+            continue
+        ref = committed.get(point_key(p))
+        if ref is None:
+            continue  # a quick-only point has no committed twin to gate on
+        ratios.append((
+            f"ticks_per_s at {point_key(p)} "
+            f"({p['ticks_per_s']} vs committed {ref['ticks_per_s']})",
+            p["ticks_per_s"] / ref["ticks_per_s"]))
+
+    ref_sw = base.get("sweep_quick")
+    if ref_sw is None:
+        failures.append(
+            "committed BENCH_engine.json has no 'sweep_quick' entry; "
+            "re-run the full bench to record the quick-scale reference")
+    elif sw:
+        grid = ("n_hosts", "n_containers", "horizon", "cells")
+        if any(sw.get(k) != ref_sw.get(k) for k in grid):
+            failures.append(
+                f"quick sweep grid {[sw.get(k) for k in grid]} != committed "
+                f"sweep_quick grid {[ref_sw.get(k) for k in grid]}")
+        elif sw.get("sweep_steady_s", 0) > 0:
+            got = sw["sweep_steady_s"] / sw["cells"]
+            ref = ref_sw["sweep_steady_s"] / ref_sw["cells"]
+            ratios.append((
+                f"sweep per-cell steady ({got:.3f}s vs committed "
+                f"{ref:.3f}s)", ref / got))
+
+    # -- one-sided gate on skew-normalized ratios ---------------------------
+    if ratios:
+        skew = statistics.median(r for _, r in ratios)
+        for name, r in ratios:
+            if r < skew * (1.0 - tol):
+                failures.append(
+                    f"regression: {name} is {r:.2f}x baseline speed while "
+                    f"this machine's median is {skew:.2f}x — "
+                    f">{tol:.0%} below the pack")
+        if skew < 0.5:
+            print(f"note: this machine runs at {skew:.2f}x the baseline "
+                  f"machine's speed; relative gating still applies")
+
+    # -- within-run ratios: machine-independent, gated absolutely -----------
+    # The median normalization above is blind to regressions that move 2+
+    # of its 3 wall-clock metrics together (a scatter creeping back into
+    # the shared tick slows sparse AND the sweep).  These two ratios are
+    # computed inside ONE run on ONE machine, so machine skew cancels by
+    # construction and they gate the blind spot directly:
+    # * sparse_speedup — sparse vs dense ticks_per_s at the quick point
+    #   (the dense oracle barely shares the sparse hot paths);
+    # * vmap_cell_tax — vmapped per-cell steady vs warm standalone cell
+    #   (catches the sweep losing its batching efficiency specifically).
+    qp = {point_key(p): p for p in quick.get("points", [])}
+    spq = qp.get((100, 1500, "sparse", "firstfit"))
+    deq = qp.get((100, 1500, "dense", "firstfit"))
+    spc = committed.get((100, 1500, "sparse", "firstfit"))
+    dec = committed.get((100, 1500, "dense", "firstfit"))
+    if spq and deq and spc and dec and deq["ticks_per_s"] > 0 \
+            and dec["ticks_per_s"] > 0:
+        got = spq["ticks_per_s"] / deq["ticks_per_s"]
+        ref = spc["ticks_per_s"] / dec["ticks_per_s"]
+        if got < ref * (1.0 - tol):
+            failures.append(
+                f"regression: within-run sparse/dense speedup {got:.2f}x "
+                f"< committed {ref:.2f}x - {tol:.0%} — the sparse flow "
+                f"path got slower relative to the dense oracle")
+    if ref_sw and sw.get("vmap_cell_tax") and ref_sw.get("vmap_cell_tax"):
+        got, ref = sw["vmap_cell_tax"], ref_sw["vmap_cell_tax"]
+        if got > ref * (1.0 + tol):
+            failures.append(
+                f"regression: within-run vmap_cell_tax {got} > committed "
+                f"{ref} + {tol:.0%} — the vmapped sweep got slower "
+                f"relative to standalone cells")
+    return failures
+
+
+def main() -> int:
+    tol = float(os.environ.get("BENCH_TOL", "0.30"))
+    with open(QUICK) as f:
+        quick = json.load(f)
+    with open(BASELINE) as f:
+        base = json.load(f)
+    failures = check(quick, base, tol)
+    sw = quick.get("sweep", {})
+    print(f"quick bench: {len(quick.get('points', []))} points, "
+          f"sparse_speedup={quick.get('sparse_speedup')}, "
+          f"sweep {sw.get('cells')} cells in {sw.get('sweep_steady_s')}s "
+          f"({sw.get('compile_cache_misses')} compile, "
+          f"vmap_cell_tax={sw.get('vmap_cell_tax')})")
+    if failures:
+        for msg in failures:
+            print(f"REGRESSION: {msg}", file=sys.stderr)
+        return 1
+    print(f"bench regression gate passed (tol {tol:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

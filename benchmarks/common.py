@@ -24,7 +24,8 @@ def measure_scale_point(n_hosts: int, n_containers: int, horizon: int = 120,
     """
     import jax
 
-    from repro.core.types import STATUS_COMPLETED
+    from repro.core.types import (STATUS_COMMUNICATING, STATUS_COMPLETED,
+                                  STATUS_MIGRATING, STATUS_RUNNING)
 
     cfg = SimConfig(n_jobs=max(10, n_containers // 3),
                     n_tasks=n_containers, n_containers=n_containers,
@@ -67,6 +68,11 @@ def measure_scale_point(n_hosts: int, n_containers: int, horizon: int = 120,
         "state_mb": round(state_mb, 1),
         "completed": int((np.asarray(final.containers.status)
                           == STATUS_COMPLETED).sum()),
+        # deployed at the end of the run — end-to-end sanity for points
+        # whose horizon is shorter than any container lifetime
+        "deployed": int(np.isin(np.asarray(final.containers.status),
+                                [STATUS_RUNNING, STATUS_COMMUNICATING,
+                                 STATUS_MIGRATING]).sum()),
     }
 
 

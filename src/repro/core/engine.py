@@ -58,42 +58,88 @@ def init_sim(hosts: HostState, containers: ContainerState, net: NetState,
 
 # ---------------------------------------------------------------------------
 # Resource bookkeeping helpers (masked, scan-safe for c == -1 / h == -1)
+#
+# The default tick is SCATTER-FREE: every ``.at[idx].set/add`` state update
+# is expressed as a where-mask (scalar/distinct indices — bit-exact, a
+# single float add with identical operands) or a ``segment_sum`` reduction
+# with the pad-slot trick (duplicate indices).  XLA:CPU lowers *batched*
+# scatters off its fast path (~2x per sweep cell, docs/sweeps.md), so the
+# scatter-heavy PR 3 tick forced ``lax.map`` over the policy/scenario sweep
+# axes; the masked forms lower to elementwise selects that ``vmap``
+# batches for free.  ``cfg.scatter_tick=True`` keeps the scatter updates
+# for one deprecation cycle as the bit-for-bit oracle
+# (tests/test_scatter_free.py).
 # ---------------------------------------------------------------------------
-def _deploy(sim: SimState, c: jnp.ndarray, h: jnp.ndarray) -> SimState:
+def _one_hot(n: int, idx: jnp.ndarray, ok: jnp.ndarray) -> jnp.ndarray:
+    """bool[n] mask selecting ``idx`` when ``ok`` — the where-mask
+    replacement for a scalar-index scatter."""
+    return (jnp.arange(n) == idx) & ok
+
+
+def _deploy(sim: SimState, c: jnp.ndarray, h: jnp.ndarray,
+            scatter: bool = False) -> SimState:
     C = sim.containers.status.shape[0]
     H = sim.hosts.cap.shape[0]
     cc = jnp.clip(c, 0, C - 1)
     hh = jnp.clip(h, 0, H - 1)
     ok = (c >= 0) & (h >= 0)
-    okf = ok.astype(F32)
-    req = sim.containers.req[cc] * okf
-    hosts = sim.hosts._replace(
-        used=sim.hosts.used.at[hh].add(req),
-        n_containers=sim.hosts.n_containers.at[hh].add(ok.astype(I32)),
-    )
     ct = sim.containers
-    first = ct.start_t[cc] < 0
+    if scatter:
+        okf = ok.astype(F32)
+        req = ct.req[cc] * okf
+        hosts = sim.hosts._replace(
+            used=sim.hosts.used.at[hh].add(req),
+            n_containers=sim.hosts.n_containers.at[hh].add(ok.astype(I32)),
+        )
+        first = ct.start_t[cc] < 0
+        conts = ct._replace(
+            status=ct.status.at[cc].set(
+                jnp.where(ok, STATUS_RUNNING, ct.status[cc])),
+            host=ct.host.at[cc].set(jnp.where(ok, hh, ct.host[cc])),
+            start_t=ct.start_t.at[cc].set(
+                jnp.where(ok & first, sim.t, ct.start_t[cc])),
+            retry=ct.retry.at[cc].set(jnp.where(ok, 0, ct.retry[cc])),
+        )
+        return sim._replace(hosts=hosts, containers=conts)
+    hot_h = _one_hot(H, hh, ok)
+    hot_c = _one_hot(C, cc, ok)
+    req = ct.req[cc]
+    hosts = sim.hosts._replace(
+        used=jnp.where(hot_h[:, None], sim.hosts.used + req[None, :],
+                       sim.hosts.used),
+        n_containers=jnp.where(hot_h, sim.hosts.n_containers + 1,
+                               sim.hosts.n_containers),
+    )
     conts = ct._replace(
-        status=ct.status.at[cc].set(
-            jnp.where(ok, STATUS_RUNNING, ct.status[cc])),
-        host=ct.host.at[cc].set(jnp.where(ok, hh, ct.host[cc])),
-        start_t=ct.start_t.at[cc].set(
-            jnp.where(ok & first, sim.t, ct.start_t[cc])),
-        retry=ct.retry.at[cc].set(jnp.where(ok, 0, ct.retry[cc])),
+        status=jnp.where(hot_c, STATUS_RUNNING, ct.status),
+        host=jnp.where(hot_c, hh, ct.host),
+        start_t=jnp.where(hot_c & (ct.start_t < 0), sim.t, ct.start_t),
+        retry=jnp.where(hot_c, 0, ct.retry),
     )
     return sim._replace(hosts=hosts, containers=conts)
 
 
 def _free_resources(hosts: HostState, req: jnp.ndarray, host_idx: jnp.ndarray,
                     mask: jnp.ndarray) -> HostState:
-    """Vectorized release of ``req[c]`` on ``host_idx[c]`` where ``mask``."""
+    """Vectorized release of ``req[c]`` on ``host_idx[c]`` where ``mask``.
+
+    Shared by both tick paths: per-host totals are accumulated with one
+    ``segment_sum`` (pad slot H collects the unmasked rows) and subtracted
+    in a single pass.  This regroups the float sum relative to the PR 3
+    incremental ``.at[hh].add`` (delta first, then one subtract), which is
+    exactly why it is shared — the scatter oracle and the scatter-free tick
+    must agree bit-for-bit, and duplicate-index accumulation order is the
+    one place the two formulations could round differently.
+    """
     H = hosts.cap.shape[0]
-    hh = jnp.clip(host_idx, 0, H - 1)
     m = (mask & (host_idx >= 0))
-    mf = m.astype(F32)
+    seg = jnp.where(m, host_idx, H)
+    dreq = jax.ops.segment_sum(req * m.astype(F32)[:, None], seg,
+                               num_segments=H + 1)[:H]
+    dcnt = jax.ops.segment_sum(m.astype(I32), seg, num_segments=H + 1)[:H]
     return hosts._replace(
-        used=hosts.used.at[hh].add(-req * mf[:, None]),
-        n_containers=hosts.n_containers.at[hh].add(-m.astype(I32)),
+        used=hosts.used - dreq,
+        n_containers=hosts.n_containers - dcnt,
     )
 
 
@@ -117,7 +163,7 @@ def _pick_host(sim: SimState, cfg: SimConfig, params: RunParams,
 
 
 def _place_sequential(sim: SimState, cfg: SimConfig, params: RunParams,
-                      policy: PolicyParams) -> SimState:
+                      policy: PolicyParams, scatter: bool = False) -> SimState:
     """Sequential reference path, derived from the same scoring API.
 
     Each scan step is a K=1 degenerate placement round against the fully
@@ -145,7 +191,7 @@ def _place_sequential(sim: SimState, cfg: SimConfig, params: RunParams,
         pcarry = scheduling.update_place_carry(s, policy, pcarry, 0, cand,
                                                hh, ok)
         s = s._replace(sched=scheduling.commit_place_carry(s.sched, pcarry))
-        s = _deploy(s, jnp.where(valid, c, -1), h)
+        s = _deploy(s, jnp.where(valid, c, -1), h, scatter=scatter)
         s = s._replace(sched=s.sched._replace(
             decisions=s.sched.decisions + ok.astype(I32)))
         return s, None
@@ -155,8 +201,19 @@ def _place_sequential(sim: SimState, cfg: SimConfig, params: RunParams,
     return sim
 
 
+def _scatter_to_containers(C: int, idx: jnp.ndarray, ok: jnp.ndarray):
+    """Map a round's (distinct) per-decision indices onto the container
+    axis WITHOUT a scatter: ``sel[c]`` marks containers hit by an admitted
+    decision and ``slot_of[c]`` is the decision slot that hit them (0 where
+    unhit — always masked by ``sel``).  O(C*K) compares, elementwise, so it
+    vmaps for free where the ``.at[idx].set`` form forced XLA:CPU's slow
+    batched-scatter lowering."""
+    hit = (idx[None, :] == jnp.arange(C)[:, None]) & ok[None, :]   # [C, K]
+    return hit.any(axis=1), jnp.argmax(hit, axis=1)
+
+
 def _place_batched(sim: SimState, cfg: SimConfig, params: RunParams,
-                   policy: PolicyParams) -> SimState:
+                   policy: PolicyParams, scatter: bool = False) -> SimState:
     """Batched conflict-resolved placement round.
 
     Instead of ``placements_per_tick`` full select+score passes (each one
@@ -168,8 +225,9 @@ def _place_batched(sim: SimState, cfg: SimConfig, params: RunParams,
     dynamic-term carry — so later decisions observe both earlier ones'
     resource consumption AND their score impact (Round's rotating pointer,
     the co-location counts of JobGroup/NetAware).  Container-state updates
-    are applied in one vectorized scatter afterwards (top-k candidate
-    indices are distinct).
+    are applied in one vectorized pass afterwards (top-k candidate indices
+    are distinct): where-masks by default, scatters on the deprecated
+    oracle path.
 
     One deliberate semantic upgrade over the sequential reference: a
     candidate with no feasible host no longer blocks the rest of the round
@@ -192,8 +250,13 @@ def _place_batched(sim: SimState, cfg: SimConfig, params: RunParams,
         h = _pick_host(sim, cfg, params, policy, pcarry, k, cand, used, feas)
         ok = h >= 0
         hh = jnp.clip(h, 0, H - 1)
-        used = used.at[hh].add(req_k[k] * ok.astype(F32))
-        ncont = ncont.at[hh].add(ok.astype(I32))
+        if scatter:
+            used = used.at[hh].add(req_k[k] * ok.astype(F32))
+            ncont = ncont.at[hh].add(ok.astype(I32))
+        else:
+            hot = _one_hot(H, hh, ok)
+            used = jnp.where(hot[:, None], used + req_k[k][None, :], used)
+            ncont = jnp.where(hot, ncont + 1, ncont)
         pcarry = scheduling.update_place_carry(sim, policy, pcarry, k, cand,
                                                hh, ok)
         return (used, ncont, pcarry), h
@@ -204,15 +267,24 @@ def _place_batched(sim: SimState, cfg: SimConfig, params: RunParams,
     ok = chosen >= 0
     hh = jnp.clip(chosen, 0, H - 1)
     ct = sim.containers
-    first = ct.start_t[cand] < 0
-    conts = ct._replace(
-        status=ct.status.at[cand].set(
-            jnp.where(ok, STATUS_RUNNING, ct.status[cand])),
-        host=ct.host.at[cand].set(jnp.where(ok, hh, ct.host[cand])),
-        start_t=ct.start_t.at[cand].set(
-            jnp.where(ok & first, sim.t, ct.start_t[cand])),
-        retry=ct.retry.at[cand].set(jnp.where(ok, 0, ct.retry[cand])),
-    )
+    if scatter:
+        first = ct.start_t[cand] < 0
+        conts = ct._replace(
+            status=ct.status.at[cand].set(
+                jnp.where(ok, STATUS_RUNNING, ct.status[cand])),
+            host=ct.host.at[cand].set(jnp.where(ok, hh, ct.host[cand])),
+            start_t=ct.start_t.at[cand].set(
+                jnp.where(ok & first, sim.t, ct.start_t[cand])),
+            retry=ct.retry.at[cand].set(jnp.where(ok, 0, ct.retry[cand])),
+        )
+    else:
+        sel, k_of = _scatter_to_containers(C, cand, ok)
+        conts = ct._replace(
+            status=jnp.where(sel, STATUS_RUNNING, ct.status),
+            host=jnp.where(sel, hh[k_of], ct.host),
+            start_t=jnp.where(sel & (ct.start_t < 0), sim.t, ct.start_t),
+            retry=jnp.where(sel, 0, ct.retry),
+        )
     hosts = sim.hosts._replace(used=used, n_containers=ncont)
     sched = scheduling.commit_place_carry(sim.sched, pcarry)._replace(
         decisions=sim.sched.decisions + ok.sum().astype(I32))
@@ -220,7 +292,7 @@ def _place_batched(sim: SimState, cfg: SimConfig, params: RunParams,
 
 
 def _migrate_batched(sim: SimState, cfg: SimConfig, params: RunParams,
-                     policy: PolicyParams) -> SimState:
+                     policy: PolicyParams, scatter: bool = False) -> SimState:
     """Migration decision round.
 
     The decision scan carries only the fields a migration start can change
@@ -243,10 +315,17 @@ def _migrate_batched(sim: SimState, cfg: SimConfig, params: RunParams,
         cc = jnp.clip(c, 0, C - 1)
         hh = jnp.clip(dst, 0, H - 1)
         # reserve destination resources for the duration of the transfer
-        used = used.at[hh].add(sim.containers.req[cc] * ok.astype(F32))
-        ncont = ncont.at[hh].add(ok.astype(I32))
-        status = status.at[cc].set(
-            jnp.where(ok, STATUS_MIGRATING, status[cc]))
+        if scatter:
+            used = used.at[hh].add(sim.containers.req[cc] * ok.astype(F32))
+            ncont = ncont.at[hh].add(ok.astype(I32))
+            status = status.at[cc].set(
+                jnp.where(ok, STATUS_MIGRATING, status[cc]))
+        else:
+            hot_h = _one_hot(H, hh, ok)
+            used = jnp.where(hot_h[:, None],
+                             used + sim.containers.req[cc][None, :], used)
+            ncont = jnp.where(hot_h, ncont + 1, ncont)
+            status = jnp.where(_one_hot(C, cc, ok), STATUS_MIGRATING, status)
         return (used, ncont, status), (jnp.where(ok, cc, -1),
                                        jnp.where(ok, hh, -1))
 
@@ -256,10 +335,15 @@ def _migrate_batched(sim: SimState, cfg: SimConfig, params: RunParams,
 
     ok = cs >= 0
     # chosen containers are distinct (STATUS_MIGRATING removes them from the
-    # movable set mid-scan); scatter via an out-of-bounds drop for the -1s
-    idx = jnp.where(ok, cs, C)
-    sel = jnp.zeros((C,), bool).at[idx].set(True, mode="drop")
-    dst_arr = jnp.full((C,), -1, I32).at[idx].set(dsts, mode="drop")
+    # movable set mid-scan)
+    if scatter:
+        # scatter via an out-of-bounds drop for the -1s (oracle path)
+        idx = jnp.where(ok, cs, C)
+        sel = jnp.zeros((C,), bool).at[idx].set(True, mode="drop")
+        dst_arr = jnp.full((C,), -1, I32).at[idx].set(dsts, mode="drop")
+    else:
+        sel, m_of = _scatter_to_containers(C, cs, ok)
+        dst_arr = jnp.where(sel, dsts[m_of], -1)
     ct = sim.containers
     conts = ct._replace(
         status=status,                       # MIGRATING set inside the scan
@@ -284,17 +368,22 @@ def phase_schedule(sim: SimState, cfg: SimConfig, policy: PolicyParams,
     ``cfg.batched_placement`` selects the batched round or the K=1-derived
     sequential reference.  The migration round always runs — which rule (or
     the no-op branch) is the policy's data, not Python structure.
+    ``cfg.scatter_tick`` (deprecated) swaps the state updates back to the
+    PR 3 scatter forms — the bit-for-bit oracle of the scatter-free tick.
     """
     params = cfg.run_params() if params is None else params
     sim = sim._replace(sched=sim.sched._replace(
         decisions=jnp.zeros((), I32), migrations=jnp.zeros((), I32)))
 
     if cfg.batched_placement:
-        sim = _place_batched(sim, cfg, params, policy)
+        sim = _place_batched(sim, cfg, params, policy,
+                             scatter=cfg.scatter_tick)
     else:
-        sim = _place_sequential(sim, cfg, params, policy)
+        sim = _place_sequential(sim, cfg, params, policy,
+                                scatter=cfg.scatter_tick)
 
-    return _migrate_batched(sim, cfg, params, policy)
+    return _migrate_batched(sim, cfg, params, policy,
+                            scatter=cfg.scatter_tick)
 
 
 def pick_comm_peers(ct: ContainerState) -> jnp.ndarray:
@@ -483,7 +572,7 @@ def make_tick(cfg: SimConfig, policy: PolicyParams, params: RunParams,
     tick, and a batch axis on either sweeps them under ``vmap``.
     """
 
-    def tick(sim: SimState, _) -> Tuple[SimState, TickMetrics]:
+    def tick(sim: SimState, tt: jnp.ndarray) -> Tuple[SimState, TickMetrics]:
         sim, n_arrived = phase_arrive(sim)
         sim = phase_schedule(sim, cfg, policy, params)
         sim, comm_rates, mig_rates, flow_active, all_rates = \
@@ -502,7 +591,14 @@ def make_tick(cfg: SimConfig, policy: PolicyParams, params: RunParams,
                 util_weight=policy.weights[W_UTIL],
                 cross_leaf_ms=policy.weights[W_CROSS_LEAF])
 
-        every = jnp.mod(sim.t.astype(I32), cfg.delay_update_interval) == 0
+        # The predicate reads the scan's tick counter ``tt`` (== sim.t at
+        # every step), NOT the carried clock: the carry is batched under a
+        # vmapped sweep, and a batched predicate turns ``lax.cond`` into a
+        # select that evaluates BOTH branches — every cell would pay the
+        # O(H^2) refresh on every tick (measured ~1.6x per cell at
+        # 500h/3000c).  ``tt`` comes from an unbatched xs, so the cond
+        # survives every vmap and the refresh stays periodic.
+        every = jnp.mod(tt, cfg.delay_update_interval) == 0
         sim = sim._replace(
             net=jax.lax.cond(every, refresh, lambda n: n, sim.net))
 
@@ -527,7 +623,10 @@ def simulate(sim0: SimState, cfg: SimConfig, policy: PolicyParams,
     sim0 = sim0._replace(net=network.apply_link_params(
         sim0.net, params.bw_mbps, params.loss))
     tick = make_tick(cfg, policy, params, n_hosts, n_nodes)
-    return jax.lax.scan(tick, sim0, None, length=horizon)
+    # xs = the tick counter, deliberately NOT part of the carried state: it
+    # stays unbatched under the sweep's vmaps, so the periodic delay
+    # refresh keeps its lax.cond (see make_tick).
+    return jax.lax.scan(tick, sim0, jnp.arange(horizon, dtype=I32))
 
 
 # ``registry`` keys the cache on scheduling.registry_version(): the switch

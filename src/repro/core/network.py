@@ -237,12 +237,21 @@ def pairwise_comm_cost(net: NetState,
 
 def adjacency_from_links(net: NetState, link_delay: jnp.ndarray,
                          n_nodes: int) -> jnp.ndarray:
-    """Symmetric node-graph adjacency with link delays; INF where no edge."""
-    A = jnp.full((n_nodes, n_nodes), INF, jnp.float32)
-    A = A.at[jnp.arange(n_nodes), jnp.arange(n_nodes)].set(0.0)
-    A = A.at[net.link_u, net.link_v].min(link_delay)
-    A = A.at[net.link_v, net.link_u].min(link_delay)
-    return A
+    """Symmetric node-graph adjacency with link delays; INF where no edge.
+
+    Built with a ``segment_min`` over flattened (u, v) pair ids instead of
+    the former ``.at[u, v].min`` scatters — min is order-independent, so
+    the result is bit-identical, and the delay-refresh arm of the tick
+    ('fw' mode) stays scatter-free under a vmapped sweep.  Parallel links
+    (none on the spine-leaf fabric, but allowed) still take the min.
+    """
+    seg = jnp.concatenate([net.link_u * n_nodes + net.link_v,
+                           net.link_v * n_nodes + net.link_u])
+    vals = jnp.concatenate([link_delay, link_delay])
+    A = jax.ops.segment_min(vals, seg, num_segments=n_nodes * n_nodes)
+    A = jnp.minimum(A, INF).reshape(n_nodes, n_nodes)  # empty segments: +inf
+    eye = jnp.arange(n_nodes)[:, None] == jnp.arange(n_nodes)[None, :]
+    return jnp.where(eye, 0.0, A)
 
 
 def floyd_warshall_ref(A: jnp.ndarray) -> jnp.ndarray:

@@ -13,7 +13,11 @@ builders turn a list of specs into exactly two batched pytrees:
 
 ``repro/launch/sweep.py`` feeds both (plus a policy batch) to one
 ``jax.jit(vmap(vmap(vmap(simulate))))`` call — the paper's Figs 4-10
-evaluation grid as a single compiled program.
+evaluation grid as a single compiled program.  Since the scatter-free
+tick (PR 4, docs/perf.md) that is literally the code: all three axes are
+``vmap`` batch dimensions, so everything a spec varies must stay a value
+change on a fixed-shape pytree — which is exactly what the keep-sentinel
+design below guarantees.
 """
 from __future__ import annotations
 

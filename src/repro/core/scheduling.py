@@ -84,11 +84,14 @@ def rank_key(values: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
     capacity — unlike ``values * C + index`` float encodings, which lose the
     index tie-break once the combined key exceeds f32's 2^24 integer range).
     Slots outside ``mask`` get ``INT_BIG``.
+
+    The rank is the inverse of the sort permutation, so a second argsort
+    computes it scatter-free — identical integers to the former
+    ``zeros.at[order].set(arange)`` scatter, without XLA:CPU's slow
+    batched-scatter lowering when the tick is vmapped over sweep cells.
     """
-    C = values.shape[0]
     order = jnp.argsort(values, stable=True)
-    rank = jnp.zeros((C,), jnp.int32).at[order].set(
-        jnp.arange(C, dtype=jnp.int32))
+    rank = jnp.argsort(order).astype(jnp.int32)
     return jnp.where(mask, rank, INT_BIG)
 
 
@@ -117,7 +120,39 @@ class PlaceCarry(NamedTuple):
 
 
 def same_job_host_counts(sim: SimState, cand: jnp.ndarray) -> jnp.ndarray:
-    """[K, H] deployed same-job container count per host, per candidate."""
+    """[K, H] deployed same-job container count per host, per candidate.
+
+    One ``segment_sum`` of the C deployed containers onto a small [K, H]
+    table keyed by (first candidate sharing the container's job, host) —
+    the pad-slot trick in two dimensions (slot K*H swallows containers
+    matching no candidate).  Candidates sharing a job then gather the first
+    sharer's row.  Replaces the K vmapped per-candidate scatter-adds of the
+    PR 2 form (kept as :func:`same_job_host_counts_scatter`); counts are
+    integer-valued, so the regrouped sum is exact and both forms agree
+    bit-for-bit.
+    """
+    H = sim.hosts.cap.shape[0]
+    K = cand.shape[0]
+    ct = sim.containers
+    st = ct.status
+    deployed = (((st == STATUS_RUNNING) | (st == STATUS_COMMUNICATING) |
+                 (st == STATUS_MIGRATING)) & (ct.host >= 0))
+    jobs_k = ct.job[cand]                                    # [K]
+    eq = ct.job[:, None] == jobs_k[None, :]                  # [C, K]
+    hit = eq.any(axis=1) & deployed
+    k_first = jnp.argmax(eq, axis=1)                         # [C]
+    hostc = jnp.clip(ct.host, 0, H - 1)
+    seg = jnp.where(hit, k_first * H + hostc, K * H)
+    table = jax.ops.segment_sum(
+        hit.astype(jnp.float32), seg, num_segments=K * H + 1)[:K * H]
+    kk_first = jnp.argmax(jobs_k[None, :] == jobs_k[:, None], axis=1)
+    return table.reshape(K, H)[kk_first]
+
+
+def same_job_host_counts_scatter(sim: SimState,
+                                 cand: jnp.ndarray) -> jnp.ndarray:
+    """PR 2 per-candidate scatter-add form — oracle for the segment-sum
+    rewrite (tests/test_scatter_free.py)."""
     H = sim.hosts.cap.shape[0]
     ct = sim.containers
     st = ct.status
@@ -156,10 +191,14 @@ def _update_round(sim, carry, k, cand, hh, ok) -> PlaceCarry:
 def _update_coloc(sim, carry, k, cand, hh, ok) -> PlaceCarry:
     """Admitting candidate k onto host hh raises the co-location count of
     every later same-job candidate — the intra-round carry that makes the
-    batched round match the sequential reference exactly."""
+    batched round match the sequential reference exactly.  The single-column
+    bump is a where-mask (one float add, bit-identical to the former
+    ``.at[:, hh].add`` scatter) so the admit scan stays scatter-free under
+    a vmapped sweep."""
     same = sim.containers.job[cand] == sim.containers.job[cand[k]]
-    inc = same.astype(jnp.float32) * ok.astype(jnp.float32)
-    return carry._replace(counts=carry.counts.at[:, hh].add(inc))
+    hot = (jnp.arange(carry.counts.shape[1]) == hh) & ok
+    return carry._replace(counts=jnp.where(
+        hot[None, :] & same[:, None], carry.counts + 1.0, carry.counts))
 
 
 # ---------------------------------------------------------------------------
@@ -385,15 +424,40 @@ def list_policies() -> list[str]:
 # vmap every branch is evaluated and selected per cell; on an unbatched run
 # only the selected branch executes.
 # ---------------------------------------------------------------------------
+def _dedup_switch(idx: jnp.ndarray, hooks, call, *args):
+    """``lax.switch`` over the UNIQUE hook functions, with the branch index
+    remapped through a constant table.
+
+    Registered policies share hook implementations heavily (every built-in
+    uses the FIFO ``select``; four share the static carry init).  Under a
+    policy-batched ``vmap`` the switch evaluates EVERY branch and selects
+    per cell, so dispatching over the raw per-policy tables would run the
+    duplicated hooks once per registration instead of once per distinct
+    implementation.  Dedup also collapses the common all-policies-share-it
+    case to a direct call — no switch at all.  ``call`` adapts a hook to
+    the dispatch arguments (closure over trace-time statics like cfg).
+    """
+    pos: dict = {}                      # hook -> index into uniq
+    remap = [pos.setdefault(h, len(pos)) for h in hooks]
+    uniq = list(pos)                    # insertion-ordered distinct hooks
+    if len(uniq) == 1:
+        return call(uniq[0])(*args)
+    branches = tuple(call(h) for h in uniq)
+    if remap == list(range(len(remap))):
+        return jax.lax.switch(idx, branches, *args)
+    return jax.lax.switch(jnp.asarray(remap, jnp.int32)[idx], branches,
+                          *args)
+
+
 def select_key(sim: SimState, pol: PolicyParams) -> jnp.ndarray:
-    return jax.lax.switch(pol.policy_id,
-                          tuple(d.select for d in _DEFS), sim)
+    return _dedup_switch(pol.policy_id, [d.select for d in _DEFS],
+                         lambda h: h, sim)
 
 
 def init_place_carry(sim: SimState, cand: jnp.ndarray,
                      pol: PolicyParams) -> PlaceCarry:
-    return jax.lax.switch(pol.policy_id,
-                          tuple(d.init for d in _DEFS), sim, cand)
+    return _dedup_switch(pol.policy_id, [d.init for d in _DEFS],
+                         lambda h: h, sim, cand)
 
 
 def host_row(sim: SimState, cfg: SimConfig, params: RunParams,
@@ -401,19 +465,17 @@ def host_row(sim: SimState, cfg: SimConfig, params: RunParams,
              used) -> jnp.ndarray:
     """The one scoring rule both engine paths evaluate: the f32[H]
     preference row for candidate ``k`` given the round's live state."""
-    branches = tuple(
-        (lambda d: lambda s, p, w, cr, kk, cd, us:
-            d.row(s, cfg, p, w, cr, kk, cd, us))(d)
-        for d in _DEFS)
-    return jax.lax.switch(pol.policy_id, branches,
-                          sim, params, pol.weights, carry, k, cand, used)
+    return _dedup_switch(
+        pol.policy_id, [d.row for d in _DEFS],
+        lambda h: (lambda s, p, w, cr, kk, cd, us:
+                   h(s, cfg, p, w, cr, kk, cd, us)),
+        sim, params, pol.weights, carry, k, cand, used)
 
 
 def update_place_carry(sim: SimState, pol: PolicyParams, carry: PlaceCarry,
                        k, cand, hh, ok) -> PlaceCarry:
-    return jax.lax.switch(pol.policy_id,
-                          tuple(d.update for d in _DEFS),
-                          sim, carry, k, cand, hh, ok)
+    return _dedup_switch(pol.policy_id, [d.update for d in _DEFS],
+                         lambda h: h, sim, carry, k, cand, hh, ok)
 
 
 def commit_place_carry(sched, carry: PlaceCarry):
@@ -425,9 +487,8 @@ def commit_place_carry(sched, carry: PlaceCarry):
 
 def migrate(sim: SimState, cfg: SimConfig, params: RunParams,
             pol: PolicyParams):
-    branches = tuple(
-        (lambda d: lambda s, p: d.migrate(s, cfg, p))(d) for d in _DEFS)
-    return jax.lax.switch(pol.policy_id, branches, sim, params)
+    return _dedup_switch(pol.policy_id, [d.migrate for d in _DEFS],
+                         lambda h: (lambda s, p: h(s, cfg, p)), sim, params)
 
 
 # ---------------------------------------------------------------------------

@@ -19,7 +19,12 @@ def collect(sim: SimState, new_arrivals: jnp.ndarray, decisions: jnp.ndarray,
             migrations: jnp.ndarray, params: RunParams,
             flow_active: jnp.ndarray, flow_rates: jnp.ndarray) -> TickMetrics:
     """Per-tick metrics; ``params`` carries the (traced, sweepable)
-    overload threshold the ``n_overloaded`` count is judged against."""
+    overload threshold the ``n_overloaded`` count is judged against.
+
+    Pure gathers and reductions — no scatters, so the whole collection
+    phase batches cleanly when the sweep vmaps the tick.  All lifecycle
+    counts come from ONE [C, 6] comparison pass instead of six [C] sweeps.
+    """
     st = sim.containers.status
     util = sim.hosts.used / jnp.maximum(sim.hosts.cap, 1e-6)      # [H, 3]
     worst = util.max(axis=1)
@@ -29,7 +34,10 @@ def collect(sim: SimState, new_arrivals: jnp.ndarray, decisions: jnp.ndarray,
         n_active_flows > 0,
         (flow_rates * flow_active).sum() / jnp.maximum(n_active_flows, 1),
         0.0)
-    count = lambda code: (st == code).sum()
+    codes = (STATUS_INACTIVE, STATUS_RUNNING, STATUS_COMMUNICATING,
+             STATUS_MIGRATING, STATUS_WAITING, STATUS_COMPLETED)
+    counts = (st[:, None] == jnp.array(codes)[None, :]).sum(axis=0)
+    count = dict(zip(codes, counts)).__getitem__
     return TickMetrics(
         t=sim.t,
         n_overloaded=(worst > params.overload_threshold).sum(),

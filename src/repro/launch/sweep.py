@@ -47,32 +47,26 @@ def make_sweep_fn(cfg: SimConfig, n_hosts: int, n_nodes: int, horizon: int):
     One jit over the SAME ``engine.simulate`` trace standalone ``run_sim``
     jits — so each cell is bit-for-bit a standalone run, and the whole grid
     costs exactly one XLA compilation (asserted in ``tests/test_sweep.py``
-    via the jit cache-miss counter).  Axis mechanics (docs/sweeps.md):
+    via the jit cache-miss counter).
 
-    * seeds ride ``vmap`` — pure data parallelism over an identical program
-      (squeezed when N == 1: a size-1 batch axis still forces XLA:CPU's
-      slow batched-scatter lowering on this scatter-heavy tick, ~2x);
-    * policies ride ``lax.map`` INSIDE the jit — with the branch index
-      unbatched per iteration each cell executes only its own policy's
-      ``lax.switch`` branch at runtime, where a vmapped index would
-      evaluate every branch on every cell and select;
-    * scenarios ride ``lax.map`` for the same batched-scatter reason.
+    ALL THREE axes ride ``vmap`` — one data-parallel batch of P*S*N cells.
+    The scatter-free tick made this possible (docs/sweeps.md): the PR 3
+    tick's state-update scatters hit XLA:CPU's slow *batched*-scatter
+    lowering (~1.6x per cell measured), so only the seed axis vmapped and
+    policies/scenarios paid a serializing ``lax.map``.  With the updates as
+    where-masks and segment reductions, batching the tick is ordinary
+    elementwise work.  Under a policy-batched ``vmap`` the ``lax.switch``
+    hook dispatch evaluates every registered branch and selects per cell —
+    that is the price of one compiled program over the policy axis, and it
+    is bounded by the most expensive branch (measured in the
+    ``vmap_cell_tax`` bench entry, BENCH_engine.json).
     """
     def cell(sim: SimState, pol: PolicyParams, rp: RunParams):
         return simulate(sim, cfg, pol, n_hosts, n_nodes, horizon, rp)
 
-    def seeds_f(sim, pol, rp):                    # seeds    [N]
-        if sim.t.shape[0] == 1:
-            out = cell(jax.tree.map(lambda x: x[0], sim), pol, rp)
-            return jax.tree.map(lambda x: x[None], out)
-        return jax.vmap(cell, in_axes=(0, None, None))(sim, pol, rp)
-
-    def grid(sims, pols, rps):
-        def scen_f(pol):                          # scenarios [S]
-            return jax.lax.map(lambda sr: seeds_f(sr[0], pol, sr[1]),
-                               (sims, rps))
-        return jax.lax.map(scen_f, pols)          # policies  [P]
-
+    seeds_f = jax.vmap(cell, in_axes=(0, None, None))      # seeds     [N]
+    scen_f = jax.vmap(seeds_f, in_axes=(0, None, 0))       # scenarios [S]
+    grid = jax.vmap(scen_f, in_axes=(None, 0, None))       # policies  [P]
     jitted = jax.jit(grid)
     # the registered branch tables are baked into the compiled grid; a
     # policy registered after this point would be silently clamped onto the

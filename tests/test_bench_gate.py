@@ -1,0 +1,138 @@
+"""The CI bench-regression gate must catch real regressions and stay quiet
+on healthy runs (benchmarks/check_regression.py — PR 4).
+
+The synthetic quick run is derived from the committed baseline itself, so
+the tests are self-consistent whatever numbers the baseline carries.
+"""
+import copy
+import json
+import os
+
+from benchmarks.check_regression import BASELINE, check
+
+TOL = 0.30
+
+
+def load_base():
+    with open(os.path.abspath(BASELINE)) as f:
+        return json.load(f)
+
+
+def quick_from(base):
+    """A quick-run JSON that matches the committed baseline exactly."""
+    return {
+        "bench": base["bench"],
+        "points": [copy.deepcopy(p) for p in base["points"]
+                   if (p["n_hosts"], p["n_containers"]) == (100, 1500)],
+        "sparse_speedup": 1.5,
+        "sweep": copy.deepcopy(base["sweep_quick"]),
+    }
+
+
+def test_committed_baseline_has_the_gate_inputs():
+    base = load_base()
+    assert base.get("sweep_quick"), "full bench must record sweep_quick"
+    assert base["sweep_quick"]["compile_cache_misses"] == 1
+    assert base["sweep"]["vmap_axes"] == "policy,scenario,seed"
+    assert any((p["n_hosts"], p["n_containers"]) == (100, 1500)
+               for p in base["points"])
+
+
+def test_gate_passes_on_matching_run():
+    base = load_base()
+    assert check(quick_from(base), base, TOL) == []
+
+
+def test_gate_allows_noise_inside_tolerance():
+    base = load_base()
+    quick = quick_from(base)
+    for p in quick["points"]:
+        p["ticks_per_s"] = round(p["ticks_per_s"] * (1 - TOL + 0.05), 1)
+    quick["sweep"]["sweep_steady_s"] = round(
+        quick["sweep"]["sweep_steady_s"] * (1 + TOL - 0.05), 2)
+    assert check(quick, base, TOL) == []
+
+
+def test_gate_tolerates_uniform_machine_skew():
+    """A uniformly 2x-slower CI runner moves every ratio together; the
+    median normalization must keep the gate green (the whole point of
+    relative gating — absolute wall-clock would be permanently red)."""
+    base = load_base()
+    quick = quick_from(base)
+    for p in quick["points"]:
+        p["ticks_per_s"] = round(p["ticks_per_s"] * 0.5, 1)
+    quick["sweep"]["sweep_steady_s"] = round(
+        quick["sweep"]["sweep_steady_s"] * 2.0, 2)
+    assert check(quick, base, TOL) == []
+
+
+def test_gate_catches_tick_wide_regression_via_within_run_ratio():
+    """A regression hitting the sparse tick AND the sweep together (e.g. a
+    scatter creeping back into the shared tick) moves 2 of the 3 wall-clock
+    ratios, so the median-skew gate alone would absorb it — the within-run
+    sparse/dense speedup must catch it."""
+    base = load_base()
+    quick = quick_from(base)
+    for p in quick["points"]:
+        if p["mode"] == "sparse":
+            p["ticks_per_s"] = round(p["ticks_per_s"] * 0.4, 1)
+    quick["sweep"]["sweep_steady_s"] = round(
+        quick["sweep"]["sweep_steady_s"] * 2.5, 2)
+    failures = check(quick, base, TOL)
+    assert any("sparse/dense" in m for m in failures), failures
+
+
+def test_gate_catches_sweep_batching_regression_via_vmap_cell_tax():
+    """The sweep losing batching efficiency shows up in the within-run
+    vmap_cell_tax even when wall-clock skew-normalization absorbs it."""
+    base = load_base()
+    quick = quick_from(base)
+    quick["sweep"]["vmap_cell_tax"] = round(
+        quick["sweep"]["vmap_cell_tax"] * (1 + TOL + 0.2), 2)
+    failures = check(quick, base, TOL)
+    assert any("vmap_cell_tax" in m for m in failures), failures
+
+
+def test_gate_fails_on_ticks_regression():
+    """One point falling >tol below the machine's median ratio fails."""
+    base = load_base()
+    quick = quick_from(base)
+    quick["points"][0]["ticks_per_s"] = round(
+        quick["points"][0]["ticks_per_s"] * (1 - TOL - 0.2), 1)
+    failures = check(quick, base, TOL)
+    assert any("regression" in m and "ticks_per_s" in m
+               for m in failures), failures
+
+
+def test_gate_fails_on_sweep_per_cell_regression():
+    base = load_base()
+    quick = quick_from(base)
+    quick["sweep"]["sweep_steady_s"] = round(
+        quick["sweep"]["sweep_steady_s"] * 2.0, 2)
+    failures = check(quick, base, TOL)
+    assert any("regression" in m and "per-cell" in m
+               for m in failures), failures
+
+
+def test_gate_fails_on_extra_compilation():
+    base = load_base()
+    quick = quick_from(base)
+    quick["sweep"]["compile_cache_misses"] = 2
+    failures = check(quick, base, TOL)
+    assert any("exactly once" in m for m in failures), failures
+
+
+def test_gate_fails_without_committed_sweep_quick():
+    base = load_base()
+    quick = quick_from(base)
+    del base["sweep_quick"]
+    failures = check(quick, base, TOL)
+    assert any("sweep_quick" in m for m in failures), failures
+
+
+def test_gate_fails_on_grid_mismatch():
+    base = load_base()
+    quick = quick_from(base)
+    quick["sweep"]["n_hosts"] += 1
+    failures = check(quick, base, TOL)
+    assert any("grid" in m for m in failures), failures

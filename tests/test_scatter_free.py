@@ -1,0 +1,140 @@
+"""Scatter-free tick acceptance (PR 4).
+
+The default tick replaces every ``.at[idx].set/add`` state-update scatter
+with where-masks / segment reductions so all three sweep axes can ``vmap``
+(docs/perf.md).  ``cfg.scatter_tick=True`` keeps the PR 3 scatter updates
+for one deprecation cycle as the oracle: a full mixed bursty-arrival run
+must agree BIT-FOR-BIT across the two paths for every registered policy —
+every masked form is either a single-index update (identical float
+operands) or an integer-valued / shared reduction, so there is no rounding
+to hide behind.
+
+Plus unit oracles for the shared scatter-free helpers (rank_key inverse
+permutation, same-job host counts, segment-min adjacency).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (SimConfig, build_paper_network, get_policy,
+                        list_policies, run_sim)
+from repro.core.network import adjacency_from_links
+from repro.core.scenario import ScenarioSpec, build_scenario
+from repro.core.scheduling import (INT_BIG, rank_key, same_job_host_counts,
+                                   same_job_host_counts_scatter)
+from repro.core.types import (STATUS_COMMUNICATING, STATUS_INACTIVE,
+                              STATUS_RUNNING)
+
+
+def make_cfg(**kw):
+    base = dict(n_jobs=10, n_tasks=40, n_containers=40, horizon=60,
+                arrival_window=10.0, placements_per_tick=16,
+                migrations_per_tick=2)
+    base.update(kw)
+    return SimConfig(**base)
+
+
+MIXED_BURSTY = ScenarioSpec("mixed_bursty", arrival="bursty",
+                            host_mix="premium", bw=300.0)
+
+
+@pytest.mark.parametrize("policy", list_policies())
+def test_scatter_free_tick_matches_scatter_oracle_bitwise(policy):
+    """Full-run state AND metrics, every leaf, np.array_equal — on a mixed
+    bursty scenario that exercises placement, co-location scoring,
+    communication stalls, migration and completion."""
+    outs = {}
+    for scat in (False, True):
+        cfg = make_cfg(scatter_tick=scat)
+        net_spec, sims, rp = build_scenario(MIXED_BURSTY, cfg, seeds=(0,))
+        sim0 = jax.tree.map(lambda x: x[0], sims)
+        outs[scat] = run_sim(sim0, cfg, get_policy(policy), net_spec.n_hosts,
+                             net_spec.n_nodes, cfg.horizon, params=rp)
+    for a, b in zip(jax.tree.leaves(outs[False]), jax.tree.leaves(outs[True])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=policy)
+
+
+def test_scatter_free_tick_matches_on_sequential_path():
+    """The sequential reference path (K=1 degenerate rounds) gates its
+    deploy scatters on the same flag."""
+    outs = {}
+    for scat in (False, True):
+        cfg = make_cfg(scatter_tick=scat, batched_placement=False)
+        net_spec, sims, rp = build_scenario(MIXED_BURSTY, cfg, seeds=(1,))
+        sim0 = jax.tree.map(lambda x: x[0], sims)
+        outs[scat] = run_sim(sim0, cfg, get_policy("round"), net_spec.n_hosts,
+                             net_spec.n_nodes, cfg.horizon, params=rp)
+    for a, b in zip(jax.tree.leaves(outs[False]), jax.tree.leaves(outs[True])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_rank_key_is_inverse_permutation_of_argsort():
+    """The double-argsort rank must equal the former
+    ``zeros.at[order].set(arange)`` scatter exactly, ties and all."""
+    rng = np.random.default_rng(7)
+    for _ in range(5):
+        C = 257
+        values = jnp.asarray(
+            rng.choice([0.0, 1.0, 2.5, 1e6], size=C).astype(np.float32))
+        mask = jnp.asarray(rng.random(C) < 0.7)
+        got = np.asarray(rank_key(values, mask))
+        order = jnp.argsort(values, stable=True)
+        want = np.asarray(jnp.where(
+            mask,
+            jnp.zeros((C,), jnp.int32).at[order].set(
+                jnp.arange(C, dtype=jnp.int32)),
+            INT_BIG))
+        np.testing.assert_array_equal(got, want)
+
+
+def test_same_job_host_counts_matches_scatter_oracle():
+    """Segment-sum [K, H] table == the PR 2 per-candidate scatter-adds,
+    including candidates sharing a job and undeployed/-1-job rows."""
+    rng = np.random.default_rng(11)
+    cfg = make_cfg()
+    net_spec, sims, _ = build_scenario(ScenarioSpec("baseline"), cfg,
+                                       seeds=(3,))
+    sim = jax.tree.map(lambda x: x[0], sims)
+    ct = sim.containers
+    C = ct.status.shape[0]
+    H = sim.hosts.cap.shape[0]
+    status = rng.choice([STATUS_INACTIVE, STATUS_RUNNING,
+                         STATUS_COMMUNICATING], size=C).astype(np.int32)
+    host = rng.integers(-1, H, size=C).astype(np.int32)
+    sim = sim._replace(containers=ct._replace(
+        status=jnp.asarray(status), host=jnp.asarray(host)))
+    for _ in range(4):
+        cand = jnp.asarray(rng.integers(0, C, size=16).astype(np.int32))
+        np.testing.assert_array_equal(
+            np.asarray(same_job_host_counts(sim, cand)),
+            np.asarray(same_job_host_counts_scatter(sim, cand)))
+
+
+def test_adjacency_segment_min_matches_scatter_build():
+    cfg = SimConfig()
+    spec, net = build_paper_network(cfg)
+    delay = net.link_delay * 3.0 + 0.01
+    got = adjacency_from_links(net, delay, spec.n_nodes)
+    n = spec.n_nodes
+    A = jnp.full((n, n), jnp.float32(1e9))
+    A = A.at[jnp.arange(n), jnp.arange(n)].set(0.0)
+    A = A.at[net.link_u, net.link_v].min(delay)
+    A = A.at[net.link_v, net.link_u].min(delay)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(A))
+
+
+def test_scatter_free_fw_delay_mode_matches():
+    """'fw' delay mode runs the rewritten adjacency + APSP inside the tick."""
+    outs = {}
+    for scat in (False, True):
+        cfg = make_cfg(scatter_tick=scat, delay_mode="fw", horizon=30)
+        net_spec, sims, rp = build_scenario(ScenarioSpec("baseline"), cfg,
+                                            seeds=(0,))
+        sim0 = jax.tree.map(lambda x: x[0], sims)
+        outs[scat] = run_sim(sim0, cfg, get_policy("netaware"),
+                             net_spec.n_hosts, net_spec.n_nodes, cfg.horizon,
+                             params=rp)
+    for a, b in zip(jax.tree.leaves(outs[False]), jax.tree.leaves(outs[True])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

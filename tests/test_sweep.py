@@ -83,6 +83,34 @@ def test_sweep_cells_match_standalone_bit_for_bit(sweep_result):
                         err_msg=f"{pol}/{spec.name}/seed{seed}/{k}")
 
 
+def test_fully_vmapped_grid_matches_standalone_state_exactly():
+    """PR 4 acceptance: with ALL THREE axes on ``vmap`` (scatter-free
+    tick), every cell's FULL final state and per-tick metrics — not just
+    the summary rows — equal the standalone ``run_sim`` bit-for-bit, and
+    the grid still compiles exactly once."""
+    cfg = small_cfg()
+    specs = sweep_scenarios()[:3]
+    res = run_sweep(policies=["firstfit", "netaware"], scenarios=specs,
+                    seeds=SEEDS, cfg=cfg)
+    assert res.compile_cache_misses == 1
+    assert res.finals.t.shape == (2, len(specs), len(SEEDS))
+    for s, spec in enumerate(specs):
+        net_spec, sims, rp = build_scenario(spec, cfg, seeds=SEEDS)
+        for n in range(len(SEEDS)):
+            sim0 = jax.tree.map(lambda x: x[n], sims)
+            for p, pol in enumerate(res.policies):
+                final, metrics = run_sim(sim0, cfg, get_policy(pol),
+                                         net_spec.n_hosts, net_spec.n_nodes,
+                                         cfg.horizon, params=rp)
+                cell = jax.tree.map(lambda x: x[p, s, n],
+                                    (res.finals, res.metrics))
+                for got, want in zip(jax.tree.leaves(cell),
+                                     jax.tree.leaves((final, metrics))):
+                    np.testing.assert_array_equal(
+                        np.asarray(got), np.asarray(want),
+                        err_msg=f"{pol}/{spec.name}/seed{n}")
+
+
 def test_vmapped_seed_batch_matches_per_seed_runs():
     """The seed-batched runner (ex run_sim_vmapped) is exact vs per-seed
     standalone runs — state and metrics, not just summaries."""
