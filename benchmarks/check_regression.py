@@ -28,7 +28,13 @@ The skew correction is blind to regressions that move most wall-clock
 metrics together, so two *within-run* ratios — machine-independent by
 construction — are gated absolutely as well: ``sparse_speedup`` (sparse vs
 dense ticks_per_s, same run) and ``vmap_cell_tax`` (vmapped per-cell vs
-warm standalone cell, same run).
+warm standalone cell, same run).  Since the branch-free scoring engine
+(ISSUE 5) the tax additionally has a hard acceptance ceiling — the policy
+axis pays one shared feature bank, not an all-branch ``lax.switch``
+evaluation, and both the committed full-grid baseline (<= 1.25) and the
+quick run (<= 1.25 * (1 + tol)) are held to it.  The ``tune`` smoke entry
+(weight search through the compiled sweep) must exist, compile exactly
+once, and its per-cell wall joins the skew-normalized pack.
 
 ``tol`` defaults to 0.30 — headroom for per-metric CI noise on top of the
 skew correction; the gate is one-sided, so getting faster never fails.
@@ -71,6 +77,14 @@ def check(quick: dict, base: dict, tol: float) -> list[str]:
         failures.append(
             f"sweep must compile exactly once, got "
             f"{sw.get('compile_cache_misses')}")
+    tn = quick.get("tune") or {}
+    if not tn:
+        failures.append("no 'tune' smoke entry recorded (weight search "
+                        "through the compiled sweep, ISSUE 5)")
+    elif tn.get("compile_cache_misses") != 1:
+        failures.append(
+            f"tune must compile exactly once (weights are the policy batch "
+            f"axis), got {tn.get('compile_cache_misses')}")
 
     # -- gather (name, speed ratio) per gated metric ------------------------
     # ratio > 1 means this run is faster than the committed baseline; the
@@ -106,6 +120,29 @@ def check(quick: dict, base: dict, tol: float) -> list[str]:
             ref = ref_sw["sweep_steady_s"] / ref_sw["cells"]
             ratios.append((
                 f"sweep per-cell steady ({got:.3f}s vs committed "
+                f"{ref:.3f}s)", ref / got))
+
+    ref_tn = base.get("tune")
+    if ref_tn is None:
+        failures.append(
+            "committed BENCH_engine.json has no 'tune' entry; re-run the "
+            "full bench to record the weight-search reference")
+    elif tn:
+        grid = ("n_hosts", "n_containers", "horizon", "cells")
+        if any(tn.get(k) != ref_tn.get(k) for k in grid):
+            failures.append(
+                f"tune grid {[tn.get(k) for k in grid]} != committed "
+                f"{[ref_tn.get(k) for k in grid]}")
+        # gate the WARM repeat, not tune_cold_s: the cold wall is mostly
+        # XLA compile on the smoke grid, and mixing a compile-bound
+        # metric into a runtime-ratio pack turns a jax-pin bump into a
+        # bogus regression (or hides a real runtime one)
+        elif (tn.get("tune_steady_s") or 0) > 0 and \
+                (ref_tn.get("tune_steady_s") or 0) > 0:
+            got = tn["tune_steady_s"] / tn["cells"]
+            ref = ref_tn["tune_steady_s"] / ref_tn["cells"]
+            ratios.append((
+                f"tune per-cell steady ({got:.3f}s vs committed "
                 f"{ref:.3f}s)", ref / got))
 
     # -- one-sided gate on skew-normalized ratios ---------------------------
@@ -152,6 +189,21 @@ def check(quick: dict, base: dict, tol: float) -> list[str]:
                 f"regression: within-run vmap_cell_tax {got} > committed "
                 f"{ref} + {tol:.0%} — the vmapped sweep got slower "
                 f"relative to standalone cells")
+    # ISSUE 5 acceptance ceiling: with branch-free scoring the policy axis
+    # must cost (about) what one generic score costs, not a sum of
+    # branches.  The committed FULL-grid baseline is held to the target
+    # outright; the quick run gets the tolerance on top.
+    TAX_CEILING = 1.25
+    base_tax = (base.get("sweep") or {}).get("vmap_cell_tax")
+    if base_tax is not None and base_tax > TAX_CEILING:
+        failures.append(
+            f"committed full-grid vmap_cell_tax {base_tax} exceeds the "
+            f"branch-free acceptance ceiling {TAX_CEILING}")
+    if sw.get("vmap_cell_tax") and \
+            sw["vmap_cell_tax"] > TAX_CEILING * (1.0 + tol):
+        failures.append(
+            f"regression: quick-run vmap_cell_tax {sw['vmap_cell_tax']} > "
+            f"acceptance ceiling {TAX_CEILING} + {tol:.0%}")
     return failures
 
 
@@ -163,11 +215,14 @@ def main() -> int:
         base = json.load(f)
     failures = check(quick, base, tol)
     sw = quick.get("sweep", {})
+    tn = quick.get("tune", {})
     print(f"quick bench: {len(quick.get('points', []))} points, "
           f"sparse_speedup={quick.get('sparse_speedup')}, "
           f"sweep {sw.get('cells')} cells in {sw.get('sweep_steady_s')}s "
           f"({sw.get('compile_cache_misses')} compile, "
-          f"vmap_cell_tax={sw.get('vmap_cell_tax')})")
+          f"vmap_cell_tax={sw.get('vmap_cell_tax')}), "
+          f"tune {tn.get('cells')} cells in {tn.get('tune_cold_s')}s "
+          f"({tn.get('compile_cache_misses')} compile)")
     if failures:
         for msg in failures:
             print(f"REGRESSION: {msg}", file=sys.stderr)

@@ -6,15 +6,17 @@ from repro.core.datacenter import (  # noqa: F401
 )
 from repro.core.engine import init_sim, run_sim, simulate  # noqa: F401
 from repro.core.report import (  # noqa: F401
-    summarize, sweep_summaries, sweep_table, timeseries, to_csv,
+    summarize, sweep_summaries, sweep_table, timeseries, to_csv, tune_table,
 )
 from repro.core.scenario import (  # noqa: F401
     ScenarioSpec, build_scenario, build_scenarios, default_scenarios,
 )
 from repro.core.scheduling import (  # noqa: F401
-    PolicyDef, get_policy, list_policies, register,
+    get_policy, list_policies, register, validate_weights, weight_vector,
 )
-from repro.core.types import PolicyParams, RunParams  # noqa: F401
+from repro.core.types import (  # noqa: F401
+    NUM_POLICY_WEIGHTS, WEIGHT_NAMES, PolicyParams, RunParams,
+)
 from repro.core.workload import (  # noqa: F401
     bursty_workload, paper_workload, trace_workload,
 )

@@ -76,12 +76,6 @@ class SimConfig:
     fw_use_kernel: bool = False
     sparse_flows: bool = True         # segment-based flow engine (docs/perf.md)
     batched_placement: bool = True    # conflict-resolved top-K placement round
-    # DEPRECATED (one cycle): re-enable the PR 3 scatter-based state updates
-    # in the placement/migration rounds.  The default tick is scatter-free
-    # (where-masks + segment reductions, docs/perf.md) so every sweep axis
-    # vmaps; the scatter path is kept only as the bit-for-bit oracle that
-    # tests/test_scatter_free.py checks the rewrite against.
-    scatter_tick: bool = False
     stall_rate_floor: float = 50.0    # KB/s under which a flow is 'stalled'
     mig_kb_per_gb: float = 1024.0     # migration bytes per GB of memory req
     queue_coef: float = 0.5           # RunParams default (runtime knob)

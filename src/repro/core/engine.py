@@ -59,16 +59,17 @@ def init_sim(hosts: HostState, containers: ContainerState, net: NetState,
 # ---------------------------------------------------------------------------
 # Resource bookkeeping helpers (masked, scan-safe for c == -1 / h == -1)
 #
-# The default tick is SCATTER-FREE: every ``.at[idx].set/add`` state update
-# is expressed as a where-mask (scalar/distinct indices — bit-exact, a
+# The tick is SCATTER-FREE: every ``.at[idx].set/add`` state update is
+# expressed as a where-mask (scalar/distinct indices — bit-exact, a
 # single float add with identical operands) or a ``segment_sum`` reduction
 # with the pad-slot trick (duplicate indices).  XLA:CPU lowers *batched*
 # scatters off its fast path (~2x per sweep cell, docs/sweeps.md), so the
 # scatter-heavy PR 3 tick forced ``lax.map`` over the policy/scenario sweep
 # axes; the masked forms lower to elementwise selects that ``vmap``
-# batches for free.  ``cfg.scatter_tick=True`` keeps the scatter updates
-# for one deprecation cycle as the bit-for-bit oracle
-# (tests/test_scatter_free.py).
+# batches for free.  (The PR 3 scatter forms survived one deprecation
+# cycle behind ``cfg.scatter_tick`` as the bit-for-bit oracle and are now
+# gone; the cheap unit oracles that don't fork the tick remain —
+# ``scheduling.same_job_host_counts_scatter``, dense ``flow_rates``.)
 # ---------------------------------------------------------------------------
 def _one_hot(n: int, idx: jnp.ndarray, ok: jnp.ndarray) -> jnp.ndarray:
     """bool[n] mask selecting ``idx`` when ``ok`` — the where-mask
@@ -76,31 +77,13 @@ def _one_hot(n: int, idx: jnp.ndarray, ok: jnp.ndarray) -> jnp.ndarray:
     return (jnp.arange(n) == idx) & ok
 
 
-def _deploy(sim: SimState, c: jnp.ndarray, h: jnp.ndarray,
-            scatter: bool = False) -> SimState:
+def _deploy(sim: SimState, c: jnp.ndarray, h: jnp.ndarray) -> SimState:
     C = sim.containers.status.shape[0]
     H = sim.hosts.cap.shape[0]
     cc = jnp.clip(c, 0, C - 1)
     hh = jnp.clip(h, 0, H - 1)
     ok = (c >= 0) & (h >= 0)
     ct = sim.containers
-    if scatter:
-        okf = ok.astype(F32)
-        req = ct.req[cc] * okf
-        hosts = sim.hosts._replace(
-            used=sim.hosts.used.at[hh].add(req),
-            n_containers=sim.hosts.n_containers.at[hh].add(ok.astype(I32)),
-        )
-        first = ct.start_t[cc] < 0
-        conts = ct._replace(
-            status=ct.status.at[cc].set(
-                jnp.where(ok, STATUS_RUNNING, ct.status[cc])),
-            host=ct.host.at[cc].set(jnp.where(ok, hh, ct.host[cc])),
-            start_t=ct.start_t.at[cc].set(
-                jnp.where(ok & first, sim.t, ct.start_t[cc])),
-            retry=ct.retry.at[cc].set(jnp.where(ok, 0, ct.retry[cc])),
-        )
-        return sim._replace(hosts=hosts, containers=conts)
     hot_h = _one_hot(H, hh, ok)
     hot_c = _one_hot(C, cc, ok)
     req = ct.req[cc]
@@ -163,7 +146,7 @@ def _pick_host(sim: SimState, cfg: SimConfig, params: RunParams,
 
 
 def _place_sequential(sim: SimState, cfg: SimConfig, params: RunParams,
-                      policy: PolicyParams, scatter: bool = False) -> SimState:
+                      policy: PolicyParams) -> SimState:
     """Sequential reference path, derived from the same scoring API.
 
     Each scan step is a K=1 degenerate placement round against the fully
@@ -191,7 +174,7 @@ def _place_sequential(sim: SimState, cfg: SimConfig, params: RunParams,
         pcarry = scheduling.update_place_carry(s, policy, pcarry, 0, cand,
                                                hh, ok)
         s = s._replace(sched=scheduling.commit_place_carry(s.sched, pcarry))
-        s = _deploy(s, jnp.where(valid, c, -1), h, scatter=scatter)
+        s = _deploy(s, jnp.where(valid, c, -1), h)
         s = s._replace(sched=s.sched._replace(
             decisions=s.sched.decisions + ok.astype(I32)))
         return s, None
@@ -213,7 +196,7 @@ def _scatter_to_containers(C: int, idx: jnp.ndarray, ok: jnp.ndarray):
 
 
 def _place_batched(sim: SimState, cfg: SimConfig, params: RunParams,
-                   policy: PolicyParams, scatter: bool = False) -> SimState:
+                   policy: PolicyParams) -> SimState:
     """Batched conflict-resolved placement round.
 
     Instead of ``placements_per_tick`` full select+score passes (each one
@@ -223,11 +206,10 @@ def _place_batched(sim: SimState, cfg: SimConfig, params: RunParams,
     score once, and admit the candidates with a short K-length scan that
     carries the live host ``used`` / slot counters plus the policy's
     dynamic-term carry — so later decisions observe both earlier ones'
-    resource consumption AND their score impact (Round's rotating pointer,
-    the co-location counts of JobGroup/NetAware).  Container-state updates
-    are applied in one vectorized pass afterwards (top-k candidate indices
-    are distinct): where-masks by default, scatters on the deprecated
-    oracle path.
+    resource consumption AND their score impact (the rotating pointer, the
+    co-location counts).  Container-state updates are applied in one
+    vectorized pass of where-masks afterwards (top-k candidate indices are
+    distinct).
 
     One deliberate semantic upgrade over the sequential reference: a
     candidate with no feasible host no longer blocks the rest of the round
@@ -250,13 +232,9 @@ def _place_batched(sim: SimState, cfg: SimConfig, params: RunParams,
         h = _pick_host(sim, cfg, params, policy, pcarry, k, cand, used, feas)
         ok = h >= 0
         hh = jnp.clip(h, 0, H - 1)
-        if scatter:
-            used = used.at[hh].add(req_k[k] * ok.astype(F32))
-            ncont = ncont.at[hh].add(ok.astype(I32))
-        else:
-            hot = _one_hot(H, hh, ok)
-            used = jnp.where(hot[:, None], used + req_k[k][None, :], used)
-            ncont = jnp.where(hot, ncont + 1, ncont)
+        hot = _one_hot(H, hh, ok)
+        used = jnp.where(hot[:, None], used + req_k[k][None, :], used)
+        ncont = jnp.where(hot, ncont + 1, ncont)
         pcarry = scheduling.update_place_carry(sim, policy, pcarry, k, cand,
                                                hh, ok)
         return (used, ncont, pcarry), h
@@ -267,24 +245,13 @@ def _place_batched(sim: SimState, cfg: SimConfig, params: RunParams,
     ok = chosen >= 0
     hh = jnp.clip(chosen, 0, H - 1)
     ct = sim.containers
-    if scatter:
-        first = ct.start_t[cand] < 0
-        conts = ct._replace(
-            status=ct.status.at[cand].set(
-                jnp.where(ok, STATUS_RUNNING, ct.status[cand])),
-            host=ct.host.at[cand].set(jnp.where(ok, hh, ct.host[cand])),
-            start_t=ct.start_t.at[cand].set(
-                jnp.where(ok & first, sim.t, ct.start_t[cand])),
-            retry=ct.retry.at[cand].set(jnp.where(ok, 0, ct.retry[cand])),
-        )
-    else:
-        sel, k_of = _scatter_to_containers(C, cand, ok)
-        conts = ct._replace(
-            status=jnp.where(sel, STATUS_RUNNING, ct.status),
-            host=jnp.where(sel, hh[k_of], ct.host),
-            start_t=jnp.where(sel & (ct.start_t < 0), sim.t, ct.start_t),
-            retry=jnp.where(sel, 0, ct.retry),
-        )
+    sel, k_of = _scatter_to_containers(C, cand, ok)
+    conts = ct._replace(
+        status=jnp.where(sel, STATUS_RUNNING, ct.status),
+        host=jnp.where(sel, hh[k_of], ct.host),
+        start_t=jnp.where(sel & (ct.start_t < 0), sim.t, ct.start_t),
+        retry=jnp.where(sel, 0, ct.retry),
+    )
     hosts = sim.hosts._replace(used=used, n_containers=ncont)
     sched = scheduling.commit_place_carry(sim.sched, pcarry)._replace(
         decisions=sim.sched.decisions + ok.sum().astype(I32))
@@ -292,15 +259,16 @@ def _place_batched(sim: SimState, cfg: SimConfig, params: RunParams,
 
 
 def _migrate_batched(sim: SimState, cfg: SimConfig, params: RunParams,
-                     policy: PolicyParams, scatter: bool = False) -> SimState:
+                     policy: PolicyParams) -> SimState:
     """Migration decision round.
 
     The decision scan carries only the fields a migration start can change
     (host ``used``/slot counters, container status) instead of threading the
     whole SimState; the chosen (container, destination) pairs are applied in
-    one vectorized pass afterwards.  The migration rule is switch-dispatched
-    like every other policy hook — branches without one hit the no-op branch
-    and the round leaves the state untouched.
+    one vectorized pass afterwards.  The migration rule is the weighted
+    destination score of ``scheduling.migrate`` — a policy whose
+    ``W_MIG_ENABLE`` weight is zero yields uniform (-1, -1) decisions and
+    the round leaves the state untouched.
     """
     C = sim.containers.status.shape[0]
     H = sim.hosts.cap.shape[0]
@@ -315,17 +283,11 @@ def _migrate_batched(sim: SimState, cfg: SimConfig, params: RunParams,
         cc = jnp.clip(c, 0, C - 1)
         hh = jnp.clip(dst, 0, H - 1)
         # reserve destination resources for the duration of the transfer
-        if scatter:
-            used = used.at[hh].add(sim.containers.req[cc] * ok.astype(F32))
-            ncont = ncont.at[hh].add(ok.astype(I32))
-            status = status.at[cc].set(
-                jnp.where(ok, STATUS_MIGRATING, status[cc]))
-        else:
-            hot_h = _one_hot(H, hh, ok)
-            used = jnp.where(hot_h[:, None],
-                             used + sim.containers.req[cc][None, :], used)
-            ncont = jnp.where(hot_h, ncont + 1, ncont)
-            status = jnp.where(_one_hot(C, cc, ok), STATUS_MIGRATING, status)
+        hot_h = _one_hot(H, hh, ok)
+        used = jnp.where(hot_h[:, None],
+                         used + sim.containers.req[cc][None, :], used)
+        ncont = jnp.where(hot_h, ncont + 1, ncont)
+        status = jnp.where(_one_hot(C, cc, ok), STATUS_MIGRATING, status)
         return (used, ncont, status), (jnp.where(ok, cc, -1),
                                        jnp.where(ok, hh, -1))
 
@@ -336,14 +298,8 @@ def _migrate_batched(sim: SimState, cfg: SimConfig, params: RunParams,
     ok = cs >= 0
     # chosen containers are distinct (STATUS_MIGRATING removes them from the
     # movable set mid-scan)
-    if scatter:
-        # scatter via an out-of-bounds drop for the -1s (oracle path)
-        idx = jnp.where(ok, cs, C)
-        sel = jnp.zeros((C,), bool).at[idx].set(True, mode="drop")
-        dst_arr = jnp.full((C,), -1, I32).at[idx].set(dsts, mode="drop")
-    else:
-        sel, m_of = _scatter_to_containers(C, cs, ok)
-        dst_arr = jnp.where(sel, dsts[m_of], -1)
+    sel, m_of = _scatter_to_containers(C, cs, ok)
+    dst_arr = jnp.where(sel, dsts[m_of], -1)
     ct = sim.containers
     conts = ct._replace(
         status=status,                       # MIGRATING set inside the scan
@@ -363,27 +319,23 @@ def phase_schedule(sim: SimState, cfg: SimConfig, policy: PolicyParams,
     """Paper ``schedule`` process: place up to ``placements_per_tick``
     containers, then start up to ``migrations_per_tick`` migrations.
 
-    Both placement paths evaluate the switch-dispatched scoring hooks
+    Both placement paths evaluate the same weighted scoring hooks
     (``scheduling.select_key`` / ``host_row`` / the ``PlaceCarry``);
     ``cfg.batched_placement`` selects the batched round or the K=1-derived
-    sequential reference.  The migration round always runs — which rule (or
-    the no-op branch) is the policy's data, not Python structure.
-    ``cfg.scatter_tick`` (deprecated) swaps the state updates back to the
-    PR 3 scatter forms — the bit-for-bit oracle of the scatter-free tick.
+    sequential reference.  The migration round always runs — whether the
+    policy migrates, and where to, is its weight vector, not Python
+    structure.
     """
     params = cfg.run_params() if params is None else params
     sim = sim._replace(sched=sim.sched._replace(
         decisions=jnp.zeros((), I32), migrations=jnp.zeros((), I32)))
 
     if cfg.batched_placement:
-        sim = _place_batched(sim, cfg, params, policy,
-                             scatter=cfg.scatter_tick)
+        sim = _place_batched(sim, cfg, params, policy)
     else:
-        sim = _place_sequential(sim, cfg, params, policy,
-                                scatter=cfg.scatter_tick)
+        sim = _place_sequential(sim, cfg, params, policy)
 
-    return _migrate_batched(sim, cfg, params, policy,
-                            scatter=cfg.scatter_tick)
+    return _migrate_batched(sim, cfg, params, policy)
 
 
 def pick_comm_peers(ct: ContainerState) -> jnp.ndarray:
@@ -629,14 +581,12 @@ def simulate(sim0: SimState, cfg: SimConfig, policy: PolicyParams,
     return jax.lax.scan(tick, sim0, jnp.arange(horizon, dtype=I32))
 
 
-# ``registry`` keys the cache on scheduling.registry_version(): the switch
-# branch tables are baked into the compiled program, so registering a new
-# policy must invalidate it (a stale table would clamp the new branch index
-# and silently run another policy's hooks).
+# Nothing about the policy registry is baked into compiled programs with
+# branch-free scoring — a policy is a weight vector, so registering a new
+# one after a compiled run simply feeds new data through the executable.
 @functools.partial(jax.jit, static_argnames=("cfg", "n_hosts", "n_nodes",
-                                             "horizon", "registry"))
-def _run_sim_jit(sim0, cfg, policy, params, n_hosts, n_nodes, horizon,
-                 registry):
+                                             "horizon"))
+def _run_sim_jit(sim0, cfg, policy, params, n_hosts, n_nodes, horizon):
     return simulate(sim0, cfg, policy, n_hosts, n_nodes, horizon, params)
 
 
@@ -646,12 +596,11 @@ def run_sim(sim0: SimState, cfg: SimConfig, policy: PolicyParams,
             ) -> Tuple[SimState, TickMetrics]:
     """Run ``horizon`` ticks; returns (final state, stacked per-tick metrics).
 
-    Only ``cfg`` and the shape arguments are static.  ``policy`` (branch id
-    + weights) and ``params`` (bw/loss/queue/threshold knobs, defaulting
-    from the config) are DATA: every policy and every runtime-parameter
-    point reuses one compilation per (config, shapes, policy-registry)
-    combination.
+    Only ``cfg`` and the shape arguments are static.  ``policy`` (a weight
+    vector) and ``params`` (bw/loss/queue/threshold knobs, defaulting from
+    the config) are DATA: every policy — including ones registered after
+    this call — and every runtime-parameter point reuses one compilation
+    per (config, shapes) combination.
     """
     params = cfg.run_params() if params is None else params
-    return _run_sim_jit(sim0, cfg, policy, params, n_hosts, n_nodes, horizon,
-                        registry=scheduling.registry_version())
+    return _run_sim_jit(sim0, cfg, policy, params, n_hosts, n_nodes, horizon)

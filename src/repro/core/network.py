@@ -26,10 +26,11 @@ from repro.core.types import NetState
 INF = jnp.float32(1e9)
 MBPS_TO_KBPS = 125.0  # 1 Mbps = 125 KB/s
 LOCAL_RATE_KBPS = 4.0e6  # same-host "loopback" transfer rate
-# comm-cost weights: single source of truth — PolicyParams.weights defaults
-# to these (scheduling.DEFAULT_WEIGHTS), and build_network/set_link_params
-# (which have no policy in scope) use them for the initial table; the engine
-# re-weights from the policy's weight vector at every delay refresh.
+# comm-cost weights: single source of truth — every policy's weight vector
+# defaults to these (scheduling.weight_vector seeds its util/cross_leaf
+# slots from them), and build_network/set_link_params (which have no policy
+# in scope) use them for the initial table; the engine re-weights from the
+# policy's weight vector at every delay refresh.
 DEFAULT_UTIL_WEIGHT = 1.0     # ms-equivalent at 100% path utilization
 DEFAULT_CROSS_LEAF_MS = 0.05  # penalty for transiting the spine
 

@@ -113,6 +113,36 @@ def sweep_summaries(finals: SimState, metrics: TickMetrics,
     return rows
 
 
+def tune_table(weights, scores, objective: str = "avg_runtime",
+               top: int = 10, minimize: bool = True) -> str:
+    """Best-weights table for a weight search (``repro.launch.tune``).
+
+    ``weights`` is the [W, NUM_POLICY_WEIGHTS] sample matrix, ``scores``
+    the per-sample objective in the metric's TRUE sign (``minimize``
+    gives the ranking direction; NaN = the sample failed the objective
+    somewhere and sorts last either way).  Only the weight columns that
+    actually vary across samples are shown — the searched dimensions.
+    """
+    from repro.core.types import WEIGHT_NAMES
+    w = np.asarray(weights, np.float64)
+    s = np.asarray(scores, np.float64)
+    order = np.argsort(s if minimize else -s)  # NaNs sort last either way
+    varying = [j for j in range(w.shape[1])
+               if np.unique(w[:, j]).size > 1] or [0]
+    cols = [WEIGHT_NAMES[j] for j in varying]
+    width = max(12, max(len(c) for c in cols) + 2)
+    direction = "lower = better" if minimize else "higher = better"
+    lines = [f"best weights by {objective} ({direction})",
+             "".join(["rank  sample  ", objective.rjust(14)]
+                     + [c.rjust(width) for c in cols])]
+    for rank, i in enumerate(order[:top]):
+        val = f"{s[i]:.4f}" if np.isfinite(s[i]) else "nan"
+        lines.append("".join([f"{rank:<6d}w{i:03d}    ", val.rjust(14)]
+                             + [f"{w[i, j]:.4f}".rjust(width)
+                                for j in varying]))
+    return "\n".join(lines)
+
+
 def sweep_table(rows: Sequence[Dict[str, Any]],
                 value: str = "avg_runtime") -> str:
     """Grouped summary table: scenario rows x policy columns, the ``value``

@@ -1,55 +1,58 @@
-"""Container scheduling module (paper §3.5) — policy-as-data.
+"""Container scheduling module (paper §3.5) — branch-free scoring.
 
-A scheduling algorithm is split into a *code* half and a *data* half:
+A scheduling algorithm IS a weight vector.  The engine computes one shared
+**feature bank** and every decision is a weighted sum:
 
-* the code half is a :class:`PolicyDef` — a named set of scoring branch
-  functions (selection key, per-candidate host-preference row, placement
-  carry hooks, optional migration rule) registered into a branch table;
-* the data half is a :class:`PolicyParams` pytree (``types.py``) — the
-  branch index plus a weight vector.
+* selection: ``priority[c] = sel_features(c) @ w`` ranked by
+  :func:`rank_key` (lower = scheduled earlier);
+* placement: ``score[h] = placement_features(h) @ w`` for each candidate,
+  argmin over the feasible hosts (free CPU/mem, host utilization,
+  round-robin recency, same-job co-location count, mean ``comm_cost`` to
+  deployed peers, access-link utilization, cross-leaf peer fraction — the
+  ``F_*`` enum in ``types.py``);
+* migration: the trigger is a mask weight (``W_MIG_ENABLE``; 0 reproduces
+  the old no-op branch exactly) and the destination is
+  ``migration_features(h) @ w`` (host index, bottleneck path utilization
+  from the source, cross-leaf indicator, worst fit).
 
-The engine never sees a ``PolicyDef`` directly: every hook is evaluated
-through a ``lax.switch`` over the registered branches, indexed by
-``PolicyParams.policy_id``.  What varies between policies is therefore pure
-data, so a batch of policies is a ``PolicyParams`` with a leading axis and a
-policy sweep is ONE compiled program (see ``repro/launch/sweep.py``) —
-instead of one XLA compilation per algorithm.
+There is no ``lax.switch``, no branch table and no per-policy code: the
+six paper/DRAPS policies ship as named weight vectors in the registry
+(one-hot or disjoint-support vectors, so each reproduces its former
+branch's scores **bit-for-bit** — every feature is finite by construction
+and a zero weight contributes an exact ``0.0``).  Consequences the old
+branch dispatch could not offer:
 
-The scoring interface itself is unchanged from the unified score-based API:
+* a policy-batched sweep pays ONE feature-bank evaluation per cell instead
+  of evaluating every registered branch under ``vmap``
+  (``docs/sweeps.md``);
+* registering a policy never invalidates compiled programs — new policies
+  are new *data* through the same executable;
+* weight search (``repro.launch.tune``) is just a batch axis on
+  ``PolicyParams.weights``.
 
-* ``select_key(sim, pol) -> i32[C]`` — selection order over containers
-  (lower = scheduled earlier, ``INT_BIG`` = not schedulable this tick);
-* ``host_row(sim, cfg, params, pol, carry, k, cand, used) -> f32[H]`` —
-  candidate ``k``'s host preference (lower = better);
-* a scan-carried :class:`PlaceCarry` (Round's rotating pointer + the
-  same-job co-location counts) updated after every admit, so intra-round
-  decisions see each other and batched == sequential placements exactly.
-
-Migration: ``migrate(sim, cfg, params, pol) -> (container | -1, dst | -1)``,
-dispatched through the same branch table (policies without a migration rule
-hit a no-op branch).  Users extend by registering a ``PolicyDef`` — the
-paper's "flexible and scalable interface for scheduling algorithms".
+Users extend by registering a weight vector — ``register("mine",
+dict(row_worst_fit=1.0, sel_duration=0.1))`` — the paper's "flexible and
+scalable interface for scheduling algorithms" with no code at all.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, NamedTuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import network
 from repro.core.datacenter import SimConfig
 from repro.core.types import (
-    NUM_POLICY_WEIGHTS, STATUS_COMMUNICATING, STATUS_INACTIVE,
-    STATUS_MIGRATING, STATUS_RUNNING, STATUS_WAITING, PolicyParams, RunParams,
-    SimState,
+    NUM_MIG_FEATURES, NUM_POLICY_WEIGHTS, NUM_ROW_FEATURES,
+    STATUS_COMMUNICATING, STATUS_INACTIVE, STATUS_MIGRATING, STATUS_RUNNING,
+    STATUS_WAITING, W_MIG0, W_MIG_ENABLE, W_ROW0, W_RR_TRACK, W_SEL_DURATION,
+    W_SEL_SUBMIT, WEIGHT_NAMES, PolicyParams, RunParams, SimState,
 )
 
 BIG = jnp.float32(1e18)          # host-score sentinel (infeasible)
 INT_BIG = jnp.int32(2**31 - 1)   # selection-key sentinel (unschedulable)
-
-DEFAULT_WEIGHTS = (network.DEFAULT_UTIL_WEIGHT, network.DEFAULT_CROSS_LEAF_MS)
 
 
 # ---------------------------------------------------------------------------
@@ -96,7 +99,9 @@ def rank_key(values: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
 
 
 def select_key_fifo(sim: SimState) -> jnp.ndarray:
-    """Paper default selection: earliest-submitted first, index tie-break."""
+    """Paper default selection: earliest-submitted first, index tie-break.
+    (== the generic :func:`select_key` with ``sel_submit=1`` and every other
+    selection weight 0 — kept as the named reference.)"""
     return rank_key(sim.containers.submit_t, schedulable_mask(sim))
 
 
@@ -107,16 +112,20 @@ def _first_true(order_key: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
-# The unified placement carry
+# The placement carry
 #
-# One pytree shape shared by every branch, so ``lax.switch`` can dispatch
-# over policies whose scores carry different things: Round rotates ``rr``,
-# the co-location policies (JobGroup, NetAware) update ``counts``, the
-# static scores touch neither.
+# The one pytree every policy's round shares: Round's rotating pointer
+# (tracked only when ``W_RR_TRACK`` is set) and the same-job co-location
+# counts the F_COLOC / F_COMM / F_CROSS_LEAF features read.
 # ---------------------------------------------------------------------------
 class PlaceCarry(NamedTuple):
     rr: jnp.ndarray      # i32[]    Round's rotating last-used-host pointer
     counts: jnp.ndarray  # f32[K,H] deployed same-job containers per host
+    # same-job peers on the HOST'S OWN leaf, per (candidate, host) — the
+    # F_CROSS_LEAF numerator.  Maintained incrementally (exact integer
+    # adds): the alternative, a segment_sum over leaf ids per admit step,
+    # is a batched scatter inside the hot scan — the PR 4 anti-pattern.
+    leafpeers: jnp.ndarray  # f32[K,H]
 
 
 def same_job_host_counts(sim: SimState, cand: jnp.ndarray) -> jnp.ndarray:
@@ -151,7 +160,7 @@ def same_job_host_counts(sim: SimState, cand: jnp.ndarray) -> jnp.ndarray:
 
 def same_job_host_counts_scatter(sim: SimState,
                                  cand: jnp.ndarray) -> jnp.ndarray:
-    """PR 2 per-candidate scatter-add form — oracle for the segment-sum
+    """PR 2 per-candidate scatter-add form — unit oracle for the segment-sum
     rewrite (tests/test_scatter_free.py)."""
     H = sim.hosts.cap.shape[0]
     ct = sim.containers
@@ -165,103 +174,155 @@ def same_job_host_counts_scatter(sim: SimState,
     )(same.astype(jnp.float32))
 
 
-def _zero_counts(sim: SimState, cand: jnp.ndarray) -> jnp.ndarray:
-    return jnp.zeros((cand.shape[0], sim.hosts.cap.shape[0]), jnp.float32)
-
-
-# --- carry init branches: (sim, cand) -> PlaceCarry ------------------------
-def _init_static(sim: SimState, cand: jnp.ndarray) -> PlaceCarry:
-    return PlaceCarry(rr=sim.sched.rr_pointer, counts=_zero_counts(sim, cand))
-
-
-def _init_coloc(sim: SimState, cand: jnp.ndarray) -> PlaceCarry:
-    return PlaceCarry(rr=sim.sched.rr_pointer,
-                      counts=same_job_host_counts(sim, cand))
-
-
-# --- carry update branches: (sim, carry, k, cand, hh, ok) -> PlaceCarry ----
-def _update_noop(sim, carry, k, cand, hh, ok) -> PlaceCarry:
-    return carry
-
-
-def _update_round(sim, carry, k, cand, hh, ok) -> PlaceCarry:
-    return carry._replace(rr=jnp.where(ok, hh, carry.rr))
-
-
-def _update_coloc(sim, carry, k, cand, hh, ok) -> PlaceCarry:
-    """Admitting candidate k onto host hh raises the co-location count of
-    every later same-job candidate — the intra-round carry that makes the
-    batched round match the sequential reference exactly.  The single-column
-    bump is a where-mask (one float add, bit-identical to the former
-    ``.at[:, hh].add`` scatter) so the admit scan stays scatter-free under
-    a vmapped sweep."""
-    same = sim.containers.job[cand] == sim.containers.job[cand[k]]
-    hot = (jnp.arange(carry.counts.shape[1]) == hh) & ok
-    return carry._replace(counts=jnp.where(
-        hot[None, :] & same[:, None], carry.counts + 1.0, carry.counts))
-
-
-# ---------------------------------------------------------------------------
-# Host-preference rows (paper §3.5 algorithms 2-3)
-#
-# ``row(sim, cfg, params, w, carry, k, cand, used) -> f32[H]``: candidate
-# ``k``'s host preference (lower = better; argmin breaks ties toward the
-# lowest host index).  Feasibility is NOT baked in — the engine masks
-# infeasible hosts against its live resource counters so intra-round
-# decisions see each other.  ``w`` is the policy's weight vector.
-# ---------------------------------------------------------------------------
-def _row_firstfit(sim, cfg, params, w, carry, k, cand, used):
-    """FirstFit [36]: lowest-numbered host satisfying the constraints."""
-    return jnp.arange(sim.hosts.cap.shape[0], dtype=jnp.float32)
-
-
-def _row_performance_first(sim, cfg, params, w, carry, k, cand, used):
-    """PerformanceFirst (DRAPS-derived): fastest host for the candidate's
-    primary resource."""
-    return -sim.hosts.speed[:, sim.containers.ctype[cand[k]]]
-
-
-def _row_round(sim, cfg, params, w, carry, k, cand, used):
-    """Round (paper §3.5): first feasible host after the last used one."""
-    H = sim.hosts.cap.shape[0]
-    return jnp.mod(jnp.arange(H) - carry.rr - 1, H).astype(jnp.float32)
-
-
 def _worst_fit_row(sim: SimState, used: jnp.ndarray) -> jnp.ndarray:
     """Most total normalized free resources first (lower key = better)."""
     free = (sim.hosts.cap - used) / jnp.maximum(sim.hosts.cap, 1e-6)
     return -free.sum(axis=1)
 
 
-def _row_jobgroup(sim, cfg, params, w, carry, k, cand, used):
-    """JobGroup (CA-WFD-derived): host holding the most same-job containers;
-    worst-fit on free resources while the job has none deployed."""
-    cnt = carry.counts[k]
-    return jnp.where(cnt.sum() > 0, -cnt, _worst_fit_row(sim, used))
+# ---------------------------------------------------------------------------
+# The generic scoring hooks — the ONLY policy surface the engine consumes.
+# Everything is a weighted sum over a feature bank, so a batch of policies
+# is a batch axis on ``PolicyParams.weights`` and nothing else.
+#
+# EXACTNESS CONTRACT: every feature must be FINITE for every reachable
+# state.  A zero weight then contributes an exact 0.0 to the dot product,
+# which is what lets one-hot legacy vectors reproduce the former per-policy
+# branches bit-for-bit (0.0 * inf would poison the score with NaN).
+# ---------------------------------------------------------------------------
+def select_key(sim: SimState, pol: PolicyParams) -> jnp.ndarray:
+    """i32[C] selection ranks from the weighted container-priority score.
 
-
-def _row_netaware(sim, cfg, params, w, carry, k, cand, used):
-    """NetAware: mean expected communication cost from each host to the
-    candidate's deployed same-job peers, under the current fabric state.
-
-    ``NetState.comm_cost`` (delay matrix + bottleneck link utilization along
-    the ECMP path + cross-leaf penalty, re-weighted from the policy's weight
-    vector at every delay refresh) prices every host pair; peers placed
-    earlier in the same round are in ``carry.counts`` via the co-location
-    carry.  Jobs with no deployed peers fall back to worst-fit, like
-    JobGroup.
+    ``priority = w[sel_submit] * submit_t + w[sel_duration] * duration``;
+    lower = scheduled earlier, ``INT_BIG`` = not schedulable this tick.
+    (``submit_t`` is +inf on unborn slots; they are masked out, and NaNs a
+    zero submit-weight would produce there sort last without disturbing
+    the ranks of schedulable containers.)
     """
-    cnt = carry.counts[k]                                    # [H] peers/host
-    cost = cnt @ sim.net.comm_cost                           # [H] total cost
-    return jnp.where(cnt.sum() > 0, cost / jnp.maximum(cnt.sum(), 1.0),
-                     _worst_fit_row(sim, used))
+    ct = sim.containers
+    w = pol.weights
+    priority = w[W_SEL_SUBMIT] * ct.submit_t + w[W_SEL_DURATION] * ct.duration
+    return rank_key(priority, schedulable_mask(sim))
+
+
+def init_place_carry(sim: SimState, cand: jnp.ndarray,
+                     pol: PolicyParams) -> PlaceCarry:
+    """One generic carry for every policy: the co-location counts feed the
+    F_COLOC/F_COMM/F_CROSS_LEAF features (an exact 0.0 in the score when
+    their weights are zero), the pointer starts from the persisted
+    ``rr_pointer`` and only moves when ``W_RR_TRACK`` is set.
+
+    The per-leaf peer totals are reduced ONCE per round here (and then
+    maintained by elementwise adds in :func:`update_place_carry`), so the
+    admit scan itself stays free of segment reductions."""
+    H = sim.hosts.cap.shape[0]
+    counts = same_job_host_counts(sim, cand)
+    per_leaf = jax.vmap(lambda c: jax.ops.segment_sum(
+        c, sim.hosts.leaf, num_segments=H))(counts)          # [K, leafslot]
+    return PlaceCarry(rr=sim.sched.rr_pointer, counts=counts,
+                      leafpeers=per_leaf[:, sim.hosts.leaf])
+
+
+def _row_feature_columns(sim: SimState, cfg: SimConfig, params: RunParams,
+                         carry: PlaceCarry, k, cand,
+                         used: jnp.ndarray) -> tuple:
+    """The shared feature columns (``F_*`` order) for candidate ``k`` —
+    computed ONCE per admit step, whatever the weights select.  All
+    columns are finite (the exactness contract)."""
+    hosts = sim.hosts
+    H = hosts.cap.shape[0]
+    ct = sim.containers
+
+    # recency: mod-distance past the rotating pointer.  With rr pinned at
+    # -1 (untracked) this is exactly the host index — FirstFit's score.
+    recency = jnp.mod(jnp.arange(H) - carry.rr - 1, H).astype(jnp.float32)
+    neg_speed = -hosts.speed[:, ct.ctype[cand[k]]]
+    free = (hosts.cap - used) / jnp.maximum(hosts.cap, 1e-6)     # [H, 3]
+    worst = -free.sum(axis=1)
+
+    cnt = carry.counts[k]                                        # [H]
+    total = cnt.sum()
+    has = total > 0
+    coloc = jnp.where(has, -cnt, 0.0)
+    comm = jnp.where(has, (cnt @ sim.net.comm_cost)
+                     / jnp.maximum(total, 1.0), 0.0)
+    fallback = jnp.where(has, 0.0, worst)
+
+    host_util = (used / jnp.maximum(hosts.cap, 1e-6)).max(axis=1)
+    # host i's access link is link i (network.build_network numbering)
+    uplink = sim.net.link_util[:H]
+    cross_leaf = jnp.where(has, (total - carry.leafpeers[k])
+                           / jnp.maximum(total, 1.0), 0.0)
+    return (recency, neg_speed, worst, coloc, comm, fallback,
+            host_util, free[:, 0], free[:, 1], uplink, cross_leaf)
+
+
+def placement_features(sim: SimState, cfg: SimConfig, params: RunParams,
+                       carry: PlaceCarry, k, cand,
+                       used: jnp.ndarray) -> jnp.ndarray:
+    """The [H, NUM_ROW_FEATURES] bank view of the feature columns —
+    the introspection/debugging surface (the hot path sums the columns
+    directly, see :func:`host_row`)."""
+    return jnp.stack(_row_feature_columns(sim, cfg, params, carry, k, cand,
+                                          used), axis=1)
+
+
+def host_row(sim: SimState, cfg: SimConfig, params: RunParams,
+             pol: PolicyParams, carry: PlaceCarry, k, cand,
+             used) -> jnp.ndarray:
+    """The one scoring rule both engine paths evaluate: candidate ``k``'s
+    f32[H] preference row = weighted sum of the feature columns (lower =
+    better; argmin breaks ties toward the lowest host index).  Summed as
+    an elementwise chain rather than a [H, F] matmul — no bank
+    materialization inside the admit scan, and exactness is unaffected:
+    legacy vectors have one-hot / disjoint-support weights, so every term
+    but the live one is an exact 0.0 in any order.  Feasibility is NOT
+    baked in — the engine masks infeasible hosts against its live
+    resource counters so intra-round decisions see each other."""
+    cols = _row_feature_columns(sim, cfg, params, carry, k, cand, used)
+    w = pol.weights
+    score = cols[0] * w[W_ROW0]
+    for i in range(1, NUM_ROW_FEATURES):
+        score = score + cols[i] * w[W_ROW0 + i]
+    return score
+
+
+def update_place_carry(sim: SimState, pol: PolicyParams, carry: PlaceCarry,
+                       k, cand, hh, ok) -> PlaceCarry:
+    """Admit bookkeeping after candidate ``k`` lands on ``hh``: the pointer
+    follows the admit when ``W_RR_TRACK`` is set, and every later same-job
+    candidate's co-location column is raised (a masked column add — one
+    float add, scatter-free) so intra-round decisions see each other and
+    batched == sequential placements exactly."""
+    track = pol.weights[W_RR_TRACK] > 0
+    rr = jnp.where(ok & track, hh, carry.rr)
+    same = sim.containers.job[cand] == sim.containers.job[cand[k]]
+    hot = (jnp.arange(carry.counts.shape[1]) == hh) & ok
+    counts = jnp.where(hot[None, :] & same[:, None],
+                       carry.counts + 1.0, carry.counts)
+    # the admitted peer lands on leaf[hh]: same-job candidates gain one
+    # same-leaf peer at every host on that leaf (elementwise, exact)
+    leaf = sim.hosts.leaf
+    on_leaf = (leaf == leaf[hh]) & ok
+    leafpeers = jnp.where(on_leaf[None, :] & same[:, None],
+                          carry.leafpeers + 1.0, carry.leafpeers)
+    return PlaceCarry(rr=rr, counts=counts, leafpeers=leafpeers)
+
+
+def commit_place_carry(sched, carry: PlaceCarry):
+    """Persist the round's carry across ticks.  Only the rotating pointer
+    outlives the round; policies without ``W_RR_TRACK`` never move it, so
+    the write is an identity for them."""
+    return sched._replace(rr_pointer=carry.rr)
 
 
 # ---------------------------------------------------------------------------
-# Migration (paper §3.5 algorithm 1, DRAPS-derived)
+# Migration (paper §3.5 algorithm 1, DRAPS-derived) — weighted like
+# placement: shared overload-source rule, scored destination, mask-weight
+# trigger.
 # ---------------------------------------------------------------------------
 def _overload_source(sim: SimState, cfg: SimConfig, params: RunParams):
-    """Shared source/container selection for the migration policies.
+    """Shared source/container selection for every migrating policy.
 
     Returns (src, cont, src_c, dst_mask):
     * src: host with max over-threshold utilization on any resource (-1 none);
@@ -291,127 +352,149 @@ def _overload_source(sim: SimState, cfg: SimConfig, params: RunParams):
     return src, cont, src_c, dst_mask
 
 
+def migration_features(sim: SimState, src_c: jnp.ndarray) -> jnp.ndarray:
+    """[H, NUM_MIG_FEATURES] destination bank (``M_*`` enum, all finite):
+    host index, bottleneck ECMP-path utilization from the source
+    (``network.path_util_row``, O(H·4)), cross-leaf indicator, worst fit."""
+    H = sim.hosts.cap.shape[0]
+    idx = jnp.arange(H, dtype=jnp.float32)
+    putil = network.path_util_row(sim.net, src_c)              # f32[H]
+    cross = (sim.hosts.leaf != sim.hosts.leaf[src_c]).astype(jnp.float32)
+    return jnp.stack([idx, putil, cross,
+                      _worst_fit_row(sim, sim.hosts.used)], axis=1)
+
+
 def _migration_pair(src, cont, dst):
     ok = (src >= 0) & (cont >= 0) & (dst >= 0)
     return jnp.where(ok, cont, -1), jnp.where(ok, dst, -1)
 
 
-def _migrate_none(sim: SimState, cfg: SimConfig, params: RunParams):
-    """No-migration branch: uniform (container, dst) = (-1, -1)."""
+def migrate(sim: SimState, cfg: SimConfig, params: RunParams,
+            pol: PolicyParams):
+    """(container | -1, dst | -1) for this decision step.
+
+    ``W_MIG_ENABLE`` is the trigger mask weight: 0 returns the uniform
+    (-1, -1) no-op the engine's where-masks turn into an identity — the
+    exact behavior of the old no-op branch, without a branch.
+    """
+    w = pol.weights
+    src, cont, src_c, dst_mask = _overload_source(sim, cfg, params)
+    score = migration_features(sim, src_c) @ w[W_MIG0:W_MIG0
+                                               + NUM_MIG_FEATURES]
+    dst = _first_true(score, dst_mask)
+    cont_out, dst_out = _migration_pair(src, cont, dst)
+    enabled = w[W_MIG_ENABLE] > 0
     minus1 = jnp.full((), -1, jnp.int32)
-    return minus1, minus1
+    return (jnp.where(enabled, cont_out, minus1),
+            jnp.where(enabled, dst_out, minus1))
 
 
 def overload_migrate(sim: SimState, cfg: SimConfig,
                      params: RunParams | None = None):
     """Relieve the most overloaded host; first-fit destination.
-
-    Returns (-1, -1) when no (source, container, destination) triple exists.
-    """
+    (= the generic :func:`migrate` under ``overload_migrate``'s weights.)"""
     params = cfg.run_params() if params is None else params
-    src, cont, src_c, dst_mask = _overload_source(sim, cfg, params)
-    H = dst_mask.shape[0]
-    dst = _first_true(jnp.arange(H, dtype=jnp.float32), dst_mask)
-    return _migration_pair(src, cont, dst)
+    return migrate(sim, cfg, params, get_policy("overload_migrate"))
 
 
 def congestion_migrate(sim: SimState, cfg: SimConfig,
                        params: RunParams | None = None):
     """Congestion-aware variant: same source/container selection, but the
     destination minimizes the bottleneck link utilization of the ECMP path
-    the migration flow will traverse (index tie-break) — instead of blindly
-    taking the first feasible idle host across a hot spine."""
+    the migration flow will traverse (index tie-break).
+    (= the generic :func:`migrate` under ``netaware``'s weights.)"""
     params = cfg.run_params() if params is None else params
-    src, cont, src_c, dst_mask = _overload_source(sim, cfg, params)
-    path_util = network.path_util_row(sim.net, src_c)          # f32[H]
-    dst = _first_true(path_util, dst_mask)
-    return _migration_pair(src, cont, dst)
+    return migrate(sim, cfg, params, get_policy("netaware"))
 
 
 # ---------------------------------------------------------------------------
 # Registry (paper: "easy extensibility of container scheduling algorithms")
+# — a name -> canonical weight vector table.  Nothing here is baked into
+# compiled programs: registration after a compiled run is fine, the new
+# policy rides the existing executable as data.
 # ---------------------------------------------------------------------------
-@dataclasses.dataclass(frozen=True)
-class PolicyDef:
-    """The *code* half of a scheduling algorithm: one registered branch of
-    the ``lax.switch`` dispatch tables.
+_REGISTRY: dict[str, np.ndarray] = {}
 
-    ``row`` is mandatory; the carry hooks default to no-ops (static scores)
-    and ``migrate`` to the no-op branch.  ``weights`` seeds
-    ``PolicyParams.weights`` — the cost-model-driven knobs a sweep (or a
-    future learned-weight search) varies without recompiling.
+
+def weight_index(name: str) -> int:
+    """Index of a named weight slot, failing loudly on unknown names — the
+    ONE lookup every by-name surface (:func:`weight_vector`,
+    :func:`get_policy` dict overrides, ``tune.sample_weights``) routes
+    through."""
+    try:
+        return WEIGHT_NAMES.index(name)
+    except ValueError:
+        raise KeyError(f"unknown weight {name!r}; known: "
+                       f"{list(WEIGHT_NAMES)}") from None
+
+
+def weight_vector(**overrides) -> np.ndarray:
+    """Build a canonical-length weight vector by name.
+
+    Starts from the neutral defaults every built-in shares — FIFO selection
+    (``sel_submit=1``) and the comm-cost model weights
+    (``util``/``cross_leaf``, consumed by the ``NetState.comm_cost``
+    refresh) — with every scoring weight at zero; keyword overrides use the
+    ``types.WEIGHT_NAMES`` names.
     """
-
-    name: str
-    row: Callable                    # (sim, cfg, params, w, carry, k, cand,
-    #                                   used) -> f32[H]
-    init: Callable = _init_static    # (sim, cand) -> PlaceCarry
-    update: Callable = _update_noop  # (sim, carry, k, cand, hh, ok) -> carry
-    select: Callable = select_key_fifo  # (sim) -> i32[C], INT_BIG = skip
-    migrate: Callable = _migrate_none   # (sim, cfg, params) -> (cont, dst)
-    weights: tuple[float, ...] = DEFAULT_WEIGHTS
-
-    def __post_init__(self):
-        if len(self.weights) != NUM_POLICY_WEIGHTS:
-            raise ValueError(
-                f"policy {self.name!r}: weights must have "
-                f"{NUM_POLICY_WEIGHTS} entries, got {len(self.weights)}")
+    w = np.zeros(NUM_POLICY_WEIGHTS, np.float32)
+    w[weight_index("util")] = network.DEFAULT_UTIL_WEIGHT
+    w[weight_index("cross_leaf")] = network.DEFAULT_CROSS_LEAF_MS
+    w[weight_index("sel_submit")] = 1.0
+    for name, val in overrides.items():
+        w[weight_index(name)] = val
+    return w
 
 
-_REGISTRY: dict[str, int] = {}   # name -> branch index (registration order)
-_DEFS: list[PolicyDef] = []
-_REGISTRY_VERSION = 0
+def validate_weights(w, context: str = "") -> None:
+    """Loud canonical-length check.  A short vector would silently clamp
+    jit-mode gathers (``weights[W_MIG_ENABLE]`` -> index 0) and a ragged
+    batch would break stacking — reject both up front."""
+    shape = jnp.shape(w)
+    if len(shape) == 0 or shape[-1] != NUM_POLICY_WEIGHTS:
+        raise ValueError(
+            f"{context}weights must have the canonical length "
+            f"{NUM_POLICY_WEIGHTS} (types.WEIGHT_NAMES), got shape {shape}")
 
 
-def registry_version() -> int:
-    """Monotone counter bumped by every (re-)registration.  The engine keys
-    its jit caches on it: the branch tables are baked into compiled switch
-    dispatch, so a registration AFTER a compiled run must invalidate that
-    cache — otherwise ``lax.switch`` would clamp the new branch index into
-    the stale table and silently run the wrong policy."""
-    return _REGISTRY_VERSION
-
-
-def register(pdef: PolicyDef) -> PolicyDef:
-    """Add (or replace, by name) a scoring branch.  The branch tables are
-    read at trace time; :func:`registry_version` makes sure previously
-    compiled runs are re-traced after a new registration."""
-    global _REGISTRY_VERSION
-    if pdef.name in _REGISTRY:
-        _DEFS[_REGISTRY[pdef.name]] = pdef
-    else:
-        _REGISTRY[pdef.name] = len(_DEFS)
-        _DEFS.append(pdef)
-    _REGISTRY_VERSION += 1
-    return pdef
+def register(name: str, weights) -> np.ndarray:
+    """Add (or replace, by name) a policy: a weight vector, or a dict of
+    by-name overrides passed to :func:`weight_vector`.  Pure data — no
+    compiled program is invalidated by a registration."""
+    if isinstance(weights, dict):
+        weights = weight_vector(**weights)
+    # np.array (not asarray): the registry must own its vector — storing
+    # the caller's array by reference would let later in-place mutation
+    # silently rewrite a registered policy
+    w = np.array(weights, np.float32)
+    validate_weights(w, f"policy {name!r}: ")
+    _REGISTRY[name] = w
+    return w
 
 
 def get_policy(name: str, weights=None) -> PolicyParams:
-    """The data handle for a registered policy: branch id + weight vector.
+    """The data handle for a registered policy.
 
-    ``weights`` overrides the branch's default weight vector — policy
-    variants (e.g. a heavier cross-leaf penalty) are new *data*, not new
-    code, so they share the compiled program.
+    ``weights`` overrides the registered vector — a full canonical-length
+    vector, or a dict of by-name deltas (e.g. ``{"cross_leaf": 0.5}`` for
+    a heavier spine penalty).  Variants are new *data*, not new code, so
+    they share every compiled program.
     """
     try:
-        idx = _REGISTRY[name]
+        base = _REGISTRY[name]
     except KeyError:
         raise KeyError(
             f"unknown policy {name!r}; known: {sorted(_REGISTRY)}") from None
-    w = _DEFS[idx].weights if weights is None else tuple(weights)
-    if len(w) != NUM_POLICY_WEIGHTS:
-        # a short vector would be silently clamped by jit-mode gathers
-        # (weights[W_CROSS_LEAF] -> index 0), a long one breaks stacking
-        raise ValueError(
-            f"policy {name!r}: weights must have {NUM_POLICY_WEIGHTS} "
-            f"entries, got {len(w)}")
-    return PolicyParams(policy_id=jnp.asarray(idx, jnp.int32),
-                        weights=jnp.asarray(w, jnp.float32))
-
-
-def policy_name(pol: PolicyParams) -> str:
-    """Registered name for a (concrete, unbatched) PolicyParams."""
-    return _DEFS[int(pol.policy_id)].name
+    if weights is None:
+        w = base
+    elif isinstance(weights, dict):
+        w = base.copy()
+        for k, v in weights.items():
+            w[weight_index(k)] = v
+    else:
+        w = np.asarray(weights, np.float32)
+        validate_weights(w, f"policy {name!r}: ")
+    return PolicyParams(weights=jnp.asarray(w, jnp.float32))
 
 
 def list_policies() -> list[str]:
@@ -419,87 +502,26 @@ def list_policies() -> list[str]:
 
 
 # ---------------------------------------------------------------------------
-# Switch-dispatched hooks — the ONLY policy surface the engine consumes.
-# Branch index is data (PolicyParams.policy_id), so under a policy-batched
-# vmap every branch is evaluated and selected per cell; on an unbatched run
-# only the selected branch executes.
+# The six built-ins (paper §3.5 + the PR 2 network-aware pair) as weight
+# vectors.  Each is one-hot (or disjoint-support) over features computed
+# exactly as the former branches computed them, so every vector reproduces
+# its PR 4 switch-dispatched run bit-for-bit
+# (tests/test_policy_equivalence.py).
 # ---------------------------------------------------------------------------
-def _dedup_switch(idx: jnp.ndarray, hooks, call, *args):
-    """``lax.switch`` over the UNIQUE hook functions, with the branch index
-    remapped through a constant table.
-
-    Registered policies share hook implementations heavily (every built-in
-    uses the FIFO ``select``; four share the static carry init).  Under a
-    policy-batched ``vmap`` the switch evaluates EVERY branch and selects
-    per cell, so dispatching over the raw per-policy tables would run the
-    duplicated hooks once per registration instead of once per distinct
-    implementation.  Dedup also collapses the common all-policies-share-it
-    case to a direct call — no switch at all.  ``call`` adapts a hook to
-    the dispatch arguments (closure over trace-time statics like cfg).
-    """
-    pos: dict = {}                      # hook -> index into uniq
-    remap = [pos.setdefault(h, len(pos)) for h in hooks]
-    uniq = list(pos)                    # insertion-ordered distinct hooks
-    if len(uniq) == 1:
-        return call(uniq[0])(*args)
-    branches = tuple(call(h) for h in uniq)
-    if remap == list(range(len(remap))):
-        return jax.lax.switch(idx, branches, *args)
-    return jax.lax.switch(jnp.asarray(remap, jnp.int32)[idx], branches,
-                          *args)
-
-
-def select_key(sim: SimState, pol: PolicyParams) -> jnp.ndarray:
-    return _dedup_switch(pol.policy_id, [d.select for d in _DEFS],
-                         lambda h: h, sim)
-
-
-def init_place_carry(sim: SimState, cand: jnp.ndarray,
-                     pol: PolicyParams) -> PlaceCarry:
-    return _dedup_switch(pol.policy_id, [d.init for d in _DEFS],
-                         lambda h: h, sim, cand)
-
-
-def host_row(sim: SimState, cfg: SimConfig, params: RunParams,
-             pol: PolicyParams, carry: PlaceCarry, k, cand,
-             used) -> jnp.ndarray:
-    """The one scoring rule both engine paths evaluate: the f32[H]
-    preference row for candidate ``k`` given the round's live state."""
-    return _dedup_switch(
-        pol.policy_id, [d.row for d in _DEFS],
-        lambda h: (lambda s, p, w, cr, kk, cd, us:
-                   h(s, cfg, p, w, cr, kk, cd, us)),
-        sim, params, pol.weights, carry, k, cand, used)
-
-
-def update_place_carry(sim: SimState, pol: PolicyParams, carry: PlaceCarry,
-                       k, cand, hh, ok) -> PlaceCarry:
-    return _dedup_switch(pol.policy_id, [d.update for d in _DEFS],
-                         lambda h: h, sim, carry, k, cand, hh, ok)
-
-
-def commit_place_carry(sched, carry: PlaceCarry):
-    """Persist the round's carry across ticks.  Only the rotating pointer
-    outlives the round; non-Round branches never move it, so the write is
-    an identity for them."""
-    return sched._replace(rr_pointer=carry.rr)
-
-
-def migrate(sim: SimState, cfg: SimConfig, params: RunParams,
-            pol: PolicyParams):
-    return _dedup_switch(pol.policy_id, [d.migrate for d in _DEFS],
-                         lambda h: (lambda s, p: h(s, cfg, p)), sim, params)
-
-
-# ---------------------------------------------------------------------------
-# The six registered branches (paper §3.5 + the PR 2 network-aware pair)
-# ---------------------------------------------------------------------------
-register(PolicyDef("firstfit", _row_firstfit))
-register(PolicyDef("round", _row_round, update=_update_round))
-register(PolicyDef("performance_first", _row_performance_first))
-register(PolicyDef("jobgroup", _row_jobgroup, init=_init_coloc,
-                   update=_update_coloc))
-register(PolicyDef("netaware", _row_netaware, init=_init_coloc,
-                   update=_update_coloc, migrate=congestion_migrate))
-register(PolicyDef("overload_migrate", _row_firstfit,
-                   migrate=overload_migrate))
+# FirstFit [36]: lowest-numbered feasible host (recency with rr pinned -1).
+register("firstfit", dict(row_recency=1.0))
+# Round (paper §3.5): first feasible host after the last used one.
+register("round", dict(row_recency=1.0, rr_track=1.0))
+# PerformanceFirst (DRAPS-derived): fastest host for the primary resource.
+register("performance_first", dict(row_neg_speed=1.0))
+# JobGroup (CA-WFD-derived): most same-job containers; worst fit while the
+# job has none deployed.
+register("jobgroup", dict(row_coloc=1.0, row_fallback_worst=1.0))
+# NetAware: mean expected comm cost to deployed same-job peers under the
+# current fabric state (NetState.comm_cost), worst-fit fallback;
+# congestion-aware migration destination.
+register("netaware", dict(row_comm=1.0, row_fallback_worst=1.0,
+                          mig_enable=1.0, mig_path_util=1.0))
+# FirstFit placement + DRAPS overload migration, first-fit destination.
+register("overload_migrate", dict(row_recency=1.0, mig_enable=1.0,
+                                  mig_idx=1.0))

@@ -105,27 +105,89 @@ class NetState(NamedTuple):
 
 
 class PolicyParams(NamedTuple):
-    """The *data* half of a scheduling policy (the code half is the branch
-    table in ``repro.core.scheduling``).
+    """A scheduling policy IS its weight vector.
 
-    What distinguishes one policy from another in a compiled run is pure
-    data: a branch index dispatched with ``lax.switch`` plus a weight vector
-    consumed by the cost-model-driven scores.  Because both leaves are
-    arrays, a *batch* of policies is just a ``PolicyParams`` with a leading
-    axis — ``vmap`` sweeps every registered algorithm inside one XLA
-    program instead of recompiling per policy.
+    Since the branch-free scoring engine there is no code half left to
+    dispatch: the engine computes ONE shared feature bank (selection
+    features per container, placement features per candidate x host,
+    migration-destination features per host) and every decision is a
+    weighted sum ``features @ weights``.  What distinguishes FirstFit from
+    NetAware is which entries of this vector are non-zero — so a *batch*
+    of policies (or a learned-weight search, ``repro.launch.tune``) is a
+    ``PolicyParams`` with a leading axis through one compiled program, and
+    registering a new policy never retraces anything.
     """
 
-    policy_id: jnp.ndarray   # i32[]  branch index into the registry
     weights: jnp.ndarray     # f32[NUM_POLICY_WEIGHTS]
 
 
-# PolicyParams.weights layout — the first entries are the cost-model-driven
-# comm-cost weights the netaware score consumes (via NetState.comm_cost,
-# re-weighted at every delay refresh).
+# ---------------------------------------------------------------------------
+# PolicyParams.weights layout.  ONE canonical fixed-length vector; the
+# blocks below are index-aligned with the feature banks scheduling.py
+# computes.  All features are finite by construction, so a zero weight
+# contributes an exact 0.0 and one-hot legacy vectors reproduce the old
+# per-policy scores bit-for-bit.
+# ---------------------------------------------------------------------------
+# comm-cost model weights, consumed by the NetState.comm_cost refresh
+# (network.pairwise_comm_cost) at every delay-matrix update:
 W_UTIL = 0        # ms-equivalent per unit of bottleneck ECMP-path utilization
 W_CROSS_LEAF = 1  # ms penalty for paths that transit the spine
-NUM_POLICY_WEIGHTS = 2
+
+# selection-key weights: priority[c] = sum_i w_i * feature_i(c), ranked by
+# scheduling.rank_key (lower priority value = scheduled earlier):
+W_SEL_SUBMIT = 2      # weight on submit_t  (1.0 = the paper's FIFO)
+W_SEL_DURATION = 3    # weight on duration  (positive = shortest-job-first)
+
+# placement-row weights: score[h] = row_features[h] @ weights[ROW_SLICE],
+# lower = better.  Index-aligned with the F_* feature enum below
+# (weight index = W_ROW0 + F_*).
+W_ROW0 = 4
+F_RECENCY = 0         # mod-distance past the rotating pointer; rr = -1
+#                       (never tracked) makes this the host index = FirstFit
+F_NEG_SPEED = 1       # -speed[h, ctype[cand]]           (PerformanceFirst)
+F_WORST_FIT = 2       # -(free/cap).sum over resources   (worst fit)
+F_COLOC = 3           # -same-job count per host, 0 while job has no peers
+F_COMM = 4            # mean comm_cost to deployed peers, 0 while no peers
+F_FALLBACK_WORST = 5  # worst-fit gated to the NO-peers case (the JobGroup/
+#                       NetAware fallback; disjoint support with F_COLOC/F_COMM)
+F_HOST_UTIL = 6       # bottleneck-resource utilization of the host
+F_FREE_CPU = 7        # normalized free CPU
+F_FREE_MEM = 8        # normalized free memory
+F_UPLINK_UTIL = 9     # utilization of the host's access link (first hop)
+F_CROSS_LEAF = 10     # fraction of deployed same-job peers on another leaf
+NUM_ROW_FEATURES = 11
+
+# carry-behavior weights:
+W_RR_TRACK = W_ROW0 + NUM_ROW_FEATURES   # > 0: rotating pointer follows
+#                                          admits (Round); 0: rr stays put
+
+# migration weights: the trigger is the mask weight (> 0 enables the
+# overload-source rule; 0 reproduces the old no-op branch exactly), the
+# destination is scored dst_features @ weights[MIG_SLICE], lower = better,
+# index-aligned with the M_* enum (weight index = W_MIG0 + M_*).
+W_MIG_ENABLE = W_RR_TRACK + 1
+W_MIG0 = W_MIG_ENABLE + 1
+M_IDX = 0             # host index                  (first-fit destination)
+M_PATH_UTIL = 1       # bottleneck ECMP-path utilization from the source
+M_CROSS_LEAF = 2      # destination sits on another leaf than the source
+M_WORST_FIT = 3       # -(free/cap).sum — prefer emptier destinations
+NUM_MIG_FEATURES = 4
+
+NUM_POLICY_WEIGHTS = W_MIG0 + NUM_MIG_FEATURES
+
+# index-aligned names for the whole vector — the by-name construction /
+# reporting surface (scheduling.weight_vector, report.tune_table)
+WEIGHT_NAMES: tuple = (
+    "util", "cross_leaf",
+    "sel_submit", "sel_duration",
+    "row_recency", "row_neg_speed", "row_worst_fit", "row_coloc",
+    "row_comm", "row_fallback_worst", "row_host_util", "row_free_cpu",
+    "row_free_mem", "row_uplink_util", "row_cross_leaf",
+    "rr_track",
+    "mig_enable", "mig_idx", "mig_path_util", "mig_cross_leaf",
+    "mig_worst_fit",
+)
+assert len(WEIGHT_NAMES) == NUM_POLICY_WEIGHTS
 
 
 class RunParams(NamedTuple):

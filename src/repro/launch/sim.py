@@ -6,9 +6,16 @@
     PYTHONPATH=src python -m repro.launch.sim --policy all --hosts 500 \\
         --containers 3000 --horizon 40 --out reports.json
 
-With policies as data, ``--policy all`` is six runs of ONE compiled program
-over ONE prebuilt state — no per-policy rebuild, no per-policy compile.
-The full policy x scenario x seed grid lives in ``repro.launch.sweep``.
+With policies as weight vectors, ``--policy all`` is six runs of ONE
+compiled program over ONE prebuilt state — no per-policy rebuild, no
+per-policy compile — and ``--weights name=value,...`` runs a by-name
+weight variant (``types.WEIGHT_NAMES``) through the same executable:
+
+    PYTHONPATH=src python -m repro.launch.sim --policy netaware \\
+        --weights cross_leaf=0.5,row_coloc=0.3
+
+The full policy x scenario x seed grid lives in ``repro.launch.sweep``;
+weight *search* lives in ``repro.launch.tune``.
 """
 from __future__ import annotations
 
@@ -47,9 +54,25 @@ def build_once(cfg: SimConfig, bw=None, loss=None, seed=0, workload="paper",
     return spec, sim0, params
 
 
-def run_one(policy_name: str, cfg: SimConfig, spec, sim0, params, csv=None):
+def parse_weights(arg: str | None) -> dict[str, float] | None:
+    """``"cross_leaf=0.5,row_coloc=0.3"`` -> by-name override dict
+    (validated against ``types.WEIGHT_NAMES`` by ``get_policy``)."""
+    if not arg:
+        return None
+    out = {}
+    for item in arg.split(","):
+        name, _, val = item.partition("=")
+        if not _:
+            raise ValueError(f"--weights items must be name=value, "
+                             f"got {item!r}")
+        out[name.strip()] = float(val)
+    return out
+
+
+def run_one(policy_name: str, cfg: SimConfig, spec, sim0, params, csv=None,
+            weights=None):
     t0 = time.time()
-    final, metrics = run_sim(sim0, cfg, get_policy(policy_name),
+    final, metrics = run_sim(sim0, cfg, get_policy(policy_name, weights),
                              spec.n_hosts, spec.n_nodes, cfg.horizon,
                              params=params)
     final.t.block_until_ready()
@@ -82,7 +105,15 @@ def main() -> None:
     ap.add_argument("--sequential", action="store_true",
                     help="run the sequential reference placement path "
                          "instead of the batched round")
+    ap.add_argument("--weights", default=None,
+                    help="by-name weight overrides for the chosen policy, "
+                         "e.g. 'cross_leaf=0.5,row_coloc=0.3' "
+                         "(types.WEIGHT_NAMES; not valid with --policy all)")
     args = ap.parse_args()
+
+    weights = parse_weights(args.weights)
+    if weights and args.policy == "all":
+        raise SystemExit("--weights needs a single --policy to override")
 
     wl = ({} if args.containers is None else
           dict(n_containers=args.containers, n_tasks=args.containers,
@@ -95,7 +126,8 @@ def main() -> None:
     policies = list_policies() if args.policy == "all" else [args.policy]
     reports = []
     for p in policies:
-        rep = json_clean(run_one(p, cfg, spec, sim0, params, csv=args.csv))
+        rep = json_clean(run_one(p, cfg, spec, sim0, params, csv=args.csv,
+                                 weights=weights))
         reports.append(rep)
         print(json.dumps(rep, indent=None, sort_keys=True))
     if args.out:

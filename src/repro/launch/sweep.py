@@ -1,14 +1,17 @@
 """Sweep driver: policy x scenario x seed in ONE compiled program.
 
 The paper's headline use case is comparing scheduling strategies under
-varying network conditions (Figs 4-10).  With policies and runtime
-parameters as data (``PolicyParams``/``RunParams``), the whole evaluation
-grid is three nested ``vmap``s over one ``engine.simulate`` trace, jitted
-exactly once:
+varying network conditions (Figs 4-10).  With policies as weight vectors
+and runtime parameters as data (``PolicyParams``/``RunParams``), the whole
+evaluation grid is one ``vmap`` over ONE flattened batch axis of P*S*N
+cells, jitted exactly once — and that single axis is sharded across every
+available device with a ``NamedSharding`` (each device integrates its
+slice of cells independently; there is no cross-cell communication):
 
-    policies [P]  --vmap--+
-    scenarios [S] --vmap--+--> jax.jit(...)  ->  finals/metrics [P, S, N]
-    seeds     [N] --vmap--+
+    policies [P] --+
+    scenarios [S] --+--> flatten [P*S*N] --vmap--> jit --> [P, S, N]
+    seeds     [N] --+         |
+                              +-- NamedSharding over the 'grid' mesh axis
 
     PYTHONPATH=src python -m repro.launch.sweep --policies all \\
         --seeds 2 --horizon 120 --table avg_runtime --out sweep.json
@@ -24,23 +27,70 @@ from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.core import (SimConfig, get_policy, list_policies,
                         sweep_summaries, sweep_table)
-from repro.core import scheduling
 from repro.core.engine import simulate
 from repro.core.scenario import (ScenarioSpec, build_scenarios,
                                  default_scenarios)
+from repro.core.scheduling import validate_weights
 from repro.core.types import PolicyParams, RunParams, SimState, TickMetrics
 
+# SimState leaves that are TOPOLOGY, not state: identical across every
+# sweep cell by construction (build_scenarios builds one network and every
+# host mix assigns leaves as arange % n_leaf; a ScenarioSpec cannot vary
+# topology).  They stay UNBATCHED through the grid vmap (in_axes=None):
+# the delay-refresh and ECMP-path gathers then keep unbatched *indices*,
+# which XLA:CPU lowers on its fast path — batching the index operand of a
+# gather was measured at 2.6x per cell on the periodic refresh alone.
+STATIC_TOPOLOGY_LEAVES = frozenset({
+    ("hosts", "leaf"),
+    ("net", "link_u"), ("net", "link_v"),
+    ("net", "path_links"), ("net", "path_nlinks"),
+})
 
-def stack_policies(names: Sequence[str]) -> PolicyParams:
-    """[P]-batched PolicyParams for a list of registered policy names."""
-    pols = [get_policy(n) for n in names]
+
+def _leaf_path_names(path) -> tuple:
+    return tuple(p.name for p in path if hasattr(p, "name"))
+
+
+def _is_static_leaf(path) -> bool:
+    names = _leaf_path_names(path)
+    return any(names[-len(s):] == s for s in STATIC_TOPOLOGY_LEAVES)
+
+
+def stack_policies(names_or_params: Sequence) -> PolicyParams:
+    """[P]-batched PolicyParams from registered names (or ready-made
+    ``PolicyParams``).  Validates every vector against the canonical weight
+    length up front — a ragged batch would fail deep inside a trace."""
+    pols = [p if isinstance(p, PolicyParams) else get_policy(p)
+            for p in names_or_params]
+    for i, p in enumerate(pols):
+        validate_weights(p.weights, f"stack_policies entry {i}: ")
     return jax.tree.map(lambda *xs: jnp.stack(xs), *pols)
 
 
-def make_sweep_fn(cfg: SimConfig, n_hosts: int, n_nodes: int, horizon: int):
+def grid_mesh(devices=None) -> Mesh | None:
+    """1-axis device mesh for the flattened sweep batch.
+
+    ``devices``: None = all local devices, an int = that many, or an
+    explicit device sequence.  Returns None for a single device — the
+    unsharded sweep needs no mesh at all.
+    """
+    if devices is None:
+        devices = jax.devices()
+    elif isinstance(devices, int):
+        devices = jax.devices()[:devices]
+    devices = list(devices)
+    if len(devices) <= 1:
+        return None
+    return Mesh(np.asarray(devices), ("grid",))
+
+
+def make_sweep_fn(cfg: SimConfig, n_hosts: int, n_nodes: int, horizon: int,
+                  devices=None):
     """The compiled sweep: (sims [S,N], policies [P], params [S]) ->
     (finals, metrics) with [P, S, N] leading axes.
 
@@ -49,40 +99,80 @@ def make_sweep_fn(cfg: SimConfig, n_hosts: int, n_nodes: int, horizon: int):
     costs exactly one XLA compilation (asserted in ``tests/test_sweep.py``
     via the jit cache-miss counter).
 
-    ALL THREE axes ride ``vmap`` — one data-parallel batch of P*S*N cells.
-    The scatter-free tick made this possible (docs/sweeps.md): the PR 3
-    tick's state-update scatters hit XLA:CPU's slow *batched*-scatter
-    lowering (~1.6x per cell measured), so only the seed axis vmapped and
-    policies/scenarios paid a serializing ``lax.map``.  With the updates as
-    where-masks and segment reductions, batching the tick is ordinary
-    elementwise work.  Under a policy-batched ``vmap`` the ``lax.switch``
-    hook dispatch evaluates every registered branch and selects per cell —
-    that is the price of one compiled program over the policy axis, and it
-    is bounded by the most expensive branch (measured in the
-    ``vmap_cell_tax`` bench entry, BENCH_engine.json).
+    The grid rides ONE ``vmap``: the three axes are broadcast and
+    flattened to a single [P*S*N] batch inside the jitted function
+    (branch-free scoring makes the policy axis pure data like the others —
+    no ``lax.switch`` evaluating every branch per cell).  With more than
+    one device the flattened axis carries a ``NamedSharding`` over the
+    1-axis ``grid`` mesh, padded to a device multiple by repeating cells
+    (the pad cells are sliced off before reshaping back to [P, S, N]);
+    cells are independent, so sharded == unsharded bit-for-bit
+    (``tests/test_sweep_sharded.py``).
     """
+    mesh = grid_mesh(devices)
+    n_dev = 1 if mesh is None else mesh.devices.size
+    jtu = jax.tree_util
+
     def cell(sim: SimState, pol: PolicyParams, rp: RunParams):
         return simulate(sim, cfg, pol, n_hosts, n_nodes, horizon, rp)
 
-    seeds_f = jax.vmap(cell, in_axes=(0, None, None))      # seeds     [N]
-    scen_f = jax.vmap(seeds_f, in_axes=(0, None, 0))       # scenarios [S]
-    grid = jax.vmap(scen_f, in_axes=(None, 0, None))       # policies  [P]
-    jitted = jax.jit(grid)
-    # the registered branch tables are baked into the compiled grid; a
-    # policy registered after this point would be silently clamped onto the
-    # old last branch by lax.switch — fail loudly instead (run_sim keys its
-    # jit cache the same way, via scheduling.registry_version()).
-    version = scheduling.registry_version()
+    def grid(sims, pols, rps):
+        P = pols.weights.shape[0]
+        S, N = sims.t.shape
+        B = P * S * N
 
-    def checked(sims, pols, rps):
-        if scheduling.registry_version() != version:
-            raise RuntimeError(
-                "policy registry changed since make_sweep_fn(); rebuild the "
-                "sweep function to compile the new branch table in")
+        def flat(x, bshape):                     # bshape -> [B, ...]
+            shape = (P, S, N) + x.shape[len(bshape):]
+            x = x.reshape(tuple(d if ax in bshape else 1
+                                for ax, d in zip("PSN", (P, S, N)))
+                          + x.shape[len(bshape):])
+            return jnp.broadcast_to(x, shape).reshape((B,) + shape[3:])
+
+        args = (jax.tree.map(lambda x: flat(x, "SN"), sims),
+                jax.tree.map(lambda x: flat(x, "P"), pols),
+                jax.tree.map(lambda x: flat(x, "S"), rps))
+        pad = (-B) % n_dev
+        if pad:                                  # repeat cells round-robin
+            idx = jnp.arange(B + pad) % B
+            args = jax.tree.map(lambda x: x[idx], args)
+        if mesh is not None:
+            args = jax.lax.with_sharding_constraint(
+                args, NamedSharding(mesh, PartitionSpec("grid")))
+        # de-batch the topology leaves (every cell carries the same
+        # tables; uniformity is checked host-side in fn below) and build
+        # the matching in_axes tree: 0 everywhere, None at the statics.
+        flat_sims, treedef = jtu.tree_flatten_with_path(args[0])
+        sim_arg = jtu.tree_unflatten(
+            treedef, [x[0] if _is_static_leaf(p) else x
+                      for p, x in flat_sims])
+        sim_axes = jtu.tree_unflatten(
+            treedef, [None if _is_static_leaf(p) else 0
+                      for p, x in flat_sims])
+        out = jax.vmap(cell, in_axes=(sim_axes, 0, 0))(
+            sim_arg, args[1], args[2])
+        if pad:
+            out = jax.tree.map(lambda x: x[:B], out)
+        return jax.tree.map(
+            lambda x: x.reshape((P, S, N) + x.shape[1:]), out)
+
+    jitted = jax.jit(grid)
+
+    def fn(sims, pols, rps):
+        for p, x in jtu.tree_flatten_with_path(sims)[0]:
+            if _is_static_leaf(p):
+                x = np.asarray(x)
+                ref = x.reshape((-1,) + x.shape[2:])[0]
+                if not (x == ref).all():
+                    names = ".".join(_leaf_path_names(p))
+                    raise ValueError(
+                        f"sweep cells disagree on topology leaf {names!r}; "
+                        "all scenarios of one grid must share the network "
+                        "topology (build_scenarios builds exactly one)")
         return jitted(sims, pols, rps)
 
-    checked._cache_size = jitted._cache_size
-    return checked
+    fn._cache_size = jitted._cache_size
+    fn.n_devices = n_dev
+    return fn
 
 
 @dataclasses.dataclass
@@ -94,6 +184,7 @@ class SweepResult:
     metrics: TickMetrics      # [P, S, N, T, ...]
     wall_s: float
     compile_cache_misses: int  # jit cache entries the sweep call created
+    n_devices: int = 1         # devices the flattened grid axis spans
     _rows: list | None = dataclasses.field(default=None, repr=False)
 
     def summaries(self) -> list[dict[str, Any]]:
@@ -111,8 +202,9 @@ def run_sweep(policies: Sequence[str] | None = None,
               scenarios: Sequence[ScenarioSpec] | None = None,
               seeds: Sequence[int] = (0,), cfg: SimConfig | None = None,
               n_hosts: int = 20, n_spine: int = 2,
-              n_leaf: int = 4) -> SweepResult:
-    """Build the grid and run it as one compiled call."""
+              n_leaf: int = 4, devices=None) -> SweepResult:
+    """Build the grid and run it as one compiled call (sharded over
+    ``devices`` — default: every local device)."""
     policies = list(policies if policies is not None else list_policies())
     scenarios = list(scenarios if scenarios is not None
                      else default_scenarios())
@@ -121,20 +213,22 @@ def run_sweep(policies: Sequence[str] | None = None,
                                           n_spine=n_spine, n_leaf=n_leaf,
                                           seeds=seeds)
     pol = stack_policies(policies)
-    fn = make_sweep_fn(cfg, net_spec.n_hosts, net_spec.n_nodes, cfg.horizon)
+    fn = make_sweep_fn(cfg, net_spec.n_hosts, net_spec.n_nodes, cfg.horizon,
+                       devices=devices)
     t0 = time.time()
     finals, metrics = fn(sims, pol, rps)
     jax.tree.leaves(finals)[0].block_until_ready()
     return SweepResult(policies=policies, scenarios=scenarios,
                        seeds=tuple(seeds), finals=finals, metrics=metrics,
                        wall_s=round(time.time() - t0, 2),
-                       compile_cache_misses=fn._cache_size())
+                       compile_cache_misses=fn._cache_size(),
+                       n_devices=fn.n_devices)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "n_hosts", "n_nodes",
-                                             "horizon", "registry"))
+                                             "horizon"))
 def _run_sim_vmapped_jit(sims, cfg, policy, params, n_hosts, n_nodes,
-                         horizon, registry):
+                         horizon):
     return jax.vmap(lambda s: simulate(s, cfg, policy, n_hosts, n_nodes,
                                        horizon, params))(sims)
 
@@ -145,11 +239,10 @@ def run_sim_vmapped(sims: SimState, cfg: SimConfig, policy: PolicyParams,
     """Seed-batched single-policy run (leading axis on every SimState leaf)
     — the degenerate 1x1xN sweep, kept as a convenience for benchmarks.
     Jitted at module level so repeat calls hit the warm cache (keyed on
-    config/shapes + the policy-registry version, like ``run_sim``)."""
+    config/shapes, like ``run_sim``; policies are data, never cache keys)."""
     params = cfg.run_params() if params is None else params
     return _run_sim_vmapped_jit(sims, cfg, policy, params, n_hosts, n_nodes,
-                                horizon,
-                                registry=scheduling.registry_version())
+                                horizon)
 
 
 def main() -> None:
@@ -161,6 +254,9 @@ def main() -> None:
                     help="number of seeds (0..n-1) per cell")
     ap.add_argument("--horizon", type=int, default=120)
     ap.add_argument("--hosts", type=int, default=20)
+    ap.add_argument("--devices", type=int, default=None,
+                    help="shard the flattened grid over this many devices "
+                         "(default: all local devices)")
     ap.add_argument("--table", default="avg_runtime",
                     help="summary metric for the grouped table")
     ap.add_argument("--out", default=None,
@@ -173,11 +269,12 @@ def main() -> None:
     n_leaf = max(4, args.hosts // 5)
     res = run_sweep(policies=policies, seeds=range(args.seeds), cfg=cfg,
                     n_hosts=args.hosts, n_spine=max(2, n_leaf // 4),
-                    n_leaf=n_leaf)
+                    n_leaf=n_leaf, devices=args.devices)
     cells = len(res.policies) * len(res.scenarios) * len(res.seeds)
     print(f"# {cells} cells ({len(res.policies)} policies x "
           f"{len(res.scenarios)} scenarios x {len(res.seeds)} seeds) in "
-          f"{res.wall_s}s, {res.compile_cache_misses} compilation(s)")
+          f"{res.wall_s}s, {res.compile_cache_misses} compilation(s), "
+          f"{res.n_devices} device(s)")
     print(res.table(args.table))
     if args.out:
         from repro.core.report import json_clean

@@ -26,6 +26,7 @@ def quick_from(base):
                    if (p["n_hosts"], p["n_containers"]) == (100, 1500)],
         "sparse_speedup": 1.5,
         "sweep": copy.deepcopy(base["sweep_quick"]),
+        "tune": copy.deepcopy(base["tune"]),
     }
 
 
@@ -36,6 +37,11 @@ def test_committed_baseline_has_the_gate_inputs():
     assert base["sweep"]["vmap_axes"] == "policy,scenario,seed"
     assert any((p["n_hosts"], p["n_containers"]) == (100, 1500)
                for p in base["points"])
+    assert base.get("tune"), "full bench must record the tune smoke entry"
+    assert base["tune"]["compile_cache_misses"] == 1
+    # ISSUE 5 acceptance: branch-free scoring keeps the policy axis near
+    # data-parallel cost on the committed full grid
+    assert base["sweep"]["vmap_cell_tax"] <= 1.25
 
 
 def test_gate_passes_on_matching_run():
@@ -63,6 +69,8 @@ def test_gate_tolerates_uniform_machine_skew():
         p["ticks_per_s"] = round(p["ticks_per_s"] * 0.5, 1)
     quick["sweep"]["sweep_steady_s"] = round(
         quick["sweep"]["sweep_steady_s"] * 2.0, 2)
+    quick["tune"]["tune_steady_s"] = round(
+        quick["tune"]["tune_steady_s"] * 2.0, 2)
     assert check(quick, base, TOL) == []
 
 
@@ -136,3 +144,45 @@ def test_gate_fails_on_grid_mismatch():
     quick["sweep"]["n_hosts"] += 1
     failures = check(quick, base, TOL)
     assert any("grid" in m for m in failures), failures
+
+
+def test_gate_fails_without_tune_entry():
+    base = load_base()
+    quick = quick_from(base)
+    del quick["tune"]
+    failures = check(quick, base, TOL)
+    assert any("tune" in m for m in failures), failures
+
+
+def test_gate_fails_on_tune_extra_compilation():
+    """Weight search losing its single compilation (weights leaking into
+    cache keys) must fail the build."""
+    base = load_base()
+    quick = quick_from(base)
+    quick["tune"]["compile_cache_misses"] = 9
+    failures = check(quick, base, TOL)
+    assert any("tune" in m and "once" in m for m in failures), failures
+
+
+def test_gate_fails_on_tune_per_cell_regression():
+    """The gated metric is the WARM tune repeat (runtime-dominated), not
+    the compile-dominated cold wall."""
+    base = load_base()
+    quick = quick_from(base)
+    quick["tune"]["tune_steady_s"] = round(
+        quick["tune"]["tune_steady_s"] * 2.5, 2)
+    failures = check(quick, base, TOL)
+    assert any("tune per-cell" in m for m in failures), failures
+
+
+def test_gate_enforces_branch_free_tax_ceiling():
+    """The ISSUE 5 acceptance number is a hard gate: a quick run whose
+    vmap_cell_tax blows past 1.25 * (1 + tol) fails even if the committed
+    baseline were equally bad."""
+    base = load_base()
+    quick = quick_from(base)
+    bad = round(1.25 * (1 + TOL) + 0.3, 2)
+    quick["sweep"]["vmap_cell_tax"] = bad
+    base["sweep_quick"]["vmap_cell_tax"] = bad   # relative gate blinded
+    failures = check(quick, base, TOL)
+    assert any("ceiling" in m for m in failures), failures

@@ -1,0 +1,242 @@
+"""Branch-free scoring acceptance (PR 5).
+
+Every legacy policy's weight vector must reproduce the PR 4
+switch-dispatched run BIT-FOR-BIT.  The PR 4 per-policy hook
+implementations (select / carry init / host row / carry update / migrate)
+are embedded here verbatim as the reference: the engine is run once with
+``repro.core.scheduling``'s generic weighted hooks monkeypatched to the
+reference closures (plain Python dispatch — one policy at a time needs no
+``lax.switch``) under a FRESH ``jax.jit`` trace, and once through the
+normal weight-vector path — full final state AND per-tick metrics, every
+leaf, ``np.array_equal``, on a mixed bursty-arrival premium-host scenario
+that exercises placement, co-location scoring, communication stalls,
+migration and completion.
+
+The equivalence is exact by construction: each legacy vector is one-hot
+(or disjoint-support) over features computed with the same ops as the old
+rows, every feature is finite, and a zero weight contributes an exact 0.0
+to the score dot product.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SimConfig, get_policy, list_policies
+from repro.core import scheduling as sched
+from repro.core.engine import simulate
+from repro.core.network import path_util_row
+from repro.core.scenario import ScenarioSpec, build_scenario
+from repro.core.scheduling import (PlaceCarry, _first_true, _migration_pair,
+                                   _overload_source, _worst_fit_row,
+                                   same_job_host_counts, select_key_fifo)
+
+LEGACY = ["firstfit", "round", "performance_first", "jobgroup", "netaware",
+          "overload_migrate"]
+
+MIXED_BURSTY = ScenarioSpec("mixed_bursty", arrival="bursty",
+                            host_mix="premium", bw=300.0)
+
+
+def make_cfg(**kw):
+    base = dict(n_jobs=10, n_tasks=40, n_containers=40, horizon=60,
+                arrival_window=10.0, placements_per_tick=16,
+                migrations_per_tick=2)
+    base.update(kw)
+    return SimConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# The PR 4 branches, verbatim (modulo the hook signatures the engine calls)
+# ---------------------------------------------------------------------------
+def _row_firstfit(sim, cfg, params, w, carry, k, cand, used):
+    return jnp.arange(sim.hosts.cap.shape[0], dtype=jnp.float32)
+
+
+def _row_performance_first(sim, cfg, params, w, carry, k, cand, used):
+    return -sim.hosts.speed[:, sim.containers.ctype[cand[k]]]
+
+
+def _row_round(sim, cfg, params, w, carry, k, cand, used):
+    H = sim.hosts.cap.shape[0]
+    return jnp.mod(jnp.arange(H) - carry.rr - 1, H).astype(jnp.float32)
+
+
+def _row_jobgroup(sim, cfg, params, w, carry, k, cand, used):
+    cnt = carry.counts[k]
+    return jnp.where(cnt.sum() > 0, -cnt, _worst_fit_row(sim, used))
+
+
+def _row_netaware(sim, cfg, params, w, carry, k, cand, used):
+    cnt = carry.counts[k]
+    cost = cnt @ sim.net.comm_cost
+    return jnp.where(cnt.sum() > 0, cost / jnp.maximum(cnt.sum(), 1.0),
+                     _worst_fit_row(sim, used))
+
+
+def _zero_counts(sim, cand):
+    return jnp.zeros((cand.shape[0], sim.hosts.cap.shape[0]), jnp.float32)
+
+
+# PR 4's PlaceCarry had (rr, counts); the generic carry adds the per-leaf
+# peer totals for the F_CROSS_LEAF tuning feature.  The reference hooks
+# zero it — no PR 4 branch reads it, and the engine only threads the carry
+# through these hooks — so the pytree structure matches without changing
+# reference semantics.
+def _init_static(sim, cand):
+    return PlaceCarry(rr=sim.sched.rr_pointer,
+                      counts=_zero_counts(sim, cand),
+                      leafpeers=_zero_counts(sim, cand))
+
+
+def _init_coloc(sim, cand):
+    return PlaceCarry(rr=sim.sched.rr_pointer,
+                      counts=same_job_host_counts(sim, cand),
+                      leafpeers=_zero_counts(sim, cand))
+
+
+def _update_noop(sim, carry, k, cand, hh, ok):
+    return carry
+
+
+def _update_round(sim, carry, k, cand, hh, ok):
+    return carry._replace(rr=jnp.where(ok, hh, carry.rr))
+
+
+def _update_coloc(sim, carry, k, cand, hh, ok):
+    same = sim.containers.job[cand] == sim.containers.job[cand[k]]
+    hot = (jnp.arange(carry.counts.shape[1]) == hh) & ok
+    return carry._replace(counts=jnp.where(
+        hot[None, :] & same[:, None], carry.counts + 1.0, carry.counts))
+
+
+def _migrate_none(sim, cfg, params):
+    minus1 = jnp.full((), -1, jnp.int32)
+    return minus1, minus1
+
+
+def _migrate_overload(sim, cfg, params):
+    src, cont, src_c, dst_mask = _overload_source(sim, cfg, params)
+    H = dst_mask.shape[0]
+    dst = _first_true(jnp.arange(H, dtype=jnp.float32), dst_mask)
+    return _migration_pair(src, cont, dst)
+
+
+def _migrate_congestion(sim, cfg, params):
+    src, cont, src_c, dst_mask = _overload_source(sim, cfg, params)
+    dst = _first_true(path_util_row(sim.net, src_c), dst_mask)
+    return _migration_pair(src, cont, dst)
+
+
+# PR 4 registry: name -> (row, init, update, migrate)
+PR4_DEFS = {
+    "firstfit": (_row_firstfit, _init_static, _update_noop, _migrate_none),
+    "round": (_row_round, _init_static, _update_round, _migrate_none),
+    "performance_first": (_row_performance_first, _init_static,
+                          _update_noop, _migrate_none),
+    "jobgroup": (_row_jobgroup, _init_coloc, _update_coloc, _migrate_none),
+    "netaware": (_row_netaware, _init_coloc, _update_coloc,
+                 _migrate_congestion),
+    "overload_migrate": (_row_firstfit, _init_static, _update_noop,
+                         _migrate_overload),
+}
+
+
+def run_reference(policy, cfg, sim0, net_spec, rp, monkeypatch):
+    """Run the engine with the PR 4 hooks for ONE policy (plain Python
+    dispatch) under a fresh jit — the jit must be fresh because the
+    module-level ``run_sim`` cache is keyed on config/shapes only and
+    would otherwise replay the generic weighted trace."""
+    row, init, update, mig = PR4_DEFS[policy]
+    pol = get_policy(policy)
+    with monkeypatch.context() as m:
+        m.setattr(sched, "select_key", lambda sim, p: select_key_fifo(sim))
+        m.setattr(sched, "init_place_carry",
+                  lambda sim, cand, p: init(sim, cand))
+        m.setattr(sched, "host_row",
+                  lambda sim, cfg_, params, p, carry, k, cand, used:
+                  row(sim, cfg_, params, p.weights, carry, k, cand, used))
+        m.setattr(sched, "update_place_carry",
+                  lambda sim, p, carry, k, cand, hh, ok:
+                  update(sim, carry, k, cand, hh, ok))
+        m.setattr(sched, "migrate",
+                  lambda sim, cfg_, params, p: mig(sim, cfg_, params))
+        fn = jax.jit(lambda s: simulate(s, cfg, pol, net_spec.n_hosts,
+                                        net_spec.n_nodes, cfg.horizon, rp))
+        out = fn(sim0)
+        jax.tree.leaves(out)[0].block_until_ready()
+    return out
+
+
+def run_weighted(policy, cfg, sim0, net_spec, rp):
+    pol = get_policy(policy)
+    fn = jax.jit(lambda s: simulate(s, cfg, pol, net_spec.n_hosts,
+                                    net_spec.n_nodes, cfg.horizon, rp))
+    out = fn(sim0)
+    jax.tree.leaves(out)[0].block_until_ready()
+    return out
+
+
+def assert_trees_equal(got, want, msg):
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=msg)
+
+
+def test_all_legacy_policies_registered():
+    assert set(LEGACY) <= set(list_policies())
+
+
+@pytest.mark.parametrize("policy", LEGACY)
+def test_weight_vector_matches_pr4_switch_run_bitwise(policy, monkeypatch):
+    """Full-run state AND metrics, every leaf, np.array_equal — weighted
+    scoring vs the PR 4 per-policy branches."""
+    cfg = make_cfg()
+    net_spec, sims, rp = build_scenario(MIXED_BURSTY, cfg, seeds=(0,))
+    sim0 = jax.tree.map(lambda x: x[0], sims)
+    want = run_reference(policy, cfg, sim0, net_spec, rp, monkeypatch)
+    got = run_weighted(policy, cfg, sim0, net_spec, rp)
+    assert_trees_equal(got, want, policy)
+
+
+def test_weighted_matches_pr4_on_sequential_path(monkeypatch):
+    """The sequential reference path (K=1 degenerate rounds) consumes the
+    same hooks — the equivalence must hold there too."""
+    cfg = make_cfg(batched_placement=False)
+    net_spec, sims, rp = build_scenario(MIXED_BURSTY, cfg, seeds=(1,))
+    sim0 = jax.tree.map(lambda x: x[0], sims)
+    want = run_reference("round", cfg, sim0, net_spec, rp, monkeypatch)
+    got = run_weighted("round", cfg, sim0, net_spec, rp)
+    assert_trees_equal(got, want, "round/sequential")
+
+
+def test_weighted_matches_pr4_fw_delay_mode(monkeypatch):
+    """'fw' delay mode runs the full APSP refresh inside the tick; the
+    comm-cost table the netaware score reads must still be identical."""
+    cfg = make_cfg(delay_mode="fw", horizon=30)
+    net_spec, sims, rp = build_scenario(ScenarioSpec("baseline"), cfg,
+                                        seeds=(0,))
+    sim0 = jax.tree.map(lambda x: x[0], sims)
+    want = run_reference("netaware", cfg, sim0, net_spec, rp, monkeypatch)
+    got = run_weighted("netaware", cfg, sim0, net_spec, rp)
+    assert_trees_equal(got, want, "netaware/fw")
+
+
+def test_migration_wrappers_match_generic():
+    """overload_migrate / congestion_migrate convenience wrappers ARE the
+    generic weighted migrate under the corresponding vectors."""
+    cfg = make_cfg()
+    net_spec, sims, rp = build_scenario(MIXED_BURSTY, cfg, seeds=(2,))
+    sim = jax.tree.map(lambda x: x[0], sims)
+    # drive the state into an overloaded shape
+    hs = sim.hosts._replace(
+        used=sim.hosts.used.at[0].set(0.9 * sim.hosts.cap[0]),
+        n_containers=sim.hosts.n_containers.at[0].set(1))
+    ct = sim.containers
+    ct = ct._replace(status=ct.status.at[0].set(1), host=ct.host.at[0].set(0))
+    sim = sim._replace(hosts=hs, containers=ct)
+    for name, wrapper in [("overload_migrate", sched.overload_migrate),
+                          ("netaware", sched.congestion_migrate)]:
+        c1, d1 = wrapper(sim, cfg, rp)
+        c2, d2 = sched.migrate(sim, cfg, rp, get_policy(name))
+        assert int(c1) == int(c2) and int(d1) == int(d2), name

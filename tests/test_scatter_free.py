@@ -1,24 +1,21 @@
-"""Scatter-free tick acceptance (PR 4).
+"""Scatter-free tick unit oracles (PR 4; PR 5 removed the deprecated
+``cfg.scatter_tick`` full-tick fork after its one promised cycle).
 
-The default tick replaces every ``.at[idx].set/add`` state-update scatter
-with where-masks / segment reductions so all three sweep axes can ``vmap``
-(docs/perf.md).  ``cfg.scatter_tick=True`` keeps the PR 3 scatter updates
-for one deprecation cycle as the oracle: a full mixed bursty-arrival run
-must agree BIT-FOR-BIT across the two paths for every registered policy —
-every masked form is either a single-index update (identical float
-operands) or an integer-valued / shared reduction, so there is no rounding
-to hide behind.
-
-Plus unit oracles for the shared scatter-free helpers (rank_key inverse
-permutation, same-job host counts, segment-min adjacency).
+The tick expresses every ``.at[idx].set/add`` state update as a where-mask
+or a segment reduction so all sweep axes ``vmap`` (docs/perf.md).  The
+cheap unit oracles that don't fork the tick are kept here: the rank-key
+inverse permutation vs its scatter form, the same-job host-count
+segment-sum vs the per-candidate scatter-adds, and the segment-min
+adjacency vs the ``.at[u, v].min`` build.  (Full-run semantics are pinned
+by tests/test_policy_equivalence.py against the PR 4 switch-based scoring
+reference, and by the sweep cell == standalone equalities in
+tests/test_sweep.py.)
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.core import (SimConfig, build_paper_network, get_policy,
-                        list_policies, run_sim)
+from repro.core import SimConfig, build_paper_network
 from repro.core.network import adjacency_from_links
 from repro.core.scenario import ScenarioSpec, build_scenario
 from repro.core.scheduling import (INT_BIG, rank_key, same_job_host_counts,
@@ -35,39 +32,13 @@ def make_cfg(**kw):
     return SimConfig(**base)
 
 
-MIXED_BURSTY = ScenarioSpec("mixed_bursty", arrival="bursty",
-                            host_mix="premium", bw=300.0)
-
-
-@pytest.mark.parametrize("policy", list_policies())
-def test_scatter_free_tick_matches_scatter_oracle_bitwise(policy):
-    """Full-run state AND metrics, every leaf, np.array_equal — on a mixed
-    bursty scenario that exercises placement, co-location scoring,
-    communication stalls, migration and completion."""
-    outs = {}
-    for scat in (False, True):
-        cfg = make_cfg(scatter_tick=scat)
-        net_spec, sims, rp = build_scenario(MIXED_BURSTY, cfg, seeds=(0,))
-        sim0 = jax.tree.map(lambda x: x[0], sims)
-        outs[scat] = run_sim(sim0, cfg, get_policy(policy), net_spec.n_hosts,
-                             net_spec.n_nodes, cfg.horizon, params=rp)
-    for a, b in zip(jax.tree.leaves(outs[False]), jax.tree.leaves(outs[True])):
-        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
-                                      err_msg=policy)
-
-
-def test_scatter_free_tick_matches_on_sequential_path():
-    """The sequential reference path (K=1 degenerate rounds) gates its
-    deploy scatters on the same flag."""
-    outs = {}
-    for scat in (False, True):
-        cfg = make_cfg(scatter_tick=scat, batched_placement=False)
-        net_spec, sims, rp = build_scenario(MIXED_BURSTY, cfg, seeds=(1,))
-        sim0 = jax.tree.map(lambda x: x[0], sims)
-        outs[scat] = run_sim(sim0, cfg, get_policy("round"), net_spec.n_hosts,
-                             net_spec.n_nodes, cfg.horizon, params=rp)
-    for a, b in zip(jax.tree.leaves(outs[False]), jax.tree.leaves(outs[True])):
-        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+def test_scatter_tick_flag_is_gone():
+    """PR 4 kept the scatter-based tick ONE deprecation cycle behind
+    ``cfg.scatter_tick``; passing it must now fail loudly, not silently
+    run the default tick."""
+    import pytest
+    with pytest.raises(TypeError):
+        make_cfg(scatter_tick=True)
 
 
 def test_rank_key_is_inverse_permutation_of_argsort():
@@ -112,6 +83,49 @@ def test_same_job_host_counts_matches_scatter_oracle():
             np.asarray(same_job_host_counts_scatter(sim, cand)))
 
 
+def test_leafpeers_incremental_matches_recompute():
+    """The F_CROSS_LEAF numerator is maintained by elementwise adds in the
+    admit scan (a per-step segment_sum would be a batched scatter in the
+    hot loop); after any admit sequence it must equal the from-scratch
+    per-leaf reduction of the carried counts."""
+    from repro.core import get_policy
+    from repro.core.scheduling import init_place_carry, update_place_carry
+
+    rng = np.random.default_rng(5)
+    cfg = make_cfg()
+    net_spec, sims, _ = build_scenario(ScenarioSpec("baseline"), cfg,
+                                       seeds=(0,))
+    sim = jax.tree.map(lambda x: x[0], sims)
+    ct = sim.containers
+    C = ct.status.shape[0]
+    H = sim.hosts.cap.shape[0]
+    status = rng.choice([STATUS_INACTIVE, STATUS_RUNNING], size=C)
+    host = rng.integers(-1, H, size=C).astype(np.int32)
+    sim = sim._replace(containers=ct._replace(
+        status=jnp.asarray(status.astype(np.int32)), host=jnp.asarray(host)))
+    cand = jnp.asarray(rng.integers(0, C, size=8).astype(np.int32))
+    pol = get_policy("round")
+    carry = init_place_carry(sim, cand, pol)
+    leaf = np.asarray(sim.hosts.leaf)
+
+    def recompute(counts):
+        out = np.zeros_like(counts)
+        for k in range(counts.shape[0]):
+            per_leaf = np.zeros(H)
+            np.add.at(per_leaf, leaf, counts[k])
+            out[k] = per_leaf[leaf]
+        return out
+
+    np.testing.assert_array_equal(np.asarray(carry.leafpeers),
+                                  recompute(np.asarray(carry.counts)))
+    for k in range(6):          # admit a few candidates onto random hosts
+        hh = jnp.asarray(int(rng.integers(0, H)), jnp.int32)
+        carry = update_place_carry(sim, pol, carry, k, cand, hh,
+                                   jnp.asarray(True))
+        np.testing.assert_array_equal(np.asarray(carry.leafpeers),
+                                      recompute(np.asarray(carry.counts)))
+
+
 def test_adjacency_segment_min_matches_scatter_build():
     cfg = SimConfig()
     spec, net = build_paper_network(cfg)
@@ -123,18 +137,3 @@ def test_adjacency_segment_min_matches_scatter_build():
     A = A.at[net.link_u, net.link_v].min(delay)
     A = A.at[net.link_v, net.link_u].min(delay)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(A))
-
-
-def test_scatter_free_fw_delay_mode_matches():
-    """'fw' delay mode runs the rewritten adjacency + APSP inside the tick."""
-    outs = {}
-    for scat in (False, True):
-        cfg = make_cfg(scatter_tick=scat, delay_mode="fw", horizon=30)
-        net_spec, sims, rp = build_scenario(ScenarioSpec("baseline"), cfg,
-                                            seeds=(0,))
-        sim0 = jax.tree.map(lambda x: x[0], sims)
-        outs[scat] = run_sim(sim0, cfg, get_policy("netaware"),
-                             net_spec.n_hosts, net_spec.n_nodes, cfg.horizon,
-                             params=rp)
-    for a, b in zip(jax.tree.leaves(outs[False]), jax.tree.leaves(outs[True])):
-        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

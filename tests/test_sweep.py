@@ -178,43 +178,75 @@ def test_bursty_workload_clusters_arrivals():
     assert len(np.unique(np.round(submit / 2.0))) <= 8
 
 
-def test_late_registration_invalidates_jit_cache():
-    """Registering a policy AFTER a compiled run must re-trace: the switch
-    branch tables are baked into the executable, and a stale table would
-    clamp the new branch index onto the old last branch and silently run
-    the wrong policy (the jit cache is keyed on the registry version)."""
-    import jax.numpy as jnp
-
-    from repro.core import PolicyDef, register
+def test_registration_after_compile_is_pure_data():
+    """With branch-free scoring a policy is a weight vector: registering a
+    NEW policy after a compiled run must reuse the warm executable — zero
+    new jit cache entries — and still run the new policy's semantics (the
+    old switch design baked branch tables into the program and had to
+    invalidate every compiled run on registration)."""
+    from repro.core import register
     from repro.core import scheduling as sched
+    from repro.core.engine import _run_sim_jit
 
     cfg = small_cfg(horizon=5)
     net_spec, sims, rp = build_scenario(ScenarioSpec("baseline"), cfg,
                                         seeds=(0,))
     sim0 = jax.tree.map(lambda x: x[0], sims)
-    # warm the (cfg, shapes) cache with the built-in branch table
+    # warm the (cfg, shapes) cache
     run_sim(sim0, cfg, get_policy("firstfit"), net_spec.n_hosts,
             net_spec.n_nodes, cfg.horizon)
+    misses = _run_sim_jit._cache_size()
 
-    def row_lastfit(sim, cfg_, params, w, carry, k, cand, used):
-        return -jnp.arange(sim.hosts.cap.shape[0], dtype=jnp.float32)
-
+    # lastfit: negative recency weight reverses FirstFit's host order
     name = "lastfit_regression"
-    register(PolicyDef(name, row_lastfit))
+    register(name, dict(row_recency=-1.0))
     try:
         final, _ = run_sim(sim0, cfg, get_policy(name), net_spec.n_hosts,
                            net_spec.n_nodes, cfg.horizon)
+        assert _run_sim_jit._cache_size() == misses, \
+            "new policy must ride the existing compilation"
         host = np.asarray(final.containers.host)
         placed = host[host >= 0]
-        # last-fit fills from the top of the host range; the stale table
-        # would have dispatched a firstfit-scored branch (low hosts)
+        # last-fit fills from the top of the host range
         assert placed.size > 0
         assert placed.min() >= net_spec.n_hosts // 2, placed
     finally:
-        # keep the registry exactly as the other tests expect (the branch
-        # was appended last, so indices of built-ins are untouched)
-        del sched._DEFS[sched._REGISTRY.pop(name)]
-        sched._REGISTRY_VERSION += 1
+        del sched._REGISTRY[name]
+
+
+def test_canonical_weight_length_enforced():
+    """The fixed-length layout's loud-error guarantee: short/long vectors
+    and unknown weight names are rejected up front (a short vector would
+    silently clamp jit-mode gathers; a ragged batch breaks stacking)."""
+    import jax.numpy as jnp
+    import pytest
+
+    from repro.core import (NUM_POLICY_WEIGHTS, PolicyParams, register,
+                            weight_vector)
+
+    with pytest.raises(ValueError):
+        get_policy("firstfit", weights=[1.0, 0.05])     # the old 2-slot form
+    with pytest.raises(ValueError):
+        get_policy("firstfit", weights=np.zeros(NUM_POLICY_WEIGHTS + 1))
+    with pytest.raises(ValueError):
+        register("bad_length", np.zeros(3, np.float32))
+    with pytest.raises(KeyError):
+        get_policy("firstfit", weights={"no_such_weight": 1.0})
+    with pytest.raises(KeyError):
+        weight_vector(no_such_weight=1.0)
+    with pytest.raises(ValueError):
+        stack_policies([PolicyParams(weights=jnp.zeros(3))])
+    assert weight_vector().shape == (NUM_POLICY_WEIGHTS,)
+
+
+def test_stack_policies_stacks_names_and_params():
+    from repro.core import NUM_POLICY_WEIGHTS
+
+    pol = stack_policies(["firstfit", get_policy("netaware")])
+    assert pol.weights.shape == (2, NUM_POLICY_WEIGHTS)
+    np.testing.assert_array_equal(
+        np.asarray(pol.weights[1]),
+        np.asarray(get_policy("netaware").weights))
 
 
 def test_host_mixes_share_shapes():

@@ -1,0 +1,107 @@
+"""Multi-device sweep: the flattened policy x scenario x seed grid axis is
+sharded with a ``NamedSharding`` and must stay BIT-FOR-BIT equal to the
+unsharded run — cells are independent, sharding only partitions the batch.
+
+The subprocess test forces 4 fake CPU devices via
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (the flag must be
+set before jax initializes, so the main test process — pinned to one
+device — cannot do it in-process).  The grid is deliberately 18 cells
+(3 policies x 3 scenarios x 2 seeds), NOT a multiple of 4, so the
+round-robin pad path is exercised too.  CI additionally runs the
+in-process variant in the tier-1 matrix with the env set.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+os.environ["JAX_PLATFORMS"] = "cpu"
+import json
+import jax
+import numpy as np
+
+from repro.core import SimConfig
+from repro.core.scenario import ScenarioSpec, build_scenarios
+from repro.launch.sweep import make_sweep_fn, stack_policies
+
+cfg = SimConfig(n_jobs=10, n_tasks=40, n_containers=40, horizon=30,
+                arrival_window=10.0, placements_per_tick=16,
+                migrations_per_tick=2)
+specs = [ScenarioSpec("baseline"), ScenarioSpec("slow_net", bw=200.0),
+         ScenarioSpec("bursty_premium", arrival="bursty",
+                      host_mix="premium")]
+net_spec, sims, rps = build_scenarios(specs, cfg, seeds=(0, 1))
+pol = stack_policies(["firstfit", "round", "netaware"])   # 18 cells % 4 != 0
+
+f1 = make_sweep_fn(cfg, net_spec.n_hosts, net_spec.n_nodes, cfg.horizon,
+                   devices=1)
+f4 = make_sweep_fn(cfg, net_spec.n_hosts, net_spec.n_nodes, cfg.horizon)
+o1 = f1(sims, pol, rps)
+o4 = f4(sims, pol, rps)
+equal = all(np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(jax.tree.leaves(o1), jax.tree.leaves(o4)))
+print(json.dumps({
+    "device_count": jax.device_count(),
+    "n_devices_sharded": f4.n_devices,
+    "n_devices_unsharded": f1.n_devices,
+    "compiles_sharded": f4._cache_size(),
+    "compiles_unsharded": f1._cache_size(),
+    "bitwise_equal": equal,
+    "grid_shape": list(np.asarray(o4[0].t).shape),
+}))
+"""
+
+
+def _run_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def test_sharded_grid_matches_unsharded_bitwise():
+    """4 forced host devices: sharded == unsharded, one compile each, the
+    [P, S, N] output shape intact through the pad/flatten round-trip."""
+    out = _run_subprocess()
+    assert out["device_count"] == 4
+    assert out["n_devices_sharded"] == 4
+    assert out["n_devices_unsharded"] == 1
+    assert out["compiles_sharded"] == 1
+    assert out["compiles_unsharded"] == 1
+    assert out["grid_shape"] == [3, 3, 2]
+    assert out["bitwise_equal"] is True
+
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="needs XLA_FLAGS=--xla_force_host_platform_"
+                           "device_count set before jax init (CI step)")
+def test_sharded_grid_matches_unsharded_in_process():
+    """In-process variant for environments launched with the XLA_FLAGS env
+    (the tier-1 CI matrix runs this file with 4 forced devices)."""
+    import numpy as np
+
+    from repro.core import SimConfig
+    from repro.core.scenario import ScenarioSpec, build_scenarios
+    from repro.launch.sweep import make_sweep_fn, stack_policies
+
+    cfg = SimConfig(n_jobs=10, n_tasks=40, n_containers=40, horizon=20,
+                    arrival_window=10.0, placements_per_tick=16,
+                    migrations_per_tick=2)
+    specs = [ScenarioSpec("baseline"), ScenarioSpec("slow_net", bw=200.0)]
+    net_spec, sims, rps = build_scenarios(specs, cfg, seeds=(0,))
+    pol = stack_policies(["firstfit", "netaware", "jobgroup"])  # 6 cells
+    f1 = make_sweep_fn(cfg, net_spec.n_hosts, net_spec.n_nodes, cfg.horizon,
+                       devices=1)
+    fd = make_sweep_fn(cfg, net_spec.n_hosts, net_spec.n_nodes, cfg.horizon)
+    assert fd.n_devices == jax.device_count()
+    o1, od = f1(sims, pol, rps), fd(sims, pol, rps)
+    for a, b in zip(jax.tree.leaves(o1), jax.tree.leaves(od)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
