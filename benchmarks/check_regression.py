@@ -6,7 +6,10 @@ committed ``BENCH_engine.json`` baseline and FAILS on regression, instead of
 only checking that the JSON parses:
 
 * every quick scale point's ``ticks_per_s`` must stay within ``tol`` of the
-  committed point at the same (n_hosts, n_containers, mode, policy);
+  committed point at the same (n_hosts, n_containers, mode, policy,
+  delay_mode, kernels) — and ONLY when both were measured on the same JAX
+  backend; cross-backend pairs (a cpu CI runner vs a gpu-refreshed
+  baseline) are skipped with a loud note instead of gated (ISSUE 6);
 * the quick sweep's per-cell steady time must not exceed the committed
   ``sweep_quick`` per-cell time by more than ``tol`` (the full-mode bench
   records the quick-scale grid exactly so the two runs are comparable);
@@ -55,8 +58,24 @@ QUICK = os.path.join(HERE, "..", "experiments", "BENCH_engine_quick.json")
 
 
 def point_key(p: dict) -> tuple:
+    # delay_mode/kernels default to the pre-ladder values so baselines
+    # written before the kernel ladder (ISSUE 6) keep their identity
     return (p["n_hosts"], p["n_containers"], p["mode"],
-            p.get("policy", "firstfit"))
+            p.get("policy", "firstfit"), p.get("delay_mode", "path"),
+            p.get("kernels", "off"))
+
+
+def backends_differ(a: dict, b: dict) -> bool:
+    """True when both entries record a backend and they disagree.
+
+    Wall-clock numbers from different XLA backends (cpu vs gpu vs tpu) are
+    not comparable at any tolerance — a CPU quick run gated against a GPU
+    baseline would drown the skew-normalized pack in bogus ratios.  Entries
+    without a ``backend`` field (pre-ladder baselines) are assumed
+    comparable, so old baselines keep gating until the next full refresh.
+    """
+    return (a.get("backend") is not None and b.get("backend") is not None
+            and a["backend"] != b["backend"])
 
 
 def check(quick: dict, base: dict, tol: float) -> list[str]:
@@ -99,6 +118,11 @@ def check(quick: dict, base: dict, tol: float) -> list[str]:
         ref = committed.get(point_key(p))
         if ref is None:
             continue  # a quick-only point has no committed twin to gate on
+        if backends_differ(p, ref):
+            print(f"note: skipping cross-backend comparison at "
+                  f"{point_key(p)}: quick ran on {p['backend']!r}, "
+                  f"committed baseline on {ref['backend']!r}")
+            continue
         ratios.append((
             f"ticks_per_s at {point_key(p)} "
             f"({p['ticks_per_s']} vs committed {ref['ticks_per_s']})",
@@ -111,7 +135,11 @@ def check(quick: dict, base: dict, tol: float) -> list[str]:
             "re-run the full bench to record the quick-scale reference")
     elif sw:
         grid = ("n_hosts", "n_containers", "horizon", "cells")
-        if any(sw.get(k) != ref_sw.get(k) for k in grid):
+        if backends_differ(sw, ref_sw):
+            print(f"note: skipping cross-backend sweep comparison: quick "
+                  f"ran on {sw['backend']!r}, committed sweep_quick on "
+                  f"{ref_sw['backend']!r}")
+        elif any(sw.get(k) != ref_sw.get(k) for k in grid):
             failures.append(
                 f"quick sweep grid {[sw.get(k) for k in grid]} != committed "
                 f"sweep_quick grid {[ref_sw.get(k) for k in grid]}")
@@ -129,7 +157,11 @@ def check(quick: dict, base: dict, tol: float) -> list[str]:
             "full bench to record the weight-search reference")
     elif tn:
         grid = ("n_hosts", "n_containers", "horizon", "cells")
-        if any(tn.get(k) != ref_tn.get(k) for k in grid):
+        if backends_differ(tn, ref_tn):
+            print(f"note: skipping cross-backend tune comparison: quick "
+                  f"ran on {tn['backend']!r}, committed tune on "
+                  f"{ref_tn['backend']!r}")
+        elif any(tn.get(k) != ref_tn.get(k) for k in grid):
             failures.append(
                 f"tune grid {[tn.get(k) for k in grid]} != committed "
                 f"{[ref_tn.get(k) for k in grid]}")
@@ -169,10 +201,10 @@ def check(quick: dict, base: dict, tol: float) -> list[str]:
     # * vmap_cell_tax — vmapped per-cell steady vs warm standalone cell
     #   (catches the sweep losing its batching efficiency specifically).
     qp = {point_key(p): p for p in quick.get("points", [])}
-    spq = qp.get((100, 1500, "sparse", "firstfit"))
-    deq = qp.get((100, 1500, "dense", "firstfit"))
-    spc = committed.get((100, 1500, "sparse", "firstfit"))
-    dec = committed.get((100, 1500, "dense", "firstfit"))
+    spq = qp.get((100, 1500, "sparse", "firstfit", "path", "off"))
+    deq = qp.get((100, 1500, "dense", "firstfit", "path", "off"))
+    spc = committed.get((100, 1500, "sparse", "firstfit", "path", "off"))
+    dec = committed.get((100, 1500, "dense", "firstfit", "path", "off"))
     if spq and deq and spc and dec and deq["ticks_per_s"] > 0 \
             and dec["ticks_per_s"] > 0:
         got = spq["ticks_per_s"] / deq["ticks_per_s"]

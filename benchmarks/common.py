@@ -16,21 +16,32 @@ POLICIES = ["firstfit", "round", "performance_first", "jobgroup"]
 
 def measure_scale_point(n_hosts: int, n_containers: int, horizon: int = 120,
                         policy: str = "firstfit", seed: int = 0,
-                        sparse: bool = True, batched: bool = True) -> dict:
+                        sparse: bool = True, batched: bool = True,
+                        delay_mode: str = "path",
+                        kernels: str = "off") -> dict:
     """Build one scale point, run it twice (compile + steady) and time it.
 
     Shared by fig11_scalability and engine_bench so the timing protocol and
     result schema stay in sync.
+
+    ``delay_mode``/``kernels`` select the delay-refresh algebra and the
+    Pallas kernel dispatch flag ('auto'|'on'|'off', applied to both the fw
+    APSP and the fused waterfilling kernel).  Every point records the JAX
+    ``backend``/``device`` it ran on plus what the flag *resolved* to —
+    numbers from different backends are never comparable, and
+    check_regression.py refuses to compare them.
     """
     import jax
 
     from repro.core.types import (STATUS_COMMUNICATING, STATUS_COMPLETED,
                                   STATUS_MIGRATING, STATUS_RUNNING)
+    from repro.kernels import kernel_backend, resolve_kernel
 
     cfg = SimConfig(n_jobs=max(10, n_containers // 3),
                     n_tasks=n_containers, n_containers=n_containers,
                     horizon=horizon, sparse_flows=sparse,
-                    batched_placement=batched)
+                    batched_placement=batched, delay_mode=delay_mode,
+                    delay_kernel=kernels, waterfill_kernel=kernels)
     t0 = time.time()
     n_leaf = max(4, n_hosts // 5)
     hosts = scaled_hosts(n_hosts, n_leaf)
@@ -53,6 +64,7 @@ def measure_scale_point(n_hosts: int, n_containers: int, horizon: int = 120,
     final = once()
     t_steady = time.time() - t0
     state_mb = sum(x.nbytes for x in jax.tree.leaves(sim0)) / 2**20
+    backend = kernel_backend()
     return {
         "n_hosts": n_hosts,
         "n_network_nodes": spec.n_nodes,
@@ -61,6 +73,13 @@ def measure_scale_point(n_hosts: int, n_containers: int, horizon: int = 120,
         "policy": policy,
         "batched_placement": batched,
         "horizon": horizon,
+        "delay_mode": delay_mode,
+        "kernels": kernels,
+        # what the flag resolved to on THIS backend ('auto' -> kernel on
+        # TPU/GPU, jnp ref on CPU) — the honest record of what actually ran
+        "kernels_active": bool(resolve_kernel(kernels)),
+        "backend": backend,
+        "device": jax.devices()[0].device_kind,
         "init_s": round(t_init, 3),
         "sim_first_s": round(t_first, 2),
         "sim_steady_s": round(t_steady, 4),

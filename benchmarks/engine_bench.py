@@ -26,6 +26,17 @@ acceptance number (target <= 1.25 at the 24-cell 500h/3000c grid) — and a
 (``repro.launch.tune``: weight samples on the policy batch axis, one
 compile) so the learned-weights path is regression-gated too.
 
+ISSUE 6 turns this into a backend LADDER: every point records the JAX
+``backend``/``device`` it ran on, and the full bench adds kernel-on
+('auto') vs kernel-off ('off') variants of the 500h/3000c and 2000h/6000c
+points under ``delay_mode='fw'`` — the APSP refresh the ``fw_minplus``
+Pallas kernel fuses — plus a cheap 100h/1500c fw pair both modes measure
+(so the CI quick gate exercises the kernel dispatch path too).  On CPU,
+'auto' resolves to the jnp reference (``kernels_active: false`` in the
+row), so the on/off pair measures the same code there; the pair only
+separates on TPU/GPU.  check_regression.py refuses cross-backend
+comparisons outright.
+
     PYTHONPATH=src python -m benchmarks.engine_bench [--quick]
 """
 from __future__ import annotations
@@ -214,11 +225,18 @@ def measure_tune_point(n_hosts: int, n_containers: int, horizon: int,
 
 def bench_engine(quick: bool = False):
     """Rows + claims for benchmarks.run; writes BENCH_engine.json."""
+    import jax
+
     points = []
     # small tracking points (cheap, both engines)
     for sparse in (True, False):
         points.append(measure_scale_point(100, 1500, horizon=40,
                                           sparse=sparse))
+    # kernel ladder, small rung (both modes, so the CI quick gate covers
+    # the dispatch path): APSP delay refresh, kernel-on vs kernel-off
+    for kernels in ("auto", "off"):
+        points.append(measure_scale_point(100, 1500, horizon=40,
+                                          delay_mode="fw", kernels=kernels))
     # the headline comparison: 500 hosts / 3000 containers, same run
     if not quick:
         for sparse in (True, False):
@@ -229,6 +247,18 @@ def bench_engine(quick: bool = False):
         for pol in ("jobgroup", "netaware"):
             points.append(measure_scale_point(500, 3000, horizon=40,
                                               policy=pol))
+        # kernel ladder, headline + ceiling rungs.  The fw refresh is the
+        # O(N^3) hot loop the fw_minplus kernel fuses; the 2000h point runs
+        # horizon 30 (3 refreshes) because the CPU jnp reference costs ~10 s
+        # per refresh at N=2500 — the ladder's point is the TPU/GPU rows,
+        # where 'auto' resolves to the compiled kernel.
+        for kernels in ("auto", "off"):
+            points.append(measure_scale_point(500, 3000, horizon=40,
+                                              delay_mode="fw",
+                                              kernels=kernels))
+            points.append(measure_scale_point(2000, 6000, horizon=30,
+                                              delay_mode="fw",
+                                              kernels=kernels))
         # beyond the dense ceiling: sparse-only 2000-host point.  Horizon 60
         # (was 20): with ~30-unit durations and a 36 s arrival window, no
         # container can FINISH inside 20 ticks, so the point used to report
@@ -239,10 +269,13 @@ def bench_engine(quick: bool = False):
             f"validate end-to-end behavior: {p2000}")
         points.append(p2000)
 
-    def tps(h, c, mode, policy="firstfit"):
+    def tps(h, c, mode, policy="firstfit", delay_mode="path",
+            kernels="off"):
         for p in points:
             if ((p["n_hosts"], p["n_containers"], p["mode"],
-                 p.get("policy", "firstfit")) == (h, c, mode, policy)):
+                 p.get("policy", "firstfit"), p.get("delay_mode", "path"),
+                 p.get("kernels", "off"))
+                    == (h, c, mode, policy, delay_mode, kernels)):
                 return p["ticks_per_s"]
         return None
 
@@ -261,8 +294,13 @@ def bench_engine(quick: bool = False):
         sweep = measure_sweep_point(500, 3000, horizon=20, with_loop=True)
         sweep_quick = measure_sweep_point(**QUICK_SWEEP, with_loop=False)
     tune = measure_tune_point(**TUNE_SMOKE)
+    backend = jax.default_backend()
+    sweep["backend"] = backend
+    tune["backend"] = backend
     out = {
         "bench": "engine_tick_throughput",
+        "backend": backend,
+        "device": jax.devices()[0].device_kind,
         "points": points,
         "comparison_point": {"n_hosts": cmp_h, "n_containers": cmp_c},
         "sparse_speedup": speedup,
@@ -270,6 +308,7 @@ def bench_engine(quick: bool = False):
         "tune": tune,
     }
     if sweep_quick is not None:
+        sweep_quick["backend"] = backend
         out["sweep_quick"] = sweep_quick
     if not quick:
         out["policy_comparison"] = {
@@ -280,9 +319,17 @@ def bench_engine(quick: bool = False):
     os.makedirs(os.path.dirname(path), exist_ok=True)
     with open(path, "w") as f:
         json.dump(out, f, indent=1)
+    kon = tps(cmp_h if not quick else 100, cmp_c if not quick else 1500,
+              "sparse", delay_mode="fw", kernels="auto")
+    koff = tps(cmp_h if not quick else 100, cmp_c if not quick else 1500,
+               "sparse", delay_mode="fw", kernels="off")
     claims = [
         (f"sparse vs dense ticks_per_s @ {cmp_h}h/{cmp_c}c",
          f"{sp} vs {de} ({speedup}x)"),
+        (f"fw kernel ladder [{backend}] kernels=auto vs off ticks_per_s",
+         f"{kon} vs {koff}"
+         + ("" if backend in ("tpu", "gpu")
+            else " (CPU: 'auto' -> jnp ref; pair separates on TPU/GPU)")),
         (f"sweep {sweep['cells']} cells @ {sweep['n_hosts']}h "
          f"compiled {sweep['compile_cache_misses']}x, vmap all axes",
          f"cold {sweep['sweep_cold_s']}s, steady {sweep['sweep_steady_s']}s, "

@@ -73,7 +73,13 @@ class SimConfig:
     migrations_per_tick: int = 8
     waterfill_rounds: int = 8
     delay_mode: str = "path"          # 'path' | 'fw'
-    fw_use_kernel: bool = False
+    # Pallas kernel dispatch flags ('auto' | 'on' | 'off', resolved per
+    # backend by repro.kernels.resolve_kernel: compiled kernel on TPU/GPU,
+    # jnp reference on CPU under 'auto'; 'on' forces the kernel — the
+    # interpreter-lowered oracle-test mode on CPU — and 'off' forces the
+    # reference everywhere):
+    delay_kernel: str = "auto"        # fw_minplus APSP ('fw' delay mode)
+    waterfill_kernel: str = "auto"    # fused seg_waterfill flow allocation
     sparse_flows: bool = True         # segment-based flow engine (docs/perf.md)
     batched_placement: bool = True    # conflict-resolved top-K placement round
     stall_rate_floor: float = 50.0    # KB/s under which a flow is 'stalled'

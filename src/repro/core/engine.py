@@ -26,6 +26,7 @@ import jax.numpy as jnp
 
 from repro.core import network, scheduling, stats
 from repro.core.datacenter import SimConfig
+from repro.kernels import resolve_kernel
 from repro.core.scheduling import BIG, INT_BIG, feasible_hosts
 from repro.core.types import (
     STATUS_COMMUNICATING, STATUS_COMPLETED, STATUS_INACTIVE, STATUS_MIGRATING,
@@ -379,11 +380,13 @@ def pick_comm_peers_dense(ct: ContainerState) -> jnp.ndarray:
     return jnp.where(has, first, jnp.arange(C))
 
 
-def phase_flows(sim: SimState, cfg: SimConfig):
+def phase_flows(sim: SimState, cfg: SimConfig, use_kernel: bool = False):
     """Compute this tick's flow rates (paper: iperf transfers).
 
     Flow f in [0, C)    = container f's active communication flow.
     Flow f in [C, 2C)   = container (f - C)'s migration flow.
+    ``use_kernel`` (resolved from ``cfg.waterfill_kernel`` by the tick
+    builder) routes the sparse allocation through the fused Pallas kernel.
     """
     ct = sim.containers
     C = ct.status.shape[0]
@@ -401,7 +404,8 @@ def phase_flows(sim: SimState, cfg: SimConfig):
     active = jnp.concatenate([comm_active, mig_active])
     rates, util = network.flow_rates(sim.net, src, dst, active,
                                      n_rounds=cfg.waterfill_rounds,
-                                     sparse=cfg.sparse_flows)
+                                     sparse=cfg.sparse_flows,
+                                     use_kernel=use_kernel)
     sim = sim._replace(net=sim.net._replace(link_util=util))
     return sim, rates[:C], rates[C:], active, rates
 
@@ -522,13 +526,20 @@ def make_tick(cfg: SimConfig, policy: PolicyParams, params: RunParams,
     the whole point of the policy-as-data split: a different policy id,
     weight vector, or runtime knob is new *data* through the SAME compiled
     tick, and a batch axis on either sweeps them under ``vmap``.
+
+    The Pallas kernel flags are resolved HERE, once, at trace time
+    (``repro.kernels.resolve_kernel``: compiled kernel on TPU/GPU, jnp
+    reference on CPU under 'auto') — they are static config, part of the
+    jit cache key via ``cfg``, never traced values.
     """
+    use_fw_kernel = resolve_kernel(cfg.delay_kernel)
+    use_wf_kernel = cfg.sparse_flows and resolve_kernel(cfg.waterfill_kernel)
 
     def tick(sim: SimState, tt: jnp.ndarray) -> Tuple[SimState, TickMetrics]:
         sim, n_arrived = phase_arrive(sim)
         sim = phase_schedule(sim, cfg, policy, params)
         sim, comm_rates, mig_rates, flow_active, all_rates = \
-            phase_flows(sim, cfg)
+            phase_flows(sim, cfg, use_kernel=use_wf_kernel)
         sim = phase_communicate(sim, cfg, comm_rates)
         sim = phase_migrate(sim, cfg, mig_rates)
         sim = phase_execute(sim, cfg)
@@ -539,7 +550,7 @@ def make_tick(cfg: SimConfig, policy: PolicyParams, params: RunParams,
         def refresh(net):
             return network.update_delay_matrix(
                 net, n_hosts, n_nodes, mode=cfg.delay_mode,
-                use_kernel=cfg.fw_use_kernel, q_coef=params.queue_coef,
+                use_kernel=use_fw_kernel, q_coef=params.queue_coef,
                 util_weight=policy.weights[W_UTIL],
                 cross_leaf_ms=policy.weights[W_CROSS_LEAF])
 

@@ -429,19 +429,31 @@ def _mathis_from_loss(delay_matrix, p, src, dst, mss_kb, c_mathis):
 
 
 def flow_rates(net: NetState, src: jnp.ndarray, dst: jnp.ndarray,
-               active: jnp.ndarray, n_rounds: int = 8, sparse: bool = True
+               active: jnp.ndarray, n_rounds: int = 8, sparse: bool = True,
+               use_kernel: bool = False
                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Allocate KB/s to each (src_host -> dst_host) flow; also new link util.
 
     ``sparse`` selects the segment-based engine (default); ``sparse=False``
-    runs the dense [F, E] membership oracle.  Returns (rates [F], util [E]).
+    runs the dense [F, E] membership oracle.  ``use_kernel`` routes the
+    sparse allocation through the fused Pallas ``seg_waterfill`` kernel
+    (all waterfilling rounds + Mathis min + link load in one kernel; the
+    unfused jnp chain below is its oracle — docs/kernels.md).  Returns
+    (rates [F], util [E]).
     """
     E = net.link_bw.shape[0]
     src_c = jnp.clip(src, 0, None)
     dst_c = jnp.clip(dst, 0, None)
     bw_kbps = net.link_bw_kbps
 
-    if sparse:
+    if sparse and use_kernel:
+        from repro.kernels.seg_waterfill import ops as wf_ops
+        links = jnp.where(active[:, None], net.path_links[src_c, dst_c], -1)
+        tcp = mathis_cap_sparse(net.delay_matrix, net.path_loss, src_c, dst_c)
+        rates, load = wf_ops.seg_waterfill(
+            links, active, bw_kbps, tcp, n_rounds=n_rounds,
+            local_rate=float(LOCAL_RATE_KBPS), inf=float(INF))
+    elif sparse:
         links = jnp.where(active[:, None], net.path_links[src_c, dst_c], -1)
         fair = max_min_fair_rates_sparse(links, active, bw_kbps, n_rounds)
         tcp = mathis_cap_sparse(net.delay_matrix, net.path_loss, src_c, dst_c)

@@ -1,3 +1,56 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Kernel layer: Pallas implementations of the tick's compute hot spots,
+# each shipped as <name>/<name>.py (kernel) + ops.py (public wrapper with
+# backend dispatch) + ref.py (pure-jnp oracle).  docs/kernels.md has the
+# inventory, the dispatch rules, and the how-to-add-one recipe.
+from __future__ import annotations
+
+import jax
+
+# Backends with a real Pallas lowering: compiled Mosaic on TPU, Triton on
+# GPU.  Everything else (CPU, plugins we don't know) gets the interpreter
+# for correctness tests and the jnp reference for production dispatch.
+COMPILED_BACKENDS = ("tpu", "gpu")
+KERNEL_FLAGS = ("auto", "on", "off")
+
+
+def kernel_backend() -> str:
+    """The backend kernels dispatch on (jax's default backend)."""
+    return jax.default_backend()
+
+
+def use_interpret(backend: str | None = None) -> bool:
+    """Pallas lowering selector: compiled on TPU/GPU, interpreter elsewhere.
+
+    The interpreter executes the kernel as a traced jnp program — exact
+    semantics, none of the speed — so CPU runs can still *test* kernels
+    against their oracles without an accelerator.
+    """
+    backend = kernel_backend() if backend is None else backend
+    return backend not in COMPILED_BACKENDS
+
+
+def resolve_kernel(flag: str | bool, backend: str | None = None) -> bool:
+    """Resolve an 'auto' | 'on' | 'off' config flag to use-the-kernel.
+
+    * ``'on'``  — always the Pallas kernel (interpreter-lowered on CPU;
+      this is the oracle-test mode, NOT a fast path off-accelerator).
+    * ``'off'`` — always the pure-jnp reference.
+    * ``'auto'`` — the kernel exactly where it has a compiled lowering
+      (TPU/GPU); the reference on CPU, where the interpreter would be
+      orders of magnitude slower than the jnp path it emulates.
+
+    Booleans pass through (back-compat with call sites that already
+    resolved).  The result is Python-static: it participates in jit cache
+    keys via SimConfig, never in traced values.
+    """
+    if isinstance(flag, bool):
+        return flag
+    if flag not in KERNEL_FLAGS:
+        raise ValueError(
+            f"kernel flag must be one of {KERNEL_FLAGS}, got {flag!r}")
+    if flag == "on":
+        return True
+    if flag == "off":
+        return False
+    backend = kernel_backend() if backend is None else backend
+    return backend in COMPILED_BACKENDS

@@ -1,14 +1,15 @@
 """jit'd public wrapper for the blocked Floyd-Warshall kernel."""
 from __future__ import annotations
 
-import jax
-
+from repro.kernels import use_interpret
 from repro.kernels.fw_minplus.fw_minplus import floyd_warshall as _fw
 
 
 def floyd_warshall(A, bs: int = 128, interpret: bool | None = None):
-    """APSP over adjacency A.  interpret=None auto-selects: compiled Mosaic
-    on TPU, interpreter everywhere else (CPU correctness mode)."""
+    """APSP over adjacency A.  interpret=None auto-selects the lowering:
+    compiled (Mosaic on TPU, Triton on GPU) wherever Pallas has one,
+    interpreter only on CPU.  (The old ``backend != "tpu"`` rule wrongly
+    sent GPUs through the interpreter.)"""
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        interpret = use_interpret()
     return _fw(A, bs=bs, interpret=interpret)

@@ -1,0 +1,21 @@
+"""Public wrapper for the fused waterfilling kernel (backend dispatch)."""
+from __future__ import annotations
+
+from repro.kernels import use_interpret
+from repro.kernels.seg_waterfill.seg_waterfill import seg_waterfill as _wf
+
+
+def seg_waterfill(links, active, link_bw_kbps, tcp_cap, n_rounds: int = 8,
+                  interpret: bool | None = None, local_rate: float = 4.0e6,
+                  inf: float = 1e9):
+    """Fused waterfilling + Mathis allocation; (rates [F], load [E]).
+
+    interpret=None auto-selects the lowering: compiled (Mosaic on TPU,
+    Triton on GPU), interpreter only on CPU.  Production dispatch on CPU
+    should not land here at all — `repro.kernels.resolve_kernel('auto')`
+    keeps the jnp reference path for CPU runs.
+    """
+    if interpret is None:
+        interpret = use_interpret()
+    return _wf(links, active, link_bw_kbps, tcp_cap, n_rounds=n_rounds,
+               interpret=interpret, local_rate=local_rate, inf=inf)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the fused waterfilling kernel.
+
+Composes the engine's own sparse allocator (`network.max_min_fair_rates_sparse`
+— the production default on CPU) with the Mathis min and the per-link load
+``segment_sum``, i.e. exactly the op chain `network.flow_rates(sparse=True)`
+runs when the kernel is off.  Single source of truth: the oracle IS the
+engine path, so kernel-vs-oracle tests pin the kernel to production
+semantics, not to a reimplementation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import network
+
+
+def seg_waterfill_ref(links: jnp.ndarray, active: jnp.ndarray,
+                      link_bw_kbps: jnp.ndarray, tcp_cap: jnp.ndarray,
+                      n_rounds: int = 8):
+    """(rates [F], load [E]) from [F,4] link ids — the unfused op chain."""
+    E = link_bw_kbps.shape[0]
+    active = active.astype(bool)
+    fair = network.max_min_fair_rates_sparse(links, active, link_bw_kbps,
+                                             n_rounds=n_rounds)
+    rates = jnp.minimum(fair, tcp_cap) * active
+    valid = links >= 0
+    seg = jnp.where(valid, links, E).reshape(-1)
+    w = (rates[:, None] * valid.astype(jnp.float32)).reshape(-1)
+    load = jax.ops.segment_sum(w, seg, num_segments=E + 1)[:E]
+    return rates, load

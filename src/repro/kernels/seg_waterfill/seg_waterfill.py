@@ -1,0 +1,196 @@
+"""Fused ECMP waterfilling + Mathis cap — Pallas kernel.
+
+The sparse flow engine's hottest loop (`network.max_min_fair_rates_sparse`)
+runs ``n_rounds`` progressive-filling rounds, each of which is a chain of
+XLA ops with HBM round-trips between them:
+
+    gather [F,4] link ids -> segment_sum unfrozen counts onto [E]
+      -> fair share per link -> per-flow bound (min over <= 4 links)
+      -> global min -> freeze mask -> alloc update
+      -> segment_sum newly-allocated load -> capacity update
+
+This kernel fuses the WHOLE allocation — all rounds, the leftover-flow
+tail, the Mathis TCP cap, and the final per-link load — into one
+``pallas_call``: every array ([F,4] link ids, [F] flow state, [E] link
+state) is VMEM-resident for the duration, and the only HBM traffic is one
+read of the inputs and one write of (rates [F], load [E]).
+
+TPU adaptation of the two segment reductions (scatter-add and
+gather-then-min have no vectorized Mosaic lowering):
+
+* ``per-link sum``  sum_f w[f] * [link(f) == e]  — blocked one-hot
+  contraction: for each (flow-block, link-block) tile, compare the [bf]
+  flattened link ids against the [be] link-id range (a [bf, be] one-hot
+  tile that never leaves registers/VMEM) and reduce over flows.  This is
+  the standard MXU-friendly segment_sum formulation; cost O(F*4*E/8)
+  ops/round instead of a serialized scatter.
+* ``per-flow bound``  min over a flow's <= 4 links of share[link] — the
+  SAME tiling with a min-reduce over the link axis instead of a
+  sum-reduce over the flow axis.
+
+Numerics: counts are exact (sums of {0,1}); float sums (used capacity,
+link load) are tree-reduced per tile instead of scatter-order — a
+documented ~1 ulp association difference vs `jax.ops.segment_sum`
+(docs/kernels.md), which is why the engine keeps the jnp path as the
+default-on-CPU oracle rather than asserting bit-equality.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _waterfill_kernel(links_ref, active_ref, cap_ref, tcp_ref,
+                      rates_ref, load_ref, *,
+                      n_rounds: int, n_links: int, bf: int, be: int,
+                      local_rate: float, inf: float):
+    """Single-invocation kernel: all refs whole-array VMEM resident.
+
+    ``links`` [F, 4] i32 (pad slots -1), ``active`` [F] i32 mask,
+    ``cap`` [E] f32 link capacity (KB/s), ``tcp`` [F] f32 Mathis ceiling.
+    Outputs: ``rates`` [F] f32, ``load`` [E] f32 per-link allocated KB/s.
+    """
+    links = links_ref[...]
+    active = active_ref[...] != 0
+    cap0 = cap_ref[...]
+    tcp = tcp_ref[...]
+    F = links.shape[0]
+    E = n_links
+    F4 = F * 4
+
+    # flattened tiling frame: pad the flow axis to a block multiple and the
+    # link axis to a block multiple; invalid/pad slots point at E_pad (one
+    # past every link block, so they never match a one-hot tile)
+    F4p = _ceil_to(F4, bf)
+    Ep = _ceil_to(E, be)
+    nb_f = F4p // bf
+    nb_e = Ep // be
+
+    valid = (links >= 0) & active[:, None]                     # [F, 4]
+    w_valid = valid.astype(F32).reshape(F4)
+    lid = jnp.where(valid, links, Ep).reshape(F4)
+    pad_f = F4p - F4
+    if pad_f:
+        w_valid = jnp.concatenate([w_valid, jnp.zeros((pad_f,), F32)])
+        lid = jnp.concatenate([lid, jnp.full((pad_f,), Ep, I32)])
+    cap_p = jnp.concatenate([cap0, jnp.zeros((Ep - E,), F32)]) \
+        if Ep != E else cap0
+
+    iota_e = jax.lax.broadcasted_iota(I32, (1, be), 1)          # [1, be]
+
+    def per_link_sum(per_flow):
+        """[F] flow weights -> [Ep] per-link sums (blocked one-hot)."""
+        w = (jnp.broadcast_to(per_flow[:, None], (F, 4))
+             .reshape(F4).astype(F32))
+        if pad_f:
+            w = jnp.concatenate([w, jnp.zeros((pad_f,), F32)])
+        w = w * w_valid
+
+        def ebody(eb, acc):
+            ids = eb * be + iota_e                              # [1, be]
+
+            def fbody(fb, part):
+                l_blk = jax.lax.dynamic_slice(lid, (fb * bf,), (bf,))
+                w_blk = jax.lax.dynamic_slice(w, (fb * bf,), (bf,))
+                oh = l_blk[:, None] == ids                      # [bf, be]
+                return part + jnp.where(oh, w_blk[:, None], 0.0).sum(0)
+
+            part = jax.lax.fori_loop(0, nb_f, fbody,
+                                     jnp.zeros((be,), F32))
+            return jax.lax.dynamic_update_slice(acc, part, (eb * be,))
+
+        return jax.lax.fori_loop(0, nb_e, ebody, jnp.zeros((Ep,), F32))
+
+    def fair_bound(unfrozen, cap_rem):
+        """Per-flow fair-share bound: min over its valid links of
+        cap_rem[e] / count[e] (INF for flows with no valid link)."""
+        cnt = per_link_sum(unfrozen.astype(F32))
+        share = jnp.where(cnt > 0, cap_rem / jnp.maximum(cnt, 1.0), inf)
+
+        def fbody(fb, bnd):
+            l_blk = jax.lax.dynamic_slice(lid, (fb * bf,), (bf,))
+            v_blk = jax.lax.dynamic_slice(w_valid, (fb * bf,), (bf,)) > 0
+
+            def ebody(eb, b_blk):
+                ids = eb * be + iota_e
+                sh = jax.lax.dynamic_slice(share, (eb * be,), (be,))
+                oh = (l_blk[:, None] == ids) & v_blk[:, None]
+                cand = jnp.where(oh, sh[None, :], inf).min(1)   # [bf]
+                return jnp.minimum(b_blk, cand)
+
+            b_blk = jax.lax.fori_loop(0, nb_e, ebody,
+                                      jnp.full((bf,), inf, F32))
+            return jax.lax.dynamic_update_slice(bnd, b_blk, (fb * bf,))
+
+        b4 = jax.lax.fori_loop(0, nb_f, fbody, jnp.full((F4p,), inf, F32))
+        return b4[:F4].reshape(F, 4).min(1)                     # [F]
+
+    # --- progressive filling, identical round structure to the jnp ref ---
+    alloc0 = jnp.where(active, local_rate, 0.0)
+    frozen0 = active & ~valid.any(1)          # no-link flows: local rate
+
+    def round_body(_, carry):
+        alloc, frozen, cap_rem = carry
+        unfrozen = active & ~frozen
+        bound = jnp.where(unfrozen, fair_bound(unfrozen, cap_rem), inf)
+        m = bound.min()
+        newly = unfrozen & (bound <= m * 1.000001 + 1e-6)
+        new_alloc = jnp.where(newly, jnp.minimum(bound, local_rate), alloc)
+        used = per_link_sum(jnp.where(newly, new_alloc, 0.0))
+        return (new_alloc, frozen | newly,
+                jnp.maximum(cap_rem - used, 0.0))
+
+    alloc, frozen, cap_rem = jax.lax.fori_loop(
+        0, n_rounds, round_body, (alloc0, frozen0, cap_p))
+
+    # leftover tail (more bottleneck levels than rounds): current fair share
+    leftover = active & ~frozen
+    tail = jnp.minimum(fair_bound(leftover, cap_rem), local_rate)
+    alloc = jnp.where(leftover, tail, alloc)
+    fair = jnp.where(active, alloc, 0.0)
+
+    # fused Mathis arm + final link load
+    rates = jnp.minimum(fair, tcp) * active
+    rates_ref[...] = rates
+    load_ref[...] = per_link_sum(rates)[:E]
+
+
+@functools.partial(jax.jit, static_argnames=("n_rounds", "bf", "be",
+                                             "interpret", "local_rate",
+                                             "inf"))
+def seg_waterfill(links: jnp.ndarray, active: jnp.ndarray,
+                  link_bw_kbps: jnp.ndarray, tcp_cap: jnp.ndarray,
+                  n_rounds: int = 8, bf: int = 2048, be: int = 256,
+                  interpret: bool = True, local_rate: float = 4.0e6,
+                  inf: float = 1e9):
+    """Fused max-min-fair + Mathis allocation.  Returns (rates [F], load [E]).
+
+    ``links`` [F, 4] i32 ECMP link ids (-1 padded), ``active`` [F] bool/i32,
+    ``link_bw_kbps`` [E] f32, ``tcp_cap`` [F] f32 per-flow Mathis ceiling
+    (use ``inf`` for loss-free paths).  ``bf``/``be`` tile the flattened
+    flow-slot and link axes; [bf, be] is the one-hot working tile.
+    """
+    F = links.shape[0]
+    E = link_bw_kbps.shape[0]
+    bf = min(bf, _ceil_to(F * 4, 8))
+    be = min(be, _ceil_to(E, 8))
+    kernel = functools.partial(
+        _waterfill_kernel, n_rounds=n_rounds, n_links=E, bf=bf, be=be,
+        local_rate=local_rate, inf=inf)
+    return pl.pallas_call(
+        kernel,
+        out_shape=(jax.ShapeDtypeStruct((F,), jnp.float32),
+                   jax.ShapeDtypeStruct((E,), jnp.float32)),
+        interpret=interpret, name="seg_waterfill",
+    )(links.astype(I32), active.astype(I32),
+      link_bw_kbps.astype(F32), tcp_cap.astype(F32))

@@ -71,6 +71,7 @@ def parse_weights(arg: str | None) -> dict[str, float] | None:
 
 def run_one(policy_name: str, cfg: SimConfig, spec, sim0, params, csv=None,
             weights=None):
+    from repro.kernels import kernel_backend, resolve_kernel
     t0 = time.time()
     final, metrics = run_sim(sim0, cfg, get_policy(policy_name, weights),
                              spec.n_hosts, spec.n_nodes, cfg.horizon,
@@ -79,6 +80,17 @@ def run_one(policy_name: str, cfg: SimConfig, spec, sim0, params, csv=None,
     rep = summarize(final, metrics)
     rep["policy"] = policy_name
     rep["wall_s"] = round(time.time() - t0, 2)
+    # self-describing rows: which backend ran this, and whether the delay /
+    # waterfill hot paths went through their Pallas kernels (flag + what it
+    # resolved to on this backend)
+    rep["backend"] = kernel_backend()
+    rep["delay_mode"] = cfg.delay_mode
+    rep["delay_kernel"] = cfg.delay_kernel
+    rep["delay_kernel_active"] = (cfg.delay_mode == "fw"
+                                  and resolve_kernel(cfg.delay_kernel))
+    rep["waterfill_kernel"] = cfg.waterfill_kernel
+    rep["waterfill_kernel_active"] = (cfg.sparse_flows
+                                      and resolve_kernel(cfg.waterfill_kernel))
     if csv:
         to_csv(metrics, csv)
     return rep
@@ -105,6 +117,18 @@ def main() -> None:
     ap.add_argument("--sequential", action="store_true",
                     help="run the sequential reference placement path "
                          "instead of the batched round")
+    ap.add_argument("--delay-mode", default="path", choices=["path", "fw"],
+                    help="delay refresh: ECMP path sum or full APSP "
+                         "(the fw_minplus kernel's algebra)")
+    ap.add_argument("--delay-kernel", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="fw APSP Pallas kernel: auto = compiled on "
+                         "TPU/GPU / jnp ref on CPU, on = force kernel "
+                         "(interpreter on CPU), off = jnp ref everywhere")
+    ap.add_argument("--waterfill-kernel", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="fused waterfilling Pallas kernel (same dispatch "
+                         "semantics as --delay-kernel)")
     ap.add_argument("--weights", default=None,
                     help="by-name weight overrides for the chosen policy, "
                          "e.g. 'cross_leaf=0.5,row_coloc=0.3' "
@@ -119,7 +143,10 @@ def main() -> None:
           dict(n_containers=args.containers, n_tasks=args.containers,
                n_jobs=max(10, args.containers // 3)))
     cfg = SimConfig(horizon=args.horizon,
-                    batched_placement=not args.sequential, **wl)
+                    batched_placement=not args.sequential,
+                    delay_mode=args.delay_mode,
+                    delay_kernel=args.delay_kernel,
+                    waterfill_kernel=args.waterfill_kernel, **wl)
     spec, sim0, params = build_once(cfg, bw=args.bw, loss=args.loss,
                                     seed=args.seed, workload=args.workload,
                                     n_hosts=args.hosts)

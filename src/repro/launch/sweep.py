@@ -261,25 +261,48 @@ def main() -> None:
                     help="summary metric for the grouped table")
     ap.add_argument("--out", default=None,
                     help="write per-cell summary rows as JSON")
+    ap.add_argument("--delay-mode", default="path", choices=["path", "fw"],
+                    help="delay refresh: ECMP path sum or full APSP")
+    ap.add_argument("--delay-kernel", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="fw APSP Pallas kernel (auto: compiled on TPU/GPU, "
+                         "jnp ref on CPU)")
+    ap.add_argument("--waterfill-kernel", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="fused waterfilling Pallas kernel (same semantics)")
     args = ap.parse_args()
 
     policies = (list_policies() if args.policies == "all"
                 else args.policies.split(","))
-    cfg = SimConfig(horizon=args.horizon)
+    cfg = SimConfig(horizon=args.horizon, delay_mode=args.delay_mode,
+                    delay_kernel=args.delay_kernel,
+                    waterfill_kernel=args.waterfill_kernel)
     n_leaf = max(4, args.hosts // 5)
     res = run_sweep(policies=policies, seeds=range(args.seeds), cfg=cfg,
                     n_hosts=args.hosts, n_spine=max(2, n_leaf // 4),
                     n_leaf=n_leaf, devices=args.devices)
     cells = len(res.policies) * len(res.scenarios) * len(res.seeds)
+    from repro.kernels import kernel_backend, resolve_kernel
+    backend = kernel_backend()
+    kernel_note = (f"delay={args.delay_mode}/{args.delay_kernel}"
+                   f"(-> {'kernel' if resolve_kernel(args.delay_kernel) else 'ref'}), "
+                   f"waterfill={args.waterfill_kernel}"
+                   f"(-> {'kernel' if resolve_kernel(args.waterfill_kernel) else 'ref'})")
     print(f"# {cells} cells ({len(res.policies)} policies x "
           f"{len(res.scenarios)} scenarios x {len(res.seeds)} seeds) in "
           f"{res.wall_s}s, {res.compile_cache_misses} compilation(s), "
-          f"{res.n_devices} device(s)")
+          f"{res.n_devices} device(s), backend={backend}, {kernel_note}")
     print(res.table(args.table))
     if args.out:
         from repro.core.report import json_clean
+        rows = res.summaries()
+        for row in rows:   # self-describing rows: backend + kernel dispatch
+            row["backend"] = backend
+            row["delay_mode"] = args.delay_mode
+            row["delay_kernel"] = args.delay_kernel
+            row["waterfill_kernel"] = args.waterfill_kernel
         with open(args.out, "w") as f:
-            json.dump(json_clean(res.summaries()), f, indent=1)
+            json.dump(json_clean(rows), f, indent=1)
         print(f"# wrote {args.out}")
 
 

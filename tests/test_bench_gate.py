@@ -175,6 +175,82 @@ def test_gate_fails_on_tune_per_cell_regression():
     assert any("tune per-cell" in m for m in failures), failures
 
 
+def test_gate_skips_cross_backend_points():
+    """A cpu CI runner gated against a gpu-refreshed baseline must SKIP
+    those point comparisons (loud note), not fail them — wall-clock across
+    backends is meaningless at any tolerance (ISSUE 6)."""
+    base = load_base()
+    quick = quick_from(base)
+    for p in base["points"]:
+        p["backend"] = "gpu"
+    for p in quick["points"]:
+        p["backend"] = "cpu"
+        p["ticks_per_s"] = round(p["ticks_per_s"] * 0.01, 3)  # 100x "slower"
+    failures = check(quick, base, TOL)
+    assert not any("ticks_per_s at" in m for m in failures), failures
+
+
+def test_gate_skips_cross_backend_sweep_and_tune():
+    base = load_base()
+    quick = quick_from(base)
+    base["sweep_quick"]["backend"] = "gpu"
+    base["tune"]["backend"] = "gpu"
+    quick["sweep"]["backend"] = "cpu"
+    quick["tune"]["backend"] = "cpu"
+    quick["sweep"]["sweep_steady_s"] = round(
+        quick["sweep"]["sweep_steady_s"] * 10, 2)
+    quick["tune"]["tune_steady_s"] = round(
+        quick["tune"]["tune_steady_s"] * 10, 2)
+    failures = check(quick, base, TOL)
+    assert not any("per-cell" in m for m in failures), failures
+
+
+def test_gate_still_compares_same_backend():
+    """Matching backends on both sides must keep gating (the guard only
+    skips MISmatches)."""
+    base = load_base()
+    quick = quick_from(base)
+    for p in base["points"]:
+        p["backend"] = "cpu"
+    for p in quick["points"]:
+        p["backend"] = "cpu"
+    quick["points"][0]["ticks_per_s"] = round(
+        quick["points"][0]["ticks_per_s"] * (1 - TOL - 0.2), 1)
+    failures = check(quick, base, TOL)
+    assert any("regression" in m and "ticks_per_s" in m
+               for m in failures), failures
+
+
+def test_gate_legacy_baseline_without_backend_still_gates():
+    """Pre-ladder baselines have no backend field; they must keep gating
+    (assumed comparable) rather than silently skipping everything."""
+    base = load_base()
+    quick = quick_from(base)
+    for p in base["points"]:
+        p.pop("backend", None)
+    for p in quick["points"]:
+        p["backend"] = "cpu"
+    quick["points"][0]["ticks_per_s"] = round(
+        quick["points"][0]["ticks_per_s"] * (1 - TOL - 0.2), 1)
+    failures = check(quick, base, TOL)
+    assert any("regression" in m and "ticks_per_s" in m
+               for m in failures), failures
+
+
+def test_point_key_separates_kernel_variants():
+    """A kernels='auto' fw point must never be gated against the
+    kernels='off' twin — they are different measurements by construction."""
+    from benchmarks.check_regression import point_key
+    p_on = {"n_hosts": 500, "n_containers": 3000, "mode": "sparse",
+            "delay_mode": "fw", "kernels": "auto"}
+    p_off = dict(p_on, kernels="off")
+    legacy = {"n_hosts": 500, "n_containers": 3000, "mode": "sparse"}
+    assert point_key(p_on) != point_key(p_off)
+    # pre-ladder rows keep their identity: defaults are path/off
+    assert point_key(legacy) == point_key(dict(legacy, delay_mode="path",
+                                               kernels="off"))
+
+
 def test_gate_enforces_branch_free_tax_ceiling():
     """The ISSUE 5 acceptance number is a hard gate: a quick run whose
     vmap_cell_tax blows past 1.25 * (1 + tol) fails even if the committed

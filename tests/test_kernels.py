@@ -4,36 +4,195 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.kernels import resolve_kernel, use_interpret
 from repro.kernels.flash_attention import ops as fa_ops
 from repro.kernels.flash_attention.ref import attention as fa_ref
 from repro.kernels.fw_minplus import ops as fw_ops
 from repro.kernels.fw_minplus.ref import floyd_warshall_ref
+from repro.kernels.seg_waterfill import ops as wf_ops
+from repro.kernels.seg_waterfill.ref import seg_waterfill_ref
 from repro.kernels.ssd_scan import ops as ssd_ops
 from repro.kernels.ssd_scan.ref import ssd_chunked_ref
 
 rng = np.random.default_rng(42)
+
+INF = 1e9
+
+
+def random_adjacency(n, p_edge=0.5, dyadic=False):
+    """Symmetric adjacency with INF non-edges and a zero diagonal.
+
+    ``dyadic=True`` draws weights from multiples of 1/64 — path sums of
+    dyadic rationals are EXACT in f32, so the blocked kernel's different
+    add association cannot round differently and kernel == ref bit-for-bit.
+    Arbitrary floats get the documented ~1 ulp tolerance instead
+    (docs/kernels.md).
+    """
+    if dyadic:
+        A = (rng.integers(8, 512, (n, n)) / 64.0).astype(np.float32)
+    else:
+        A = rng.uniform(0.1, 10, (n, n)).astype(np.float32)
+    A[rng.uniform(size=(n, n)) < 1 - p_edge] = INF
+    A = np.minimum(A, A.T)
+    np.fill_diagonal(A, 0.0)
+    return A
 
 
 # --- fw_minplus -------------------------------------------------------------
 @pytest.mark.parametrize("n,bs", [(8, 4), (24, 8), (64, 16), (100, 32),
                                   (128, 64), (30, 16)])
 def test_fw_matches_ref(n, bs):
-    A = rng.uniform(0.1, 10, (n, n)).astype(np.float32)
-    A[rng.uniform(size=(n, n)) < 0.5] = 1e9
-    A = np.minimum(A, A.T)
-    np.fill_diagonal(A, 0.0)
+    A = random_adjacency(n)
     D_ref = np.asarray(floyd_warshall_ref(jnp.asarray(A)))
     D_k = np.asarray(fw_ops.floyd_warshall(jnp.asarray(A), bs=bs))
     np.testing.assert_allclose(D_k, D_ref, rtol=1e-5, atol=1e-4)
 
 
+@pytest.mark.parametrize("n,bs", [(8, 4), (24, 8), (37, 16), (64, 16),
+                                  (100, 32)])
+def test_fw_bit_exact_on_dyadic_weights(n, bs):
+    """On dyadic-rational weights every path sum is exact, so the blocked
+    pivot decomposition must agree with the scan ref BIT-FOR-BIT — the
+    ISSUE 6 oracle contract (fp-associativity excuses don't apply here)."""
+    A = random_adjacency(n, dyadic=True)
+    D_ref = np.asarray(floyd_warshall_ref(jnp.asarray(A)))
+    D_k = np.asarray(fw_ops.floyd_warshall(jnp.asarray(A), bs=bs))
+    np.testing.assert_array_equal(D_k, D_ref)
+
+
+def test_fw_non_block_multiple_padding_is_invisible():
+    """N not a multiple of bs: the INF/0-diag padding must not leak into
+    the real block (shortest paths never route through pad nodes)."""
+    A = random_adjacency(45, dyadic=True)
+    D_ref = np.asarray(floyd_warshall_ref(jnp.asarray(A)))
+    for bs in (8, 16, 32, 64):
+        D_k = np.asarray(fw_ops.floyd_warshall(jnp.asarray(A), bs=bs))
+        np.testing.assert_array_equal(D_k, D_ref)
+
+
 def test_fw_disconnected_stays_inf():
-    A = np.full((12, 12), 1e9, np.float32)
+    A = np.full((12, 12), INF, np.float32)
     np.fill_diagonal(A, 0)
     A[0, 1] = A[1, 0] = 1.0          # only one edge
     D = np.asarray(fw_ops.floyd_warshall(jnp.asarray(A), bs=4))
     assert D[0, 1] == 1.0
     assert D[0, 2] >= 1e8            # unreachable remains "inf"
+
+
+def test_fw_matches_ref_under_vmap():
+    """The sweep vmaps the delay refresh over grid cells; the kernel must
+    agree with the vmapped ref (bit-for-bit on dyadic weights)."""
+    batch = np.stack([random_adjacency(24, dyadic=True) for _ in range(3)])
+    A = jnp.asarray(batch)
+    D_ref = np.asarray(jax.vmap(floyd_warshall_ref)(A))
+    D_k = np.asarray(jax.vmap(
+        lambda a: fw_ops.floyd_warshall(a, bs=8))(A))
+    np.testing.assert_array_equal(D_k, D_ref)
+
+
+# --- kernel dispatch --------------------------------------------------------
+def test_resolve_kernel_flags():
+    assert resolve_kernel("on", backend="cpu") is True
+    assert resolve_kernel("off", backend="tpu") is False
+    assert resolve_kernel("auto", backend="tpu") is True
+    assert resolve_kernel("auto", backend="gpu") is True   # compiled Triton,
+    assert resolve_kernel("auto", backend="cpu") is False  # NOT interpreter
+    assert resolve_kernel(True, backend="cpu") is True
+    with pytest.raises(ValueError):
+        resolve_kernel("maybe")
+
+
+def test_use_interpret_only_on_cpu():
+    # the satellite-1 fix: GPU gets the compiled Triton lowering, the
+    # interpreter is strictly a CPU test vehicle
+    assert use_interpret(backend="cpu") is True
+    assert use_interpret(backend="gpu") is False
+    assert use_interpret(backend="tpu") is False
+
+
+# --- seg_waterfill ----------------------------------------------------------
+def random_flows(F, E, seed=0, p_active=0.8, p_local=0.1, p_lossy=0.3):
+    r = np.random.default_rng(seed)
+    links = r.integers(0, E, (F, 4)).astype(np.int32)
+    # ECMP lists are -1 padded; local (same-host) flows have NO links
+    n_valid = r.integers(0, 5, F)
+    links[np.arange(4)[None, :] >= n_valid[:, None]] = -1
+    links[r.uniform(size=F) < p_local] = -1
+    active = (r.uniform(size=F) < p_active)
+    bw = r.uniform(1e3, 1e5, E).astype(np.float32)
+    tcp = np.where(r.uniform(size=F) < p_lossy,
+                   r.uniform(10, 1e4, F), INF).astype(np.float32)
+    return (jnp.asarray(links), jnp.asarray(active), jnp.asarray(bw),
+            jnp.asarray(tcp))
+
+
+def assert_waterfill_matches(links, active, bw, tcp, n_rounds=8):
+    r_ref, l_ref = seg_waterfill_ref(links, active, bw, tcp,
+                                     n_rounds=n_rounds)
+    r_k, l_k = wf_ops.seg_waterfill(links, active, bw, tcp,
+                                    n_rounds=n_rounds)
+    # rates: identical op order per flow -> bit-for-bit; load: tree-reduce
+    # per tile vs segment_sum scatter order -> documented ~1 ulp tolerance
+    np.testing.assert_array_equal(np.asarray(r_k), np.asarray(r_ref))
+    np.testing.assert_allclose(np.asarray(l_k), np.asarray(l_ref),
+                               rtol=2e-6, atol=1e-3)
+
+
+@pytest.mark.parametrize("F,E,seed", [(5, 7, 0), (33, 16, 1), (200, 40, 2),
+                                      (64, 9, 3), (128, 130, 4)])
+def test_waterfill_matches_ref(F, E, seed):
+    assert_waterfill_matches(*random_flows(F, E, seed=seed))
+
+
+def test_waterfill_no_active_flows():
+    links, _, bw, tcp = random_flows(16, 8, seed=5)
+    active = jnp.zeros(16, bool)
+    r_k, l_k = wf_ops.seg_waterfill(links, active, bw, tcp)
+    assert (np.asarray(r_k) == 0).all()
+    assert (np.asarray(l_k) == 0).all()
+    assert_waterfill_matches(links, active, bw, tcp)
+
+
+def test_waterfill_local_flows_get_local_rate():
+    """Flows with no links (same-host loopback) freeze at the local rate
+    (capped by Mathis), and contribute nothing to any link's load."""
+    links = jnp.full((6, 4), -1, jnp.int32)
+    active = jnp.ones(6, bool)
+    bw = jnp.full(4, 1e4, jnp.float32)
+    tcp = jnp.asarray([INF, INF, 100.0, INF, 5e6, 1e3], jnp.float32)
+    r_k, l_k = wf_ops.seg_waterfill(links, active, bw, tcp)
+    np.testing.assert_array_equal(
+        np.asarray(r_k), np.minimum(np.asarray(tcp), 4.0e6))
+    assert (np.asarray(l_k) == 0).all()
+    assert_waterfill_matches(links, active, bw, tcp)
+
+
+def test_waterfill_all_lossless_tcp_inf():
+    links, active, bw, _ = random_flows(40, 12, seed=6)
+    tcp = jnp.full(40, INF, jnp.float32)
+    assert_waterfill_matches(links, active, bw, tcp)
+
+
+def test_waterfill_fewer_rounds_than_bottlenecks():
+    """n_rounds=1 exercises the leftover tail (flows never frozen get the
+    current fair share) — same rule in kernel and ref."""
+    assert_waterfill_matches(*random_flows(50, 6, seed=7), n_rounds=1)
+
+
+def test_waterfill_matches_ref_under_vmap():
+    """The sweep's grid vmap batches every flow-engine input; the kernel
+    must stay equal to the ref under vmap (grid-less pallas_call)."""
+    packs = [random_flows(48, 10, seed=s) for s in (8, 9, 10)]
+    links = jnp.stack([p[0] for p in packs])
+    active = jnp.stack([p[1] for p in packs])
+    bw = jnp.stack([p[2] for p in packs])
+    tcp = jnp.stack([p[3] for p in packs])
+    r_ref, l_ref = jax.vmap(seg_waterfill_ref)(links, active, bw, tcp)
+    r_k, l_k = jax.vmap(
+        lambda *a: wf_ops.seg_waterfill(*a))(links, active, bw, tcp)
+    np.testing.assert_array_equal(np.asarray(r_k), np.asarray(r_ref))
+    np.testing.assert_allclose(np.asarray(l_k), np.asarray(l_ref),
+                               rtol=2e-6, atol=1e-3)
 
 
 # --- flash attention ---------------------------------------------------------

@@ -1,0 +1,167 @@
+"""Kernel dispatch through the PRODUCTION tick (ISSUE 6 acceptance).
+
+The per-kernel oracle sweeps live in test_kernels.py; these tests pin the
+*integration*: ``update_delay_matrix(mode='fw', use_kernel=True)`` and the
+``flow_rates`` kernel arm against their jnp paths, the SimConfig flag
+resolution, and a full ``run_sim`` / vmapped-sweep run with kernels forced
+'on' (interpreter-lowered on CPU) vs 'off' at tiny scale.
+
+Tolerances: the fw kernel's blocked pivot decomposition associates path
+sums differently from the scan ref (~1 ulp on arbitrary floats — exact on
+dyadic weights, see test_kernels.py); the fused waterfill kernel's link
+load is tree-reduced per tile vs segment_sum order.  End-to-end runs gate
+on behavioral equality (placements, completions, costs) plus tight
+allclose on the float state, not bit-equality of every float.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (SimConfig, get_policy, init_sim, paper_workload,
+                        run_sim)
+from repro.core import network
+from repro.core.datacenter import build_paper_network, scaled_hosts
+
+
+def small_net(n_hosts=12, n_leaf=4, seed=0, congest=True):
+    cfg = SimConfig()
+    spec, net = build_paper_network(cfg, n_hosts=n_hosts, n_leaf=n_leaf)
+    if congest:  # non-trivial congestion so the refresh has signal
+        r = np.random.default_rng(seed)
+        util = r.uniform(0.0, 0.9, net.link_util.shape).astype(np.float32)
+        net = net._replace(link_util=jnp.asarray(util))
+    return spec, net
+
+
+def test_update_delay_matrix_fw_kernel_matches_ref():
+    spec, net = small_net()
+    out_ref = network.update_delay_matrix(net, spec.n_hosts, spec.n_nodes,
+                                          mode="fw", use_kernel=False)
+    out_k = network.update_delay_matrix(net, spec.n_hosts, spec.n_nodes,
+                                        mode="fw", use_kernel=True)
+    np.testing.assert_allclose(np.asarray(out_k.delay_matrix),
+                               np.asarray(out_ref.delay_matrix),
+                               rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(out_k.comm_cost),
+                               np.asarray(out_ref.comm_cost),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_update_delay_matrix_fw_kernel_matches_ref_under_vmap():
+    nets = [small_net(seed=s)[1] for s in range(3)]
+    spec, _ = small_net()
+    batched = jax.tree.map(lambda *xs: jnp.stack(xs), *nets)
+
+    def refresh(net, use_kernel):
+        return network.update_delay_matrix(
+            net, spec.n_hosts, spec.n_nodes, mode="fw",
+            use_kernel=use_kernel).delay_matrix
+
+    d_ref = jax.vmap(lambda n: refresh(n, False))(batched)
+    d_k = jax.vmap(lambda n: refresh(n, True))(batched)
+    np.testing.assert_allclose(np.asarray(d_k), np.asarray(d_ref),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_flow_rates_kernel_arm_matches_jnp():
+    spec, net = small_net()
+    r = np.random.default_rng(1)
+    F = 40
+    src = jnp.asarray(r.integers(0, spec.n_hosts, F), jnp.int32)
+    dst = jnp.asarray(r.integers(0, spec.n_hosts, F), jnp.int32)
+    active = jnp.asarray(r.uniform(size=F) < 0.7)
+    rates_ref, util_ref = network.flow_rates(net, src, dst, active,
+                                             use_kernel=False)
+    rates_k, util_k = network.flow_rates(net, src, dst, active,
+                                         use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(rates_k),
+                                  np.asarray(rates_ref))
+    np.testing.assert_allclose(np.asarray(util_k), np.asarray(util_ref),
+                               rtol=2e-6, atol=1e-6)
+
+
+def tiny_cfg(**kw):
+    base = dict(n_jobs=8, n_tasks=24, n_containers=24, horizon=12,
+                arrival_window=6.0, placements_per_tick=8,
+                migrations_per_tick=2, delay_mode="fw")
+    base.update(kw)
+    return SimConfig(**base)
+
+
+def run_tiny(cfg, n_hosts=12, seed=0):
+    hosts = scaled_hosts(n_hosts, 4)
+    spec, net = build_paper_network(cfg, n_hosts=n_hosts, n_leaf=4)
+    sim0 = init_sim(hosts, paper_workload(cfg, seed=seed), net, seed=seed)
+    return run_sim(sim0, cfg, get_policy("netaware"), spec.n_hosts,
+                   spec.n_nodes, cfg.horizon)
+
+
+@pytest.mark.parametrize("policy_irrelevant_seed", [0, 3])
+def test_run_sim_kernels_on_equals_off(policy_irrelevant_seed):
+    """Full tick scan across a delay refresh (horizon 12 > interval 10):
+    kernels forced 'on' (interpreter on CPU) must reproduce the 'off' run's
+    behavior — same placements, completions, cost — with float state tight."""
+    seed = policy_irrelevant_seed
+    f_off, m_off = run_tiny(tiny_cfg(delay_kernel="off",
+                                     waterfill_kernel="off"), seed=seed)
+    f_on, m_on = run_tiny(tiny_cfg(delay_kernel="on",
+                                   waterfill_kernel="on"), seed=seed)
+    np.testing.assert_array_equal(np.asarray(f_on.containers.status),
+                                  np.asarray(f_off.containers.status))
+    np.testing.assert_array_equal(np.asarray(f_on.containers.host),
+                                  np.asarray(f_off.containers.host))
+    np.testing.assert_allclose(np.asarray(f_on.total_cost),
+                               np.asarray(f_off.total_cost), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(f_on.net.delay_matrix),
+                               np.asarray(f_off.net.delay_matrix),
+                               rtol=1e-5, atol=1e-4)
+    for a, b in zip(jax.tree.leaves(m_on), jax.tree.leaves(m_off)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-4)
+
+
+def test_run_sim_auto_resolves_to_ref_on_cpu():
+    """'auto' on CPU must take the jnp reference path — bit-identical to an
+    explicit 'off' run (the dispatch rule benchmarks rely on: CPU rows with
+    kernels='auto' measure the production ref, not the interpreter)."""
+    if jax.default_backend() != "cpu":
+        pytest.skip("dispatch-identity check is CPU-specific")
+    f_auto, _ = run_tiny(tiny_cfg(delay_kernel="auto",
+                                  waterfill_kernel="auto"))
+    f_off, _ = run_tiny(tiny_cfg(delay_kernel="off",
+                                 waterfill_kernel="off"))
+    for a, b in zip(jax.tree.leaves(f_auto), jax.tree.leaves(f_off)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_vmapped_sweep_with_kernels_on_matches_off():
+    """Kernels must survive the sweep's seed vmap inside the full tick."""
+    from repro.launch.sweep import run_sim_vmapped
+
+    def batch(cfg, seeds=(0, 1)):
+        hosts = scaled_hosts(12, 4)
+        spec, net = build_paper_network(cfg, n_hosts=12, n_leaf=4)
+        sims = [init_sim(hosts, paper_workload(cfg, seed=s), net, seed=s)
+                for s in seeds]
+        sims = jax.tree.map(lambda *xs: jnp.stack(xs), *sims)
+        return run_sim_vmapped(sims, cfg, get_policy("netaware"),
+                               spec.n_hosts, spec.n_nodes, cfg.horizon)
+
+    f_on, _ = batch(tiny_cfg(delay_kernel="on", waterfill_kernel="on"))
+    f_off, _ = batch(tiny_cfg(delay_kernel="off", waterfill_kernel="off"))
+    np.testing.assert_array_equal(np.asarray(f_on.containers.status),
+                                  np.asarray(f_off.containers.status))
+    np.testing.assert_allclose(np.asarray(f_on.net.delay_matrix),
+                               np.asarray(f_off.net.delay_matrix),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_simconfig_rejects_nothing_but_cache_keys_change():
+    """Kernel flags are static config: two flags -> two distinct configs
+    (hashable, usable as jit cache keys), same shapes."""
+    a = tiny_cfg(delay_kernel="auto")
+    b = dataclasses.replace(a, delay_kernel="on")
+    assert a != b and hash(a) != hash(b)
