@@ -13,7 +13,17 @@ only checking that the JSON parses:
 * the quick sweep's per-cell steady time must not exceed the committed
   ``sweep_quick`` per-cell time by more than ``tol`` (the full-mode bench
   records the quick-scale grid exactly so the two runs are comparable);
-* the sweep must still compile exactly once.
+* the sweep must still compile exactly once;
+* the ``longhorizon`` streaming entry (PR 7) is gated on MEMORY
+  absolutely: the quick streaming child's subprocess peak RSS must stay
+  under the committed ``ceiling_mb`` — the fixed ceiling the committed
+  full bench demonstrated the stacked path exceeding
+  (``stacked.exceeded_ceiling`` must still read true in the baseline, so
+  a baseline refresh cannot silently drop the demonstration) — and its
+  ticks/s joins the skew-normalized pack.  RSS is a same-backend,
+  same-machine-class number; cross-backend pairs skip like the rest, and
+  the ceiling itself already carries 1.25x headroom over the measured
+  streaming peak.
 
 Machine-skew correction: the committed baseline was measured on whatever
 box last ran the full bench, and a CI runner can legitimately be uniformly
@@ -176,6 +186,51 @@ def check(quick: dict, base: dict, tol: float) -> list[str]:
             ratios.append((
                 f"tune per-cell steady ({got:.3f}s vs committed "
                 f"{ref:.3f}s)", ref / got))
+
+    # -- longhorizon streaming: absolute memory ceiling + speed pack --------
+    lh = quick.get("longhorizon") or {}
+    ref_lh = base.get("longhorizon")
+    if ref_lh is None:
+        failures.append(
+            "committed BENCH_engine.json has no 'longhorizon' entry; "
+            "re-run the full bench to record the streaming-memory "
+            "reference (ceiling + stacked crossing)")
+    else:
+        if not (ref_lh.get("stacked") or {}).get("exceeded_ceiling"):
+            failures.append(
+                "committed longhorizon baseline does not demonstrate the "
+                "stacked path exceeding ceiling_mb "
+                f"({ref_lh.get('stacked')}); the streaming memory claim "
+                "is ungated — re-run the full bench")
+        q_stream = lh.get("stream") or {}
+        r_stream = ref_lh.get("stream") or {}
+        if not lh:
+            failures.append("no 'longhorizon' entry in the quick run")
+        elif backends_differ(q_stream, r_stream):
+            print(f"note: skipping cross-backend longhorizon comparison: "
+                  f"quick ran on {q_stream.get('backend')!r}, committed "
+                  f"on {r_stream.get('backend')!r}")
+        else:
+            grid = ("n_hosts", "n_containers", "seeds", "chunk")
+            ceiling = ref_lh.get("ceiling_mb")
+            if any(lh.get(k) != ref_lh.get(k) for k in grid):
+                failures.append(
+                    f"longhorizon grid {[lh.get(k) for k in grid]} != "
+                    f"committed {[ref_lh.get(k) for k in grid]}")
+            elif ceiling and q_stream.get("max_rss_mb"):
+                if q_stream["max_rss_mb"] > ceiling:
+                    failures.append(
+                        f"regression: streaming peak RSS "
+                        f"{q_stream['max_rss_mb']} MB exceeds the "
+                        f"committed ceiling {ceiling} MB — the O(state) "
+                        f"memory property broke")
+                if q_stream.get("ticks_per_s", 0) > 0 \
+                        and r_stream.get("ticks_per_s", 0) > 0:
+                    ratios.append((
+                        f"longhorizon stream ticks_per_s "
+                        f"({q_stream['ticks_per_s']} vs committed "
+                        f"{r_stream['ticks_per_s']})",
+                        q_stream["ticks_per_s"] / r_stream["ticks_per_s"]))
 
     # -- one-sided gate on skew-normalized ratios ---------------------------
     if ratios:

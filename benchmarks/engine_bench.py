@@ -26,6 +26,14 @@ acceptance number (target <= 1.25 at the 24-cell 500h/3000c grid) — and a
 (``repro.launch.tune``: weight samples on the policy batch axis, one
 compile) so the learned-weights path is regression-gated too.
 
+ISSUE 7 (streaming engine) adds the ``longhorizon`` entry
+(``benchmarks/longhorizon_bench.py``): subprocess max-RSS of the chunked
+streaming run vs the stacked per-tick path at a long horizon.  Full mode
+demonstrates the crossing — streaming completes under a fixed
+``ceiling_mb`` the stacked run's scan-ys buffer exceeds (the stacked child
+is killed at the crossing by a VmHWM poll); quick mode re-measures the
+streaming side only, gated absolutely against the committed ceiling.
+
 ISSUE 6 turns this into a backend LADDER: every point records the JAX
 ``backend``/``device`` it ran on, and the full bench adds kernel-on
 ('auto') vs kernel-off ('off') variants of the 500h/3000c and 2000h/6000c
@@ -294,6 +302,8 @@ def bench_engine(quick: bool = False):
         sweep = measure_sweep_point(500, 3000, horizon=20, with_loop=True)
         sweep_quick = measure_sweep_point(**QUICK_SWEEP, with_loop=False)
     tune = measure_tune_point(**TUNE_SMOKE)
+    from benchmarks.longhorizon_bench import measure_longhorizon
+    longhorizon = measure_longhorizon(quick=quick)
     backend = jax.default_backend()
     sweep["backend"] = backend
     tune["backend"] = backend
@@ -306,6 +316,7 @@ def bench_engine(quick: bool = False):
         "sparse_speedup": speedup,
         "sweep": sweep,
         "tune": tune,
+        "longhorizon": longhorizon,
     }
     if sweep_quick is not None:
         sweep_quick["backend"] = backend
@@ -341,6 +352,13 @@ def bench_engine(quick: bool = False):
          f"compiled {tune['compile_cache_misses']}x",
          f"cold {tune['tune_cold_s']}s, best/incumbent "
          f"{tune['best_vs_incumbent']}x on {tune['objective']}"),
+        (f"longhorizon streaming @ {longhorizon['horizon']} ticks x "
+         f"{longhorizon['seeds']} seeds",
+         f"{longhorizon['stream']['max_rss_mb']} MB peak RSS, "
+         f"{longhorizon['stream']['ticks_per_s']} ticks/s"
+         + (f"; stacked exceeded {longhorizon['ceiling_mb']} MB ceiling: "
+            f"{longhorizon['stacked']['exceeded_ceiling']}"
+            if "stacked" in longhorizon else " (quick: streaming only)")),
         ("json", os.path.abspath(path)),
     ]
     if not quick:

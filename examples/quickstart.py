@@ -32,6 +32,21 @@ def main() -> None:
               f"{rep['avg_response_time']:9.2f} {rep['avg_runtime']:11.2f} "
               f"{rep['avg_comm_time']:9.2f} {rep['total_cost']:8.0f}")
 
+    # Streaming mode (PR 7): the same run chunked, with O(state) online
+    # summaries instead of the stacked per-tick series — the way to run
+    # horizons where [T]-stacked metrics would not fit.  Same final
+    # state bit-for-bit; summarize() accepts either representation.
+    containers = paper_workload(cfg, seed=0)
+    sim0 = init_sim(hosts, containers, net, seed=0)
+    final, online = run_sim(sim0, cfg, get_policy("netaware"),
+                            spec.n_hosts, spec.n_nodes, cfg.horizon,
+                            chunk=32)
+    rep = summarize(final, online)
+    print(f"\nstreaming (chunk=32)  netaware: completed="
+          f"{rep['n_completed']}, mean_util={rep['mean_util']:.3f}, "
+          f"peak_running={rep['peak_running']} "
+          f"(summary folded online, no [T] metrics stack)")
+
 
 if __name__ == "__main__":
     main()

@@ -4,7 +4,9 @@ from repro.core.datacenter import (  # noqa: F401
     HOST_MIXES, PAPER_HOST_CATEGORIES, HostCategory, SimConfig,
     build_paper_hosts, build_paper_network, mixed_hosts, scaled_hosts,
 )
-from repro.core.engine import init_sim, run_sim, simulate  # noqa: F401
+from repro.core.engine import (  # noqa: F401
+    init_sim, run_sim, run_sim_chunked, simulate, simulate_chunk,
+)
 from repro.core.report import (  # noqa: F401
     summarize, sweep_summaries, sweep_table, timeseries, to_csv, tune_table,
 )
@@ -14,8 +16,13 @@ from repro.core.scenario import (  # noqa: F401
 from repro.core.scheduling import (  # noqa: F401
     get_policy, list_policies, register, validate_weights, weight_vector,
 )
+from repro.core.stats import (  # noqa: F401
+    acc_init, acc_update, check_chunk, max_chunk_ticks, online_fold,
+    online_from_metrics, online_init,
+)
 from repro.core.types import (  # noqa: F401
-    NUM_POLICY_WEIGHTS, WEIGHT_NAMES, PolicyParams, RunParams,
+    NUM_POLICY_WEIGHTS, WEIGHT_NAMES, OnlineSummary, PolicyParams, RunParams,
+    SummaryAcc,
 )
 from repro.core.workload import (  # noqa: F401
     bursty_workload, paper_workload, trace_workload,

@@ -592,6 +592,90 @@ def simulate(sim0: SimState, cfg: SimConfig, policy: PolicyParams,
     return jax.lax.scan(tick, sim0, jnp.arange(horizon, dtype=I32))
 
 
+# ---------------------------------------------------------------------------
+# Streaming (chunked) driver: O(state) memory at any horizon
+# ---------------------------------------------------------------------------
+def simulate_chunk(sim: SimState, acc, t0: jnp.ndarray, cfg: SimConfig,
+                   policy: PolicyParams, n_hosts: int, n_nodes: int,
+                   chunk: int, params: RunParams):
+    """One streaming chunk: ``chunk`` ticks starting at tick ``t0``, folding
+    each tick's metrics into the ``SummaryAcc`` carry instead of stacking
+    them as scan ys — the scan emits NOTHING, so device memory is O(state)
+    regardless of horizon.
+
+    ``t0`` is a *traced* scalar (one compilation covers every chunk) and,
+    like the tick counter xs, deliberately unbatched under the sweep's
+    vmaps — both the periodic delay-refresh cond and the t0 == 0 cond below
+    survive as real branches.  The runtime link params are applied inside
+    the t0 == 0 cond, NOT unconditionally: ``apply_link_params`` rebuilds
+    ``comm_cost`` from the static tables, so re-applying it at a chunk
+    boundary would clobber the dynamically refreshed matrix mid-run and
+    break chunked == unchunked equality.
+    """
+    sim = jax.lax.cond(
+        t0 == 0,
+        lambda s: s._replace(net=network.apply_link_params(
+            s.net, params.bw_mbps, params.loss)),
+        lambda s: s, sim)
+    tick = make_tick(cfg, policy, params, n_hosts, n_nodes)
+
+    def body(carry, tt):
+        s, a = carry
+        s, m = tick(s, tt)
+        return (s, stats.acc_update(a, m)), None
+
+    (sim, acc), _ = jax.lax.scan(body, (sim, acc),
+                                 t0 + jnp.arange(chunk, dtype=I32))
+    return sim, acc
+
+
+@functools.lru_cache(maxsize=None)
+def _chunk_step_jit():
+    """The jitted per-chunk step, built lazily so the donation decision can
+    read the active backend: donating the (state, accumulator) carry lets
+    XLA reuse their buffers across chunks, but CPU does not implement
+    donation and would warn on every compile."""
+    def step(sim, acc, t0, policy, params, cfg, n_hosts, n_nodes, chunk):
+        return simulate_chunk(sim, acc, t0, cfg, policy, n_hosts, n_nodes,
+                              chunk, params)
+    donate = (0, 1) if jax.default_backend() != "cpu" else ()
+    return jax.jit(step, static_argnames=("cfg", "n_hosts", "n_nodes",
+                                          "chunk"),
+                   donate_argnums=donate), bool(donate)
+
+
+def run_sim_chunked(sim0: SimState, cfg: SimConfig, policy: PolicyParams,
+                    n_hosts: int, n_nodes: int, horizon: int, chunk: int,
+                    params: RunParams | None = None):
+    """Streaming ``run_sim``: host loop over jit-per-chunk steps with a
+    donated carry; returns (final state, ``OnlineSummary``).
+
+    The device accumulator resets every chunk and the host folds it into
+    f64/i64 totals (``stats.online_fold``), so integer sums stay exact and
+    float sums hold ~f32-ulp accuracy out to arbitrary horizons —
+    ``check_chunk`` bounds the chunk size so no i32 sum can overflow
+    within one chunk.  Final state is bit-for-bit the stacked path's
+    (tests/test_streaming.py); only the metrics representation differs.
+    """
+    params = cfg.run_params() if params is None else params
+    stats.check_chunk(chunk, int(sim0.containers.status.shape[-1]))
+    step, donated = _chunk_step_jit()
+    # donation consumes the caller's buffers on the first chunk — keep
+    # sim0 valid for reuse (launch/sim.py shares one built state across
+    # every policy run)
+    sim = jax.tree.map(jnp.array, sim0) if donated else sim0
+    online = stats.online_init()
+    t0 = 0
+    while t0 < horizon:
+        sz = min(chunk, horizon - t0)       # tail chunk: one extra compile
+        sim, acc = step(sim, stats.acc_init(), jnp.asarray(t0, I32),
+                        policy, params, cfg=cfg, n_hosts=n_hosts,
+                        n_nodes=n_nodes, chunk=sz)
+        online = stats.online_fold(online, acc)   # syncs; promotes to 64-bit
+        t0 += sz
+    return sim, online
+
+
 # Nothing about the policy registry is baked into compiled programs with
 # branch-free scoring — a policy is a weight vector, so registering a new
 # one after a compiled run simply feeds new data through the executable.
@@ -603,15 +687,25 @@ def _run_sim_jit(sim0, cfg, policy, params, n_hosts, n_nodes, horizon):
 
 def run_sim(sim0: SimState, cfg: SimConfig, policy: PolicyParams,
             n_hosts: int, n_nodes: int, horizon: int,
-            params: RunParams | None = None
+            params: RunParams | None = None, chunk: int | None = None
             ) -> Tuple[SimState, TickMetrics]:
-    """Run ``horizon`` ticks; returns (final state, stacked per-tick metrics).
+    """Run ``horizon`` ticks; returns (final state, metrics).
 
-    Only ``cfg`` and the shape arguments are static.  ``policy`` (a weight
-    vector) and ``params`` (bw/loss/queue/threshold knobs, defaulting from
-    the config) are DATA: every policy — including ones registered after
-    this call — and every runtime-parameter point reuses one compilation
-    per (config, shapes) combination.
+    ``chunk=None`` (default, right for short horizons) stacks per-tick
+    ``TickMetrics`` over the whole run — O(horizon) memory, the streaming
+    path's oracle.  A ``chunk`` size streams the run through
+    :func:`run_sim_chunked` instead: same final state bit-for-bit, an
+    f64/i64 ``OnlineSummary`` instead of the stacked series, O(state)
+    memory at any horizon.  ``report.summarize`` accepts either form.
+
+    Only ``cfg``, the shape arguments, and ``chunk`` are static.  ``policy``
+    (a weight vector) and ``params`` (bw/loss/queue/threshold knobs,
+    defaulting from the config) are DATA: every policy — including ones
+    registered after this call — and every runtime-parameter point reuses
+    one compilation per (config, shapes) combination.
     """
     params = cfg.run_params() if params is None else params
+    if chunk is not None:
+        return run_sim_chunked(sim0, cfg, policy, n_hosts, n_nodes, horizon,
+                               chunk, params=params)
     return _run_sim_jit(sim0, cfg, policy, params, n_hosts, n_nodes, horizon)

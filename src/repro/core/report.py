@@ -15,7 +15,9 @@ from typing import Any, Dict, List, Sequence
 import jax
 import numpy as np
 
-from repro.core.types import STATUS_COMPLETED, SimState, TickMetrics
+from repro.core.stats import online_from_metrics
+from repro.core.types import (STATUS_COMPLETED, OnlineSummary, SimState,
+                              TickMetrics)
 
 
 def json_clean(obj):
@@ -32,7 +34,37 @@ def json_clean(obj):
     return obj
 
 
-def summarize(final: SimState, metrics: TickMetrics) -> Dict[str, Any]:
+def _online_keys(os: OnlineSummary) -> Dict[str, Any]:
+    """The metrics-derived summary entries, from the ONE shape both
+    collection modes share (``stats.OnlineSummary``) — stacked runs are
+    folded through ``stats.online_from_metrics`` first, so a streamed run
+    reports exactly the same keys as its stacked oracle (integer sums and
+    peaks bit-for-bit, float means to ~1 ulp)."""
+    n = max(int(os.n_ticks), 1)
+    var = float(os.w_m2_util) / n
+    return {
+        "mean_util_variance": float(os.sum_util_var) / n,
+        "mean_util": float(os.sum_mean_util) / n,
+        "mean_flow_rate": float(os.sum_flow_rate) / n,
+        # variance of mean host utilization over TIME (vs the per-tick
+        # across-host variance above) — Welford/Chan, exact in f64
+        "util_time_variance": var,
+        "total_arrivals": int(os.sum_arrivals),
+        "total_decisions": int(os.sum_decisions),
+        "total_migration_starts": int(os.sum_migrations),
+        "flow_ticks": int(os.sum_active_flows),
+        "peak_running": int(os.peak_running),
+        "peak_deployed": int(os.peak_deployed),
+        "peak_overloaded": int(os.peak_overloaded),
+        "peak_queue": int(os.peak_inactive),
+    }
+
+
+def summarize(final: SimState,
+              metrics: TickMetrics | OnlineSummary) -> Dict[str, Any]:
+    """End-of-run summary from the final state plus EITHER a stacked
+    per-tick series (``TickMetrics``, the default engine output) or a
+    streaming fold (``stats.OnlineSummary`` from ``run_sim(chunk=...)``)."""
     ct = final.containers
     status = np.asarray(ct.status)
     completed = status == STATUS_COMPLETED
@@ -52,7 +84,7 @@ def summarize(final: SimState, metrics: TickMetrics) -> Dict[str, Any]:
         return float(x.mean()) if x.size else float("nan")
 
     comm_time = np.asarray(ct.comm_time)[born]
-    return {
+    rep = {
         "n_containers": int(born.sum()),
         "n_completed": int(completed.sum()),
         "completion_rate": float(completed.sum() / max(born.sum(), 1)),
@@ -65,12 +97,12 @@ def summarize(final: SimState, metrics: TickMetrics) -> Dict[str, Any]:
         else float("nan"),
         "total_cost": float(final.total_cost),
         "total_migrations": int(np.asarray(ct.n_migrations).sum()),
-        "mean_util_variance": float(np.asarray(metrics.util_variance).mean()),
-        "peak_running": int(np.asarray(metrics.n_running).max()),
-        "peak_deployed": int(np.asarray(metrics.n_deployed).max()),
-        "peak_overloaded": int(np.asarray(metrics.n_overloaded).max()),
         "final_t": float(final.t),
     }
+    if not isinstance(metrics, OnlineSummary):
+        metrics = online_from_metrics(metrics)
+    rep.update(_online_keys(metrics))
+    return rep
 
 
 def timeseries(metrics: TickMetrics) -> Dict[str, np.ndarray]:
@@ -89,15 +121,17 @@ def to_csv(metrics: TickMetrics, path: str) -> None:
 # ---------------------------------------------------------------------------
 # Sweep reporting: [P, S, N]-batched finals/metrics -> rows -> grouped table
 # ---------------------------------------------------------------------------
-def sweep_summaries(finals: SimState, metrics: TickMetrics,
+def sweep_summaries(finals: SimState, metrics: TickMetrics | OnlineSummary,
                     policies: Sequence[str], scenarios: Sequence[str],
                     seeds: Sequence[int]) -> List[Dict[str, Any]]:
     """One :func:`summarize` row per sweep cell, tagged with its coordinates.
 
     ``finals``/``metrics`` carry leading [P, S, N] axes (policy, scenario,
-    seed) as returned by ``repro.launch.sweep.run_sweep``.  Each cell's row
-    is numerically identical to summarizing the corresponding standalone
-    ``run_sim`` — the sweep acceptance property.
+    seed) as returned by ``repro.launch.sweep.run_sweep`` — ``metrics`` is
+    either the stacked [P, S, N, T] series or the streaming sweep's
+    [P, S, N] ``OnlineSummary`` fold.  Each cell's row is numerically
+    identical to summarizing the corresponding standalone ``run_sim`` —
+    the sweep acceptance property.
     """
     finals_np = jax.tree.map(np.asarray, finals)
     metrics_np = jax.tree.map(np.asarray, metrics)

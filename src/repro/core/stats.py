@@ -1,18 +1,34 @@
 """Data collection module (paper §3.7): per-tick metric extraction.
 
 The paper's ``Stat`` class samples host/container/network state once per
-second (``save_stats`` process).  Here each tick's metrics are emitted as the
-``ys`` of the engine's ``lax.scan``, so the full time series materializes as
-stacked arrays with zero Python overhead.
+second (``save_stats`` process).  Two collection modes share one
+``collect`` pass:
+
+* stacked — each tick's metrics are the ``ys`` of the engine's
+  ``lax.scan``, so the full time series materializes (O(horizon) memory;
+  the default for short horizons and the oracle the streaming mode is
+  tested against);
+* streaming — the tick folds its metrics into a ``SummaryAcc`` carried
+  through the scan (``acc_update``), and the host folds finished chunks
+  into an f64/i64 ``OnlineSummary`` (``online_fold``), so memory is
+  O(state) at any horizon.  ``online_from_metrics`` computes the SAME
+  summary from a stacked series — integer sums/counts/peaks agree
+  bit-for-bit, float sums to ~1 ulp (Kahan-compensated f32 on device,
+  folded in f64 host-side).
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.types import (
     STATUS_COMMUNICATING, STATUS_COMPLETED, STATUS_INACTIVE, STATUS_MIGRATING,
-    STATUS_RUNNING, STATUS_WAITING, RunParams, SimState, TickMetrics,
+    STATUS_RUNNING, STATUS_WAITING, OnlineSummary, RunParams, SimState,
+    SummaryAcc, TickMetrics,
 )
+
+I32 = jnp.int32
+F32 = jnp.float32
 
 
 def collect(sim: SimState, new_arrivals: jnp.ndarray, decisions: jnp.ndarray,
@@ -56,4 +72,175 @@ def collect(sim: SimState, new_arrivals: jnp.ndarray, decisions: jnp.ndarray,
         mean_util=mean_util.mean(),
         active_flows=n_active_flows,
         mean_flow_rate=mean_rate,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Streaming accumulation: SummaryAcc (device, per chunk) -> OnlineSummary
+# (host, f64/i64, whole run)
+# ---------------------------------------------------------------------------
+def max_chunk_ticks(n_containers: int) -> int:
+    """Largest chunk size whose i32 accumulator sums cannot overflow.
+
+    The fastest-growing integer series is ``active_flows`` (at most one
+    communication + one migration flow per container = 2C per tick); every
+    other counted series is bounded by C per tick.  The bound is loose by
+    design — hitting it means the caller asked for ~10^7-tick chunks.
+    """
+    return (2**31 - 1) // max(2 * n_containers, 1)
+
+
+def check_chunk(chunk: int, n_containers: int) -> None:
+    limit = max_chunk_ticks(n_containers)
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
+    if chunk > limit:
+        raise ValueError(
+            f"chunk={chunk} can overflow i32 accumulator sums at "
+            f"C={n_containers} containers (2C flows/tick); use "
+            f"chunk <= {limit} — the host-side fold promotes to i64 "
+            f"between chunks, so total horizon is unbounded")
+
+
+def acc_init() -> SummaryAcc:
+    """Zero accumulator (peaks start at 0: every counted series is >= 0)."""
+    z_i = jnp.zeros((), I32)
+    z_f = jnp.zeros((), F32)
+    return SummaryAcc(
+        n_ticks=z_i,
+        sum_util_var=z_f, c_util_var=z_f,
+        sum_mean_util=z_f, c_mean_util=z_f,
+        sum_flow_rate=z_f, c_flow_rate=z_f,
+        w_mean_util=z_f, w_m2_util=z_f,
+        sum_active_flows=z_i, sum_arrivals=z_i, sum_decisions=z_i,
+        sum_migrations=z_i, peak_running=z_i, peak_deployed=z_i,
+        peak_overloaded=z_i, peak_inactive=z_i,
+    )
+
+
+def _kahan(s, c, x):
+    """One compensated-summation step: returns (s', c')."""
+    y = x - c
+    t = s + y
+    return t, (t - s) - y
+
+
+def acc_update(acc: SummaryAcc, m: TickMetrics) -> SummaryAcc:
+    """Fold one tick's metrics into the accumulator (pure, scan-carry safe).
+
+    f32 sums are Kahan-compensated; ``mean_util`` additionally feeds a
+    Welford (mean, M2) pair so the run's utilization variance over TIME is
+    available without the stacked series.  Integer sums stay i32 — exact
+    as long as the host loop respects ``max_chunk_ticks``.
+    """
+    su, cu = _kahan(acc.sum_util_var, acc.c_util_var, m.util_variance)
+    sm, cm = _kahan(acc.sum_mean_util, acc.c_mean_util, m.mean_util)
+    sf, cf = _kahan(acc.sum_flow_rate, acc.c_flow_rate, m.mean_flow_rate)
+    n = acc.n_ticks + 1
+    delta = m.mean_util - acc.w_mean_util
+    w_mean = acc.w_mean_util + delta / n.astype(F32)
+    w_m2 = acc.w_m2_util + delta * (m.mean_util - w_mean)
+    return SummaryAcc(
+        n_ticks=n,
+        sum_util_var=su, c_util_var=cu,
+        sum_mean_util=sm, c_mean_util=cm,
+        sum_flow_rate=sf, c_flow_rate=cf,
+        w_mean_util=w_mean, w_m2_util=w_m2,
+        sum_active_flows=acc.sum_active_flows + m.active_flows.astype(I32),
+        sum_arrivals=acc.sum_arrivals + m.new_arrivals.astype(I32),
+        sum_decisions=acc.sum_decisions + m.decisions.astype(I32),
+        sum_migrations=acc.sum_migrations + m.migrations.astype(I32),
+        peak_running=jnp.maximum(acc.peak_running, m.n_running),
+        peak_deployed=jnp.maximum(acc.peak_deployed, m.n_deployed),
+        peak_overloaded=jnp.maximum(acc.peak_overloaded, m.n_overloaded),
+        peak_inactive=jnp.maximum(acc.peak_inactive, m.n_inactive),
+    )
+
+
+def online_init(batch_shape: tuple = ()) -> OnlineSummary:
+    """Empty host-side summary (f64/i64, optional leading batch axes).
+
+    Every field gets its OWN buffer — the streaming sweep fills summaries
+    slab-by-slab with in-place slice writes, so shared zero arrays would
+    alias every integer (or float) field onto one buffer.
+    """
+    z_i = lambda: np.zeros(batch_shape, np.int64)
+    z_f = lambda: np.zeros(batch_shape, np.float64)
+    return OnlineSummary(
+        n_ticks=z_i(), sum_util_var=z_f(), sum_mean_util=z_f(),
+        sum_flow_rate=z_f(), w_mean_util=z_f(), w_m2_util=z_f(),
+        sum_active_flows=z_i(), sum_arrivals=z_i(), sum_decisions=z_i(),
+        sum_migrations=z_i(), peak_running=z_i(), peak_deployed=z_i(),
+        peak_overloaded=z_i(), peak_inactive=z_i(),
+    )
+
+
+def online_fold(host: OnlineSummary, acc: SummaryAcc) -> OnlineSummary:
+    """Fold one finished device chunk into the host summary.
+
+    This is the ONLY place 64-bit arithmetic happens (satellite: the tick
+    stays f32/i32 end to end).  A Kahan pair folds as ``f64(s) + f64(c)``
+    — the compensation term recovers the low bits the f32 sum dropped —
+    and the per-chunk Welford moments merge with Chan's parallel-combine
+    rule.  Broadcasts over leading batch axes.
+    """
+    a = SummaryAcc(*(np.asarray(x) for x in acc))
+    na = host.n_ticks.astype(np.float64)
+    nb = a.n_ticks.astype(np.float64)
+    n = na + nb
+    safe_n = np.where(n > 0, n, 1.0)
+    delta = a.w_mean_util.astype(np.float64) - host.w_mean_util
+    w_mean = host.w_mean_util + delta * nb / safe_n
+    w_m2 = (host.w_m2_util + a.w_m2_util.astype(np.float64)
+            + delta * delta * na * nb / safe_n)
+    f64 = lambda s, c: s.astype(np.float64) + c.astype(np.float64)
+    i64 = lambda x: x.astype(np.int64)
+    return OnlineSummary(
+        n_ticks=host.n_ticks + i64(a.n_ticks),
+        sum_util_var=host.sum_util_var + f64(a.sum_util_var, a.c_util_var),
+        sum_mean_util=(host.sum_mean_util
+                       + f64(a.sum_mean_util, a.c_mean_util)),
+        sum_flow_rate=(host.sum_flow_rate
+                       + f64(a.sum_flow_rate, a.c_flow_rate)),
+        w_mean_util=w_mean, w_m2_util=w_m2,
+        sum_active_flows=host.sum_active_flows + i64(a.sum_active_flows),
+        sum_arrivals=host.sum_arrivals + i64(a.sum_arrivals),
+        sum_decisions=host.sum_decisions + i64(a.sum_decisions),
+        sum_migrations=host.sum_migrations + i64(a.sum_migrations),
+        peak_running=np.maximum(host.peak_running, i64(a.peak_running)),
+        peak_deployed=np.maximum(host.peak_deployed, i64(a.peak_deployed)),
+        peak_overloaded=np.maximum(host.peak_overloaded,
+                                   i64(a.peak_overloaded)),
+        peak_inactive=np.maximum(host.peak_inactive, i64(a.peak_inactive)),
+    )
+
+
+def online_from_metrics(metrics: TickMetrics) -> OnlineSummary:
+    """The stacked-path twin: the same summary computed from a full
+    [..., T] ``TickMetrics`` series in f64.
+
+    ``report.summarize`` routes BOTH paths through this shape, so stacked
+    and streaming runs report identical keys — integer sums/peaks agree
+    bit-for-bit with the chunked fold, float sums to ~1 ulp of f32.
+    """
+    f = lambda x: np.asarray(x, np.float64)
+    i = lambda x: np.asarray(x).astype(np.int64)
+    mu = f(metrics.mean_util)
+    n = np.full(mu.shape[:-1], mu.shape[-1], np.int64)
+    w_mean = mu.mean(axis=-1) if mu.shape[-1] else np.zeros(mu.shape[:-1])
+    w_m2 = ((mu - w_mean[..., None]) ** 2).sum(axis=-1)
+    return OnlineSummary(
+        n_ticks=n,
+        sum_util_var=f(metrics.util_variance).sum(axis=-1),
+        sum_mean_util=mu.sum(axis=-1),
+        sum_flow_rate=f(metrics.mean_flow_rate).sum(axis=-1),
+        w_mean_util=w_mean, w_m2_util=w_m2,
+        sum_active_flows=i(metrics.active_flows).sum(axis=-1),
+        sum_arrivals=i(metrics.new_arrivals).sum(axis=-1),
+        sum_decisions=i(metrics.decisions).sum(axis=-1),
+        sum_migrations=i(metrics.migrations).sum(axis=-1),
+        peak_running=i(metrics.n_running).max(axis=-1),
+        peak_deployed=i(metrics.n_deployed).max(axis=-1),
+        peak_overloaded=i(metrics.n_overloaded).max(axis=-1),
+        peak_inactive=i(metrics.n_inactive).max(axis=-1),
     )

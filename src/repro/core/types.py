@@ -248,6 +248,68 @@ class TickMetrics(NamedTuple):
     mean_flow_rate: jnp.ndarray    # KB/s over active flows
 
 
+class SummaryAcc(NamedTuple):
+    """Online per-run summary accumulator — the O(state) replacement for
+    stacking ``TickMetrics`` over the horizon.
+
+    Lives in the chunked scan's carry (``engine.run_sim(chunk=...)``):
+    every tick folds its metrics in, nothing is ever stacked, so a 10^6-tick
+    trace costs the same device memory as a 10^2-tick one.  All leaves are
+    scalars in the tick's native 32-bit dtypes — integer sums stay exact
+    because the host loop bounds the per-chunk tick count
+    (``stats.max_chunk_ticks``) so no i32 sum can overflow, and float sums
+    carry a Kahan compensation term; the 64-bit promotion happens host-side
+    only, when ``stats.online_fold`` folds a finished chunk into an
+    ``OnlineSummary`` (f64/i64) and resets this accumulator.
+    """
+
+    n_ticks: jnp.ndarray           # i32[] ticks folded into this chunk
+    # Kahan-compensated f32 sums of the per-tick float series
+    sum_util_var: jnp.ndarray      # f32[] sum of util_variance
+    c_util_var: jnp.ndarray        # f32[] its compensation term
+    sum_mean_util: jnp.ndarray     # f32[] sum of mean_util
+    c_mean_util: jnp.ndarray       # f32[]
+    sum_flow_rate: jnp.ndarray     # f32[] sum of mean_flow_rate
+    c_flow_rate: jnp.ndarray       # f32[]
+    # Welford moments of mean_util over time (per-chunk; chunks are merged
+    # host-side with the Chan parallel-combine rule)
+    w_mean_util: jnp.ndarray       # f32[] running mean of mean_util
+    w_m2_util: jnp.ndarray         # f32[] running sum of squared deviations
+    # integer sums (exact within the chunk bound) and peaks
+    sum_active_flows: jnp.ndarray  # i32[] flow-ticks (= flow-seconds)
+    sum_arrivals: jnp.ndarray      # i32[]
+    sum_decisions: jnp.ndarray     # i32[]
+    sum_migrations: jnp.ndarray    # i32[] migration *starts*
+    peak_running: jnp.ndarray      # i32[]
+    peak_deployed: jnp.ndarray     # i32[]
+    peak_overloaded: jnp.ndarray   # i32[]
+    peak_inactive: jnp.ndarray     # i32[] worst scheduling-queue depth
+
+
+class OnlineSummary(NamedTuple):
+    """Host-side (numpy, f64/i64) fold of ``SummaryAcc`` chunks.
+
+    The streaming twin of stacked ``TickMetrics``: ``report.summarize``
+    accepts either.  Leaves broadcast over leading batch axes, so a
+    [P, S, N]-batched streaming sweep folds into one of these per grid.
+    """
+
+    n_ticks: np.ndarray            # i64
+    sum_util_var: np.ndarray       # f64
+    sum_mean_util: np.ndarray      # f64
+    sum_flow_rate: np.ndarray      # f64
+    w_mean_util: np.ndarray        # f64 Welford mean of mean_util over time
+    w_m2_util: np.ndarray          # f64 Welford M2 of mean_util over time
+    sum_active_flows: np.ndarray   # i64
+    sum_arrivals: np.ndarray       # i64
+    sum_decisions: np.ndarray      # i64
+    sum_migrations: np.ndarray     # i64
+    peak_running: np.ndarray       # i64
+    peak_deployed: np.ndarray      # i64
+    peak_overloaded: np.ndarray    # i64
+    peak_inactive: np.ndarray      # i64
+
+
 def empty_containers(capacity: int) -> ContainerState:
     C = capacity
     f = lambda fill: jnp.full((C,), fill, jnp.float32)

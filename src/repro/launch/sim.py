@@ -70,14 +70,17 @@ def parse_weights(arg: str | None) -> dict[str, float] | None:
 
 
 def run_one(policy_name: str, cfg: SimConfig, spec, sim0, params, csv=None,
-            weights=None):
+            weights=None, chunk=None):
     from repro.kernels import kernel_backend, resolve_kernel
+    if csv and chunk is not None:
+        raise ValueError("--csv needs the stacked per-tick series; "
+                         "drop --chunk to export one")
     t0 = time.time()
     final, metrics = run_sim(sim0, cfg, get_policy(policy_name, weights),
                              spec.n_hosts, spec.n_nodes, cfg.horizon,
-                             params=params)
+                             params=params, chunk=chunk)
     final.t.block_until_ready()
-    rep = summarize(final, metrics)
+    rep = summarize(final, metrics)   # metrics: stack OR OnlineSummary
     rep["policy"] = policy_name
     rep["wall_s"] = round(time.time() - t0, 2)
     # self-describing rows: which backend ran this, and whether the delay /
@@ -111,7 +114,12 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--workload", default="paper",
                     choices=["paper", "trace"])
-    ap.add_argument("--csv", default=None, help="per-tick metrics CSV path")
+    ap.add_argument("--csv", default=None, help="per-tick metrics CSV path "
+                    "(stacked mode only — incompatible with --chunk)")
+    ap.add_argument("--chunk", type=int, default=None,
+                    help="stream the horizon in chunks of this many ticks "
+                         "with O(state) online summaries instead of "
+                         "stacking per-tick metrics (long horizons)")
     ap.add_argument("--out", default=None,
                     help="write the summary reports as a JSON list")
     ap.add_argument("--sequential", action="store_true",
@@ -154,7 +162,7 @@ def main() -> None:
     reports = []
     for p in policies:
         rep = json_clean(run_one(p, cfg, spec, sim0, params, csv=args.csv,
-                                 weights=weights))
+                                 weights=weights, chunk=args.chunk))
         reports.append(rep)
         print(json.dumps(rep, indent=None, sort_keys=True))
     if args.out:

@@ -32,11 +32,15 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.core import (SimConfig, get_policy, list_policies,
                         sweep_summaries, sweep_table)
-from repro.core.engine import simulate
+from repro.core import stats
+from repro.core.engine import simulate, simulate_chunk
 from repro.core.scenario import (ScenarioSpec, build_scenarios,
                                  default_scenarios)
 from repro.core.scheduling import validate_weights
-from repro.core.types import PolicyParams, RunParams, SimState, TickMetrics
+from repro.core.types import (OnlineSummary, PolicyParams, RunParams,
+                              SimState, TickMetrics)
+
+I32 = jnp.int32
 
 # SimState leaves that are TOPOLOGY, not state: identical across every
 # sweep cell by construction (build_scenarios builds one network and every
@@ -131,8 +135,15 @@ def make_sweep_fn(cfg: SimConfig, n_hosts: int, n_nodes: int, horizon: int,
         args = (jax.tree.map(lambda x: flat(x, "SN"), sims),
                 jax.tree.map(lambda x: flat(x, "P"), pols),
                 jax.tree.map(lambda x: flat(x, "S"), rps))
+        # Pad to a device multiple by repeating cells round-robin.  The pad
+        # cells RECOMPUTE real cells and their results are sliced off —
+        # deliberate waste: under vmap+SPMD every lane executes the same
+        # ops regardless of data, so "masking" a pad cell's workload to
+        # near-zero saves nothing, while zeroed/degenerate states would
+        # fork the tick's branches.  The measured cost is the pad fraction
+        # itself (<= (n_dev-1)/B of the grid; numbers in docs/sweeps.md).
         pad = (-B) % n_dev
-        if pad:                                  # repeat cells round-robin
+        if pad:
             idx = jnp.arange(B + pad) % B
             args = jax.tree.map(lambda x: x[idx], args)
         if mesh is not None:
@@ -158,19 +169,144 @@ def make_sweep_fn(cfg: SimConfig, n_hosts: int, n_nodes: int, horizon: int,
     jitted = jax.jit(grid)
 
     def fn(sims, pols, rps):
-        for p, x in jtu.tree_flatten_with_path(sims)[0]:
-            if _is_static_leaf(p):
-                x = np.asarray(x)
-                ref = x.reshape((-1,) + x.shape[2:])[0]
-                if not (x == ref).all():
-                    names = ".".join(_leaf_path_names(p))
-                    raise ValueError(
-                        f"sweep cells disagree on topology leaf {names!r}; "
-                        "all scenarios of one grid must share the network "
-                        "topology (build_scenarios builds exactly one)")
+        _check_topology_uniform(sims)
         return jitted(sims, pols, rps)
 
     fn._cache_size = jitted._cache_size
+    fn.n_devices = n_dev
+    return fn
+
+
+def _check_topology_uniform(sims) -> None:
+    """Every cell of one grid must share the network topology — the static
+    leaves are de-batched through the vmap (``STATIC_TOPOLOGY_LEAVES``)."""
+    for p, x in jax.tree_util.tree_flatten_with_path(sims)[0]:
+        if _is_static_leaf(p):
+            x = np.asarray(x)
+            ref = x.reshape((-1,) + x.shape[2:])[0]
+            if not (x == ref).all():
+                names = ".".join(_leaf_path_names(p))
+                raise ValueError(
+                    f"sweep cells disagree on topology leaf {names!r}; "
+                    "all scenarios of one grid must share the network "
+                    "topology (build_scenarios builds exactly one)")
+
+
+def make_stream_fn(cfg: SimConfig, n_hosts: int, n_nodes: int, horizon: int,
+                   chunk: int, slab: int | None = None, devices=None):
+    """The streaming sweep: the same [P, S, N] grid as ``make_sweep_fn``,
+    but iterated in device-multiple SLABS of cells through ONE compiled
+    slab-chunk step, with per-tick metrics folded into ``SummaryAcc``
+    carries instead of stacked — so peak memory is O(slab x state), never
+    O(cells x horizon).
+
+    Returns ``fn(sims, pols, rps) -> (finals, summary)`` where ``finals``
+    has [P, S, N] leading axes (numpy; bit-for-bit the stacked sweep's
+    finals) and ``summary`` is a [P, S, N] ``stats.OnlineSummary``.
+
+    Chunking the horizon and slabbing the grid compose in one loop nest:
+
+        for each slab of cells:                # host gather, wrap-padded
+            accs = 0
+            for t0 in range(0, horizon, chunk):
+                sims, accs = step(sims, accs, t0)   # ONE jitted function
+                fold accs into the host f64/i64 summary
+
+    The jitted step is compiled once for the main chunk size (+ one tail
+    compile when ``chunk`` does not divide ``horizon``): ``t0`` is traced,
+    the per-cell link-param application rides a ``t0 == 0`` cond, and the
+    static topology leaves stay unbatched through the vmap in BOTH
+    directions (``in_axes``/``out_axes`` None) so every slab re-enters the
+    same compiled program.  On non-CPU backends the (state, accumulator)
+    carry is donated, so a slab's device footprint never doubles.
+    """
+    stats.check_chunk(chunk, cfg.n_containers)
+    mesh = grid_mesh(devices)
+    n_dev = 1 if mesh is None else mesh.devices.size
+    jtu = jax.tree_util
+
+    def step(sims, accs, pols, rps, t0, csz):
+        if mesh is not None:
+            spec = NamedSharding(mesh, PartitionSpec("grid"))
+            shard = lambda x: jax.lax.with_sharding_constraint(x, spec)
+            flat, treedef = jtu.tree_flatten_with_path(sims)
+            sims = jtu.tree_unflatten(
+                treedef, [x if _is_static_leaf(p) else shard(x)
+                          for p, x in flat])
+            accs, pols, rps = jax.tree.map(shard, (accs, pols, rps))
+
+        def cell(sim, acc, pol, rp):
+            return simulate_chunk(sim, acc, t0, cfg, pol, n_hosts, n_nodes,
+                                  csz, rp)
+
+        flat, treedef = jtu.tree_flatten_with_path(sims)
+        sim_axes = jtu.tree_unflatten(
+            treedef, [None if _is_static_leaf(p) else 0 for p, _ in flat])
+        return jax.vmap(cell, in_axes=(sim_axes, 0, 0, 0),
+                        out_axes=(sim_axes, 0))(sims, accs, pols, rps)
+
+    donate = (0, 1) if jax.default_backend() != "cpu" else ()
+    jstep = jax.jit(step, static_argnames=("csz",), donate_argnums=donate)
+
+    def fn(sims, pols, rps):
+        _check_topology_uniform(sims)
+        P = pols.weights.shape[0]
+        S, N = sims.t.shape
+        B = P * S * N
+        Bs = B if slab is None else min(slab, B)
+        Bs += (-Bs) % n_dev                      # device-multiple slabs
+
+        flat_sims, sims_def = jtu.tree_flatten_with_path(sims)
+        statics = {i for i, (p, _) in enumerate(flat_sims)
+                   if _is_static_leaf(p)}
+        summary = stats.online_init((B,))
+        finals_flat = None                       # host [B, ...] per leaf
+        zero_accs = lambda: jax.tree.map(
+            lambda x: jnp.zeros((Bs,), x.dtype), stats.acc_init())
+
+        for s0 in range(0, B, Bs):
+            idx = (s0 + np.arange(Bs)) % B       # wrap-pad the last slab
+            p_i, s_i, n_i = idx // (S * N), (idx // N) % S, idx % N
+            sim_slab = jtu.tree_unflatten(
+                sims_def, [x[0, 0] if i in statics else x[s_i, n_i]
+                           for i, (_, x) in enumerate(flat_sims)])
+            pol_slab = jax.tree.map(lambda x: x[p_i], pols)
+            rp_slab = jax.tree.map(lambda x: x[s_i], rps)
+            slab_sum = stats.online_init((Bs,))
+            t0 = 0
+            while t0 < horizon:
+                sz = min(chunk, horizon - t0)    # tail: one extra compile
+                # the accumulator RESETS every chunk (the i32 bound and the
+                # f32 precision argument are per-chunk properties); the
+                # host fold below carries the running 64-bit totals
+                sim_slab, accs = jstep(sim_slab, zero_accs(), pol_slab,
+                                       rp_slab, jnp.asarray(t0, I32),
+                                       csz=sz)
+                slab_sum = stats.online_fold(slab_sum, accs)
+                t0 += sz
+            real = min(Bs, B - s0)               # wrap rows are duplicates
+            host_slab = [np.asarray(x)
+                         for x in jtu.tree_leaves(sim_slab)]
+            if finals_flat is None:
+                finals_flat = [
+                    x if i in statics
+                    else np.empty((B,) + x.shape[1:], x.dtype)
+                    for i, x in enumerate(host_slab)]
+            for i, x in enumerate(host_slab):
+                if i not in statics:
+                    finals_flat[i][s0:s0 + real] = x[:real]
+            for h, a in zip(summary, slab_sum):
+                h[s0:s0 + real] = a[:real]
+
+        leaves = [np.broadcast_to(x, (P, S, N) + x.shape).copy()
+                  if i in statics               # restore the batched shape
+                  else x.reshape((P, S, N) + x.shape[1:])
+                  for i, x in enumerate(finals_flat)]
+        finals = jtu.tree_unflatten(sims_def, leaves)
+        summary = OnlineSummary(*(x.reshape((P, S, N)) for x in summary))
+        return finals, summary
+
+    fn._cache_size = jstep._cache_size
     fn.n_devices = n_dev
     return fn
 
@@ -181,16 +317,19 @@ class SweepResult:
     scenarios: list[ScenarioSpec]
     seeds: tuple[int, ...]
     finals: SimState          # [P, S, N, ...]
-    metrics: TickMetrics      # [P, S, N, T, ...]
+    metrics: TickMetrics | None   # [P, S, N, T, ...]; None when streamed
     wall_s: float
     compile_cache_misses: int  # jit cache entries the sweep call created
     n_devices: int = 1         # devices the flattened grid axis spans
+    summary: OnlineSummary | None = None  # [P, S, N] streaming fold
     _rows: list | None = dataclasses.field(default=None, repr=False)
 
     def summaries(self) -> list[dict[str, Any]]:
         if self._rows is None:  # per-cell summarize is host-side O(cells)
             self._rows = sweep_summaries(
-                self.finals, self.metrics, self.policies,
+                self.finals,
+                self.metrics if self.metrics is not None else self.summary,
+                self.policies,
                 [s.name for s in self.scenarios], self.seeds)
         return self._rows
 
@@ -202,9 +341,17 @@ def run_sweep(policies: Sequence[str] | None = None,
               scenarios: Sequence[ScenarioSpec] | None = None,
               seeds: Sequence[int] = (0,), cfg: SimConfig | None = None,
               n_hosts: int = 20, n_spine: int = 2,
-              n_leaf: int = 4, devices=None) -> SweepResult:
+              n_leaf: int = 4, devices=None, chunk: int | None = None,
+              slab: int | None = None) -> SweepResult:
     """Build the grid and run it as one compiled call (sharded over
-    ``devices`` — default: every local device)."""
+    ``devices`` — default: every local device).
+
+    ``chunk`` switches to the STREAMING sweep (``make_stream_fn``): the
+    horizon runs in chunks with online summary folds and the grid is
+    iterated in slabs of ``slab`` cells (default: the whole grid) through
+    one compiled step — [P, S, N] summaries without ever holding
+    [P, S, N, T] metrics.  Cell results are bit-identical either way.
+    """
     policies = list(policies if policies is not None else list_policies())
     scenarios = list(scenarios if scenarios is not None
                      else default_scenarios())
@@ -213,6 +360,18 @@ def run_sweep(policies: Sequence[str] | None = None,
                                           n_spine=n_spine, n_leaf=n_leaf,
                                           seeds=seeds)
     pol = stack_policies(policies)
+    if chunk is not None:
+        fn = make_stream_fn(cfg, net_spec.n_hosts, net_spec.n_nodes,
+                            cfg.horizon, chunk=chunk, slab=slab,
+                            devices=devices)
+        t0 = time.time()
+        finals, summary = fn(sims, pol, rps)
+        return SweepResult(policies=policies, scenarios=scenarios,
+                           seeds=tuple(seeds), finals=finals, metrics=None,
+                           summary=summary,
+                           wall_s=round(time.time() - t0, 2),
+                           compile_cache_misses=fn._cache_size(),
+                           n_devices=fn.n_devices)
     fn = make_sweep_fn(cfg, net_spec.n_hosts, net_spec.n_nodes, cfg.horizon,
                        devices=devices)
     t0 = time.time()
@@ -233,16 +392,55 @@ def _run_sim_vmapped_jit(sims, cfg, policy, params, n_hosts, n_nodes,
                                        horizon, params))(sims)
 
 
+@functools.lru_cache(maxsize=None)
+def _vmapped_chunk_step_jit():
+    """Jitted seed-batched chunk step (lazy: the donation decision reads
+    the backend, exactly like ``engine._chunk_step_jit``)."""
+    def step(sims, accs, t0, policy, params, cfg, n_hosts, n_nodes, chunk):
+        return jax.vmap(
+            lambda s, a: simulate_chunk(s, a, t0, cfg, policy, n_hosts,
+                                        n_nodes, chunk, params))(sims, accs)
+    donate = (0, 1) if jax.default_backend() != "cpu" else ()
+    return jax.jit(step, static_argnames=("cfg", "n_hosts", "n_nodes",
+                                          "chunk"),
+                   donate_argnums=donate), bool(donate)
+
+
 def run_sim_vmapped(sims: SimState, cfg: SimConfig, policy: PolicyParams,
                     n_hosts: int, n_nodes: int, horizon: int,
-                    params: RunParams | None = None):
+                    params: RunParams | None = None,
+                    chunk: int | None = None):
     """Seed-batched single-policy run (leading axis on every SimState leaf)
     — the degenerate 1x1xN sweep, kept as a convenience for benchmarks.
     Jitted at module level so repeat calls hit the warm cache (keyed on
-    config/shapes, like ``run_sim``; policies are data, never cache keys)."""
+    config/shapes, like ``run_sim``; policies are data, never cache keys).
+
+    ``chunk`` streams the batch through per-chunk steps with online
+    summary folds — (finals, [N] ``OnlineSummary``) instead of
+    (finals, [N, T] stacked metrics), O(batch x state) memory at any
+    horizon.  ``t0`` stays unbatched through the vmap, so the periodic
+    delay-refresh cond survives exactly as in the stacked path.
+    """
     params = cfg.run_params() if params is None else params
-    return _run_sim_vmapped_jit(sims, cfg, policy, params, n_hosts, n_nodes,
-                                horizon)
+    if chunk is None:
+        return _run_sim_vmapped_jit(sims, cfg, policy, params, n_hosts,
+                                    n_nodes, horizon)
+    N = sims.t.shape[0]
+    stats.check_chunk(chunk, int(sims.containers.status.shape[-1]))
+    step, donated = _vmapped_chunk_step_jit()
+    cur = jax.tree.map(jnp.array, sims) if donated else sims
+    online = stats.online_init((N,))
+    t0 = 0
+    while t0 < horizon:
+        sz = min(chunk, horizon - t0)
+        accs = jax.tree.map(lambda x: jnp.zeros((N,), x.dtype),
+                            stats.acc_init())
+        cur, accs = step(cur, accs, jnp.asarray(t0, I32), policy, params,
+                         cfg=cfg, n_hosts=n_hosts, n_nodes=n_nodes,
+                         chunk=sz)
+        online = stats.online_fold(online, accs)
+        t0 += sz
+    return cur, online
 
 
 def main() -> None:
@@ -257,6 +455,14 @@ def main() -> None:
     ap.add_argument("--devices", type=int, default=None,
                     help="shard the flattened grid over this many devices "
                          "(default: all local devices)")
+    ap.add_argument("--chunk", type=int, default=None,
+                    help="stream the horizon in chunks of this many ticks "
+                         "with online summaries (O(state) memory; default: "
+                         "stacked per-tick metrics)")
+    ap.add_argument("--slab", type=int, default=None,
+                    help="with --chunk: iterate the grid in slabs of this "
+                         "many cells through one compiled step (default: "
+                         "the whole grid at once)")
     ap.add_argument("--table", default="avg_runtime",
                     help="summary metric for the grouped table")
     ap.add_argument("--out", default=None,
@@ -280,7 +486,8 @@ def main() -> None:
     n_leaf = max(4, args.hosts // 5)
     res = run_sweep(policies=policies, seeds=range(args.seeds), cfg=cfg,
                     n_hosts=args.hosts, n_spine=max(2, n_leaf // 4),
-                    n_leaf=n_leaf, devices=args.devices)
+                    n_leaf=n_leaf, devices=args.devices, chunk=args.chunk,
+                    slab=args.slab)
     cells = len(res.policies) * len(res.scenarios) * len(res.seeds)
     from repro.kernels import kernel_backend, resolve_kernel
     backend = kernel_backend()

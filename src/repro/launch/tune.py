@@ -29,7 +29,7 @@ from repro.core import SimConfig, get_policy, sweep_summaries, tune_table
 from repro.core.scenario import ScenarioSpec, build_scenarios
 from repro.core.scheduling import validate_weights, weight_index
 from repro.core.types import WEIGHT_NAMES, PolicyParams
-from repro.launch.sweep import make_sweep_fn
+from repro.launch.sweep import make_stream_fn, make_sweep_fn
 
 # Default search space: the cost-model weights of the network-aware score
 # plus the co-location / consolidation trade-off — the knobs the paper's
@@ -125,7 +125,8 @@ def run_tune(n_samples: int = 16, seeds: Sequence[int] = (0,),
              objective: str = "avg_runtime", base: str = "netaware",
              space: dict[str, tuple[float, float]] | None = None,
              grid: bool = False, seed: int = 0,
-             devices=None, reps: int = 1) -> TuneResult:
+             devices=None, reps: int = 1, chunk: int | None = None,
+             slab: int | None = None) -> TuneResult:
     """One compiled call over the whole search population.
 
     The per-sample score is the objective's plain mean over every
@@ -138,6 +139,12 @@ def run_tune(n_samples: int = 16, seeds: Sequence[int] = (0,),
     minimum as ``steady_s`` — the runtime-dominated number the bench
     regression gate tracks (the first call's ``wall_s`` is mostly XLA
     compile on small grids).
+
+    ``chunk`` streams the search through ``make_stream_fn`` — [W, S, N]
+    summaries via online folds, never a [W, S, N, T] metrics stack, with
+    the population optionally slabbed ``slab`` cells at a time.  Scores
+    match the stacked search to float precision (integer objectives
+    exactly).
     """
     cfg = cfg or SimConfig()
     scenarios = list(scenarios if scenarios is not None else [
@@ -152,18 +159,28 @@ def run_tune(n_samples: int = 16, seeds: Sequence[int] = (0,),
     net_spec, sims, rps = build_scenarios(scenarios, cfg, n_hosts=n_hosts,
                                           n_spine=n_spine, n_leaf=n_leaf,
                                           seeds=seeds)
-    fn = make_sweep_fn(cfg, net_spec.n_hosts, net_spec.n_nodes, cfg.horizon,
-                       devices=devices)
+    if chunk is not None:
+        fn = make_stream_fn(cfg, net_spec.n_hosts, net_spec.n_nodes,
+                            cfg.horizon, chunk=chunk, slab=slab,
+                            devices=devices)
+    else:
+        fn = make_sweep_fn(cfg, net_spec.n_hosts, net_spec.n_nodes,
+                           cfg.horizon, devices=devices)
+    def ready(x):   # streaming finals are already host-side numpy
+        leaf = jax.tree.leaves(x)[0]
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+
     t0 = time.time()
-    finals, metrics = fn(sims, pol, rps)
-    jax.tree.leaves(finals)[0].block_until_ready()
+    finals, metrics = fn(sims, pol, rps)   # streaming: OnlineSummary
+    ready(finals)
     wall = time.time() - t0
     steady = None
     if reps > 1:
         reruns = []
         for _ in range(reps - 1):
             t0 = time.time()
-            jax.tree.leaves(fn(sims, pol, rps)[0])[0].block_until_ready()
+            ready(fn(sims, pol, rps)[0])
             reruns.append(time.time() - t0)
         steady = round(min(reruns), 2)
 
@@ -197,6 +214,11 @@ def main() -> None:
     ap.add_argument("--grid", action="store_true",
                     help="coordinate-profile grid instead of random draws")
     ap.add_argument("--seed", type=int, default=0, help="search RNG seed")
+    ap.add_argument("--chunk", type=int, default=None,
+                    help="stream the horizon in chunks with online "
+                         "summaries (O(state) memory)")
+    ap.add_argument("--slab", type=int, default=None,
+                    help="with --chunk: population slab size in cells")
     ap.add_argument("--top", type=int, default=10)
     ap.add_argument("--out", default=None,
                     help="write best weights + ranked samples as JSON")
@@ -208,7 +230,8 @@ def main() -> None:
                    cfg=cfg, n_hosts=args.hosts,
                    n_spine=max(2, n_leaf // 4), n_leaf=n_leaf,
                    objective=args.objective, base=args.base,
-                   grid=args.grid, seed=args.seed)
+                   grid=args.grid, seed=args.seed, chunk=args.chunk,
+                   slab=args.slab)
     cells = args.samples * len(res.scenarios) * len(res.seeds)
     print(f"# {cells} cells ({args.samples} weight samples x "
           f"{len(res.scenarios)} scenarios x {len(res.seeds)} seeds) in "

@@ -20,6 +20,9 @@ def load_base():
 
 def quick_from(base):
     """A quick-run JSON that matches the committed baseline exactly."""
+    lh = copy.deepcopy(base["longhorizon"])
+    lh.pop("ceiling_mb", None)    # quick mode measures streaming only
+    lh.pop("stacked", None)
     return {
         "bench": base["bench"],
         "points": [copy.deepcopy(p) for p in base["points"]
@@ -27,6 +30,7 @@ def quick_from(base):
         "sparse_speedup": 1.5,
         "sweep": copy.deepcopy(base["sweep_quick"]),
         "tune": copy.deepcopy(base["tune"]),
+        "longhorizon": lh,
     }
 
 
@@ -42,6 +46,14 @@ def test_committed_baseline_has_the_gate_inputs():
     # ISSUE 5 acceptance: branch-free scoring keeps the policy axis near
     # data-parallel cost on the committed full grid
     assert base["sweep"]["vmap_cell_tax"] <= 1.25
+    # PR 7 acceptance: the committed longhorizon entry must demonstrate
+    # streaming completing UNDER the fixed ceiling the stacked path
+    # exceeded — the gate re-asserts this on every CI run
+    lh = base.get("longhorizon")
+    assert lh, "full bench must record the longhorizon memory entry"
+    assert lh["stream"]["max_rss_mb"] <= lh["ceiling_mb"]
+    assert lh["stacked"]["exceeded_ceiling"] is True
+    assert lh["stacked_buffer_mb"] > 0
 
 
 def test_gate_passes_on_matching_run():
@@ -234,6 +246,69 @@ def test_gate_legacy_baseline_without_backend_still_gates():
         quick["points"][0]["ticks_per_s"] * (1 - TOL - 0.2), 1)
     failures = check(quick, base, TOL)
     assert any("regression" in m and "ticks_per_s" in m
+               for m in failures), failures
+
+
+def test_gate_fails_when_stream_rss_exceeds_ceiling():
+    """The O(state) memory property is gated ABSOLUTELY: streaming RSS
+    above the committed ceiling fails regardless of wall-clock skew."""
+    base = load_base()
+    quick = quick_from(base)
+    quick["longhorizon"]["stream"]["max_rss_mb"] = \
+        base["longhorizon"]["ceiling_mb"] + 1
+    failures = check(quick, base, TOL)
+    assert any("peak RSS" in m and "ceiling" in m for m in failures), failures
+
+
+def test_gate_fails_without_committed_longhorizon():
+    base = load_base()
+    quick = quick_from(base)
+    del base["longhorizon"]
+    failures = check(quick, base, TOL)
+    assert any("longhorizon" in m for m in failures), failures
+
+
+def test_gate_fails_when_baseline_lost_the_crossing():
+    """A baseline refresh that records the stacked child NOT exceeding the
+    ceiling (e.g. someone shrank the horizon) must fail — the memory claim
+    would be ungated."""
+    base = load_base()
+    quick = quick_from(base)
+    base["longhorizon"]["stacked"]["exceeded_ceiling"] = False
+    failures = check(quick, base, TOL)
+    assert any("exceeding" in m for m in failures), failures
+
+
+def test_gate_skips_cross_backend_longhorizon():
+    """RSS on a different backend (device memory vs host) is not
+    comparable — skip with a note, like every other entry."""
+    base = load_base()
+    quick = quick_from(base)
+    base["longhorizon"]["stream"]["backend"] = "gpu"
+    quick["longhorizon"]["stream"]["backend"] = "cpu"
+    quick["longhorizon"]["stream"]["max_rss_mb"] = \
+        base["longhorizon"]["ceiling_mb"] * 10
+    failures = check(quick, base, TOL)
+    assert not any("peak RSS" in m for m in failures), failures
+
+
+def test_gate_fails_on_longhorizon_grid_mismatch():
+    base = load_base()
+    quick = quick_from(base)
+    quick["longhorizon"]["seeds"] += 1
+    failures = check(quick, base, TOL)
+    assert any("longhorizon grid" in m for m in failures), failures
+
+
+def test_gate_longhorizon_speed_joins_the_ratio_pack():
+    """Streaming ticks/s is skew-normalized with the other wall-clock
+    metrics: dropping it far below the pack fails."""
+    base = load_base()
+    quick = quick_from(base)
+    quick["longhorizon"]["stream"]["ticks_per_s"] = round(
+        base["longhorizon"]["stream"]["ticks_per_s"] * (1 - TOL - 0.2), 1)
+    failures = check(quick, base, TOL)
+    assert any("longhorizon stream ticks_per_s" in m
                for m in failures), failures
 
 

@@ -1,0 +1,237 @@
+"""Streaming engine acceptance: chunked == unchunked.
+
+The tentpole property — ``run_sim(chunk=...)`` must be a pure
+representation change, never a dynamics change:
+
+* final state bit-for-bit equal to the stacked path, for ALL six
+  registered policies, under non-dividing chunk sizes and chunk > horizon;
+* integer summary keys (sums, counts, peaks) EXACTLY equal;
+* float summary keys equal to ~f32-ulp (Kahan on device + f64 host fold);
+* the vmapped/sweep streaming variants agree the same way;
+* the f64 fold beats a naive f32 running sum at long synthetic horizons
+  (the dtype-audit satellite's regression test).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (SimConfig, get_policy, list_policies, run_sim,
+                        summarize)
+from repro.core import stats
+from repro.core.scenario import ScenarioSpec, build_scenario, build_scenarios
+from repro.core.types import OnlineSummary, TickMetrics
+from repro.launch.sweep import run_sim_vmapped, run_sweep
+
+SEEDS = (0, 3)
+
+INT_KEYS = ("total_arrivals", "total_decisions", "total_migration_starts",
+            "flow_ticks", "peak_running", "peak_deployed", "peak_overloaded",
+            "peak_queue", "n_completed", "total_migrations", "n_containers")
+FLOAT_KEYS = ("mean_util", "mean_util_variance", "mean_flow_rate",
+              "util_time_variance")
+
+
+def small_cfg(**kw):
+    base = dict(n_jobs=10, n_tasks=40, n_containers=40, horizon=40,
+                arrival_window=10.0, placements_per_tick=16,
+                migrations_per_tick=2)
+    base.update(kw)
+    return SimConfig(**base)
+
+
+def build_small(cfg, seed=0, spec=None):
+    spec = spec or ScenarioSpec("baseline")
+    net_spec, sims, rp = build_scenario(spec, cfg, n_hosts=8, n_spine=2,
+                                        n_leaf=4, seeds=(seed,))
+    sim0 = jax.tree.map(lambda x: x[0], sims)
+    return net_spec, sim0, rp
+
+
+def assert_trees_bitwise_equal(a, b):
+    for (pa, xa), (_, xb) in zip(jax.tree_util.tree_flatten_with_path(a)[0],
+                                 jax.tree_util.tree_flatten_with_path(b)[0]):
+        xa, xb = np.asarray(xa), np.asarray(xb)
+        assert xa.shape == xb.shape, pa
+        assert (xa == xb).all(), f"{pa}: max |delta| = " \
+            f"{np.abs(xa.astype(np.float64) - xb.astype(np.float64)).max()}"
+
+
+def assert_rows_match(stacked, streamed, rtol=3e-6):
+    assert stacked.keys() == streamed.keys()
+    for k in stacked:
+        va, vb = stacked[k], streamed[k]
+        if k in INT_KEYS:
+            assert va == vb, (k, va, vb)
+        elif isinstance(va, float) and isinstance(vb, float):
+            if np.isnan(va) and np.isnan(vb):
+                continue
+            assert va == pytest.approx(vb, rel=rtol), (k, va, vb)
+        else:
+            assert va == vb, (k, va, vb)
+
+
+@pytest.mark.parametrize("policy", list_policies())
+def test_chunked_equals_stacked_all_policies(policy):
+    """Non-dividing chunk (17 into 40): bit-exact state, exact int keys."""
+    cfg = small_cfg()
+    net_spec, sim0, rp = build_small(cfg)
+    pol = get_policy(policy)
+    f_st, m_st = run_sim(sim0, cfg, pol, net_spec.n_hosts, net_spec.n_nodes,
+                         cfg.horizon, params=rp)
+    f_ch, os_ch = run_sim(sim0, cfg, pol, net_spec.n_hosts, net_spec.n_nodes,
+                          cfg.horizon, params=rp, chunk=17)
+    assert isinstance(os_ch, OnlineSummary)
+    assert_trees_bitwise_equal(f_st, f_ch)
+    assert_rows_match(summarize(f_st, m_st), summarize(f_ch, os_ch))
+
+
+@pytest.mark.parametrize("chunk", [1, 7, 40, 64])
+def test_chunk_sizes(chunk):
+    """Dividing, non-dividing, exact, and > horizon chunk sizes all match."""
+    cfg = small_cfg()
+    net_spec, sim0, rp = build_small(cfg)
+    pol = get_policy("netaware")
+    f_st, m_st = run_sim(sim0, cfg, pol, net_spec.n_hosts, net_spec.n_nodes,
+                         cfg.horizon, params=rp)
+    f_ch, os_ch = run_sim(sim0, cfg, pol, net_spec.n_hosts, net_spec.n_nodes,
+                          cfg.horizon, params=rp, chunk=chunk)
+    assert int(os_ch.n_ticks) == cfg.horizon
+    assert_trees_bitwise_equal(f_st, f_ch)
+    assert_rows_match(summarize(f_st, m_st), summarize(f_ch, os_ch))
+
+
+def test_chunked_does_not_corrupt_sim0():
+    """The caller's initial state must stay valid after a chunked run
+    (donation copies it first) — launch/sim.py reuses one built state."""
+    cfg = small_cfg()
+    net_spec, sim0, rp = build_small(cfg)
+    before = jax.tree.map(np.array, sim0)
+    run_sim(sim0, cfg, get_policy("firstfit"), net_spec.n_hosts,
+            net_spec.n_nodes, cfg.horizon, params=rp, chunk=8)
+    assert_trees_bitwise_equal(before, sim0)
+
+
+def test_check_chunk_guard():
+    assert stats.max_chunk_ticks(40) == (2**31 - 1) // 80
+    with pytest.raises(ValueError, match="chunk must be >= 1"):
+        stats.check_chunk(0, 40)
+    with pytest.raises(ValueError, match="overflow"):
+        stats.check_chunk(stats.max_chunk_ticks(40) + 1, 40)
+    stats.check_chunk(stats.max_chunk_ticks(40), 40)   # boundary OK
+
+
+def test_summarize_key_parity():
+    """A streamed run reports EXACTLY the stacked run's summary keys."""
+    cfg = small_cfg(horizon=20)
+    net_spec, sim0, rp = build_small(cfg)
+    pol = get_policy("round")
+    f_st, m_st = run_sim(sim0, cfg, pol, net_spec.n_hosts, net_spec.n_nodes,
+                         cfg.horizon, params=rp)
+    f_ch, os_ch = run_sim(sim0, cfg, pol, net_spec.n_hosts, net_spec.n_nodes,
+                          cfg.horizon, params=rp, chunk=6)
+    assert summarize(f_st, m_st).keys() == summarize(f_ch, os_ch).keys()
+
+
+def test_vmapped_chunked_equals_stacked():
+    """Seed-batched streaming (the bench runner) matches the stacked
+    vmapped run: bit-exact finals, per-seed summaries to f32 ulp."""
+    cfg = small_cfg()
+    net_spec, sims, rps = build_scenarios([ScenarioSpec("baseline")], cfg,
+                                          n_hosts=8, n_spine=2, n_leaf=4,
+                                          seeds=(0, 1, 2))
+    sims1 = jax.tree.map(lambda x: x[0], sims)
+    rp1 = jax.tree.map(lambda x: x[0], rps)
+    pol = get_policy("jobgroup")
+    f_st, m_st = run_sim_vmapped(sims1, cfg, pol, net_spec.n_hosts,
+                                 net_spec.n_nodes, cfg.horizon, rp1)
+    f_ch, os_ch = run_sim_vmapped(sims1, cfg, pol, net_spec.n_hosts,
+                                  net_spec.n_nodes, cfg.horizon, rp1,
+                                  chunk=13)
+    assert_trees_bitwise_equal(f_st, f_ch)
+    ref = stats.online_from_metrics(m_st)
+    for name in OnlineSummary._fields:
+        a, b = np.asarray(getattr(ref, name)), np.asarray(getattr(os_ch, name))
+        if a.dtype.kind == "i":
+            assert (a == b).all(), name
+        else:
+            np.testing.assert_allclose(a, b, rtol=3e-6, err_msg=name)
+
+
+def test_streaming_sweep_equals_stacked_sweep():
+    """Full grid through slabs smaller than the grid: finals bit-exact,
+    summary rows int-exact / float to f32 ulp, and the one-compiled-step
+    property (1 main compile + 1 tail compile at most)."""
+    cfg = small_cfg()
+    scens = [ScenarioSpec("baseline"), ScenarioSpec("slow_net", bw=200.0)]
+    kw = dict(scenarios=scens, seeds=SEEDS, cfg=cfg, n_hosts=8, n_spine=2,
+              n_leaf=4)
+    st = run_sweep(policies=["firstfit", "netaware"], **kw)
+    sm = run_sweep(policies=["firstfit", "netaware"], chunk=17, slab=5, **kw)
+    assert sm.metrics is None and isinstance(sm.summary, OnlineSummary)
+    assert sm.compile_cache_misses <= 2   # main chunk + tail
+    assert_trees_bitwise_equal(st.finals, sm.finals)
+    for a, b in zip(st.summaries(), sm.summaries()):
+        assert_rows_match(a, b)
+
+
+def test_online_fold_beats_naive_f32_at_long_horizons():
+    """Dtype-audit regression (satellite): the chunked Kahan + f64 fold must
+    track the true f64 sum at horizons where a naive f32 running sum has
+    visibly drifted.  Synthetic series — ~1e6 'ticks' of mean-util-like
+    values — so it runs in milliseconds, no simulation needed."""
+    rng = np.random.default_rng(0)
+    T, chunk = 1_000_000, 4096
+    xs = (0.5 + 0.25 * np.sin(np.arange(T) / 37.0)
+          + 0.01 * rng.standard_normal(T)).astype(np.float32)
+    true = xs.astype(np.float64).sum()
+
+    # strictly sequential f32 sum (numpy's pairwise .sum() hides the drift)
+    naive = jax.jit(lambda v: jax.lax.scan(
+        lambda c, x: (c + x, None), jnp.float32(0.0), v)[0])(
+            jnp.asarray(xs))
+
+    @jax.jit
+    def fold_chunk(acc, block):
+        def body(a, m):
+            return stats.acc_update(a, m), None
+        zeros_i = jnp.zeros((), jnp.int32)
+        m = TickMetrics(
+            t=jnp.zeros((), jnp.float32), n_overloaded=zeros_i,
+            n_inactive=zeros_i, n_running=zeros_i, n_deployed=zeros_i,
+            n_communicating=zeros_i, n_waiting=zeros_i, n_completed=zeros_i,
+            n_migrating=zeros_i, new_arrivals=zeros_i, decisions=zeros_i,
+            migrations=zeros_i, util_variance=jnp.zeros((), jnp.float32),
+            mean_util=jnp.zeros((), jnp.float32), active_flows=zeros_i,
+            mean_flow_rate=jnp.zeros((), jnp.float32))
+        ms = jax.vmap(lambda v: m._replace(mean_util=v))(block)
+        acc, _ = jax.lax.scan(body, acc, ms)
+        return acc
+
+    online = stats.online_init()
+    for i in range(0, T, chunk):
+        acc = fold_chunk(stats.acc_init(), jnp.asarray(xs[i:i + chunk]))
+        online = stats.online_fold(online, acc)
+
+    err_naive = abs(float(naive) - true)
+    err_online = abs(float(online.sum_mean_util) - true)
+    assert int(online.n_ticks) == T
+    assert err_online < 0.01, err_online          # ~f32-ulp-per-chunk tight
+    assert err_naive > 100 * max(err_online, 1e-9), (err_naive, err_online)
+    # Welford/Chan variance matches the f64 reference too
+    mu = xs.astype(np.float64)
+    ref_m2 = ((mu - mu.mean()) ** 2).sum()
+    assert float(online.w_m2_util) == pytest.approx(ref_m2, rel=1e-4)
+
+
+def test_online_init_fields_do_not_alias():
+    """Each field must own its buffer — the slab driver writes summaries
+    in place, and shared zero arrays silently merge every field."""
+    os_ = stats.online_init((4,))
+    bufs = [x for x in os_]
+    for i, a in enumerate(bufs):
+        for b in bufs[i + 1:]:
+            assert a is not b
+    os_.n_ticks[0] = 7
+    assert os_.sum_active_flows[0] == 0
+    assert os_.peak_running[0] == 0
