@@ -1,0 +1,138 @@
+"""Append-only perf-history log -> BENCH_history.jsonl (ISSUE 8).
+
+``BENCH_engine.json`` is a snapshot: every full-bench refresh overwrites
+it, so the perf trajectory across PRs only lives in git history.  This
+module condenses each distinct snapshot into ONE compact headline row and
+appends it to ``BENCH_history.jsonl`` — greppable trend data without
+replaying commits.
+
+Rows are deduplicated by content digest against the LAST row: re-running
+the full bench without the committed artifact changing appends nothing,
+while a genuine refresh (new numbers, new entries) always lands one row.
+The row is stamped with the date/commit of the last commit touching the
+artifact when the working copy is clean, or today's date (commit null)
+when stamping a just-regenerated, not-yet-committed snapshot.
+
+    PYTHONPATH=src python -m benchmarks.archive          # append if new
+    PYTHONPATH=src python -m benchmarks.archive --show   # print all rows
+"""
+from __future__ import annotations
+
+import argparse
+import datetime
+import hashlib
+import json
+import os
+import subprocess
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+BENCH_PATH = os.path.join(HERE, "..", "BENCH_engine.json")
+HISTORY_PATH = os.path.join(HERE, "..", "BENCH_history.jsonl")
+
+
+def _digest(bench: dict) -> str:
+    """Content digest of the snapshot (key-order independent)."""
+    blob = json.dumps(bench, sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()[:16]
+
+
+def _git_stamp(path: str) -> tuple[str, str | None]:
+    """(date, short-sha) the snapshot belongs to.
+
+    A clean working copy means the artifact IS the committed one — stamp
+    it with its last commit.  A dirty or untracked artifact is a fresh
+    refresh that has not been committed yet — stamp today, commit null
+    (the digest still dedups reruns).
+    """
+    cwd, name = os.path.dirname(os.path.abspath(path)), os.path.basename(path)
+    try:
+        dirty = subprocess.run(
+            ["git", "diff", "--quiet", "HEAD", "--", name], cwd=cwd,
+            capture_output=True, timeout=10).returncode != 0
+        if not dirty:
+            out = subprocess.run(
+                ["git", "log", "-1", "--format=%cs %h", "--", name],
+                cwd=cwd, capture_output=True, text=True, timeout=10)
+            line = out.stdout.strip()
+            if out.returncode == 0 and line:
+                date, sha = line.split()
+                return date, sha
+    except OSError:
+        pass
+    return datetime.date.today().isoformat(), None
+
+
+def headline(bench: dict) -> dict:
+    """The row: one number per tracked subsystem, nulls where a snapshot
+    predates an entry (old rows stay parseable as the schema grows)."""
+    points = bench.get("points", [])
+    sparse = [p for p in points
+              if p.get("mode") == "sparse"
+              and p.get("policy", "firstfit") == "firstfit"
+              and p.get("delay_mode", "path") == "path"]
+    top = max(sparse, key=lambda p: p["n_hosts"]) if sparse else None
+    sw = bench.get("sweep") or {}
+    tn = bench.get("tune") or {}
+    lh = bench.get("longhorizon") or {}
+    sd = bench.get("sweep_dist") or {}
+    return {
+        "backend": bench.get("backend"),
+        "device": bench.get("device"),
+        "points": len(points),
+        "sparse_speedup": bench.get("sparse_speedup"),
+        "top_point": (f"{top['n_hosts']}h/{top['n_containers']}c"
+                      if top else None),
+        "top_ticks_per_s": top.get("ticks_per_s") if top else None,
+        "sweep_cells_per_s": sw.get("cells_per_s"),
+        "vmap_cell_tax": sw.get("vmap_cell_tax"),
+        "tune_steady_s": tn.get("tune_steady_s"),
+        "stream_max_rss_mb": (lh.get("stream") or {}).get("max_rss_mb"),
+        "dist_overlap_ratio": sd.get("overlap_ratio"),
+        "dist_parallel_ratio": sd.get("dist_parallel_ratio"),
+        "dist_finals_match": sd.get("finals_match"),
+    }
+
+
+def read_history(history_path: str = HISTORY_PATH) -> list[dict]:
+    if not os.path.exists(history_path):
+        return []
+    with open(history_path) as f:
+        return [json.loads(line) for line in f if line.strip()]
+
+
+def append_history(bench_path: str = BENCH_PATH,
+                   history_path: str = HISTORY_PATH) -> bool:
+    """Append one headline row for ``bench_path`` unless the last row
+    already carries the same content digest.  Returns True if a row was
+    written."""
+    with open(bench_path) as f:
+        bench = json.load(f)
+    digest = _digest(bench)
+    rows = read_history(history_path)
+    if rows and rows[-1].get("digest") == digest:
+        return False
+    date, sha = _git_stamp(bench_path)
+    row = {"date": date, "commit": sha, "digest": digest,
+           **headline(bench)}
+    with open(history_path, "a") as f:
+        f.write(json.dumps(row) + "\n")
+    return True
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser("benchmarks.archive")
+    ap.add_argument("--show", action="store_true",
+                    help="print the history rows instead of appending")
+    a = ap.parse_args()
+    if a.show:
+        for row in read_history():
+            print(json.dumps(row))
+        return
+    if append_history():
+        print(f"appended headline row -> {os.path.abspath(HISTORY_PATH)}")
+    else:
+        print("snapshot unchanged — no row appended")
+
+
+if __name__ == "__main__":
+    main()

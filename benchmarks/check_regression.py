@@ -49,6 +49,13 @@ quick run (<= 1.25 * (1 + tol)) are held to it.  The ``tune`` smoke entry
 (weight search through the compiled sweep) must exist, compile exactly
 once, and its per-cell wall joins the skew-normalized pack.
 
+ISSUE 8 (multi-process fabric) adds the ``sweep_dist`` gate: the quick
+run's spawned arms must stay bit-identical to the in-process sweep, keep
+the per-process compile bill at <= 2, and hold the within-run
+``overlap_ratio`` (serial vs overlapped gather, machine-independent) to
+within ``tol`` of the committed one.  The spawn-cold arm walls never join
+the skew pack — they are compile-bound, like ``tune_cold_s``.
+
 ``tol`` defaults to 0.30 — headroom for per-metric CI noise on top of the
 skew correction; the gate is one-sided, so getting faster never fails.
 Override with ``BENCH_TOL``.
@@ -231,6 +238,62 @@ def check(quick: dict, base: dict, tol: float) -> list[str]:
                         f"({q_stream['ticks_per_s']} vs committed "
                         f"{r_stream['ticks_per_s']})",
                         q_stream["ticks_per_s"] / r_stream["ticks_per_s"]))
+
+    # -- multi-process fabric: identity + compile bill + overlap ratio ------
+    # The spawned-arm walls are cold (process spin-up + XLA compile
+    # dominate at smoke scale), so — like tune_cold_s — they stay OUT of
+    # the skew-normalized ratio pack.  What IS gated: the distributed
+    # results must remain bit-identical to the in-process sweep, every arm
+    # must compile at most twice per process (steady jstep + final-slab
+    # remainder), and the within-run overlap_ratio (serial / overlapped
+    # max worker wall, machine-independent by construction) must not fall
+    # more than tol below the committed one.
+    sd = quick.get("sweep_dist") or {}
+    ref_sd = base.get("sweep_dist")
+    if ref_sd is None:
+        failures.append(
+            "committed BENCH_engine.json has no 'sweep_dist' entry; "
+            "re-run the full bench to record the multi-process fabric "
+            "reference (ISSUE 8)")
+    else:
+        if not ref_sd.get("finals_match"):
+            failures.append(
+                "committed sweep_dist baseline does not demonstrate "
+                "bit-identical distributed finals — the fabric's identity "
+                "claim is ungated; re-run the full bench")
+        if not sd:
+            failures.append("no 'sweep_dist' entry in the quick run")
+        elif backends_differ(sd, ref_sd):
+            print(f"note: skipping cross-backend sweep_dist comparison: "
+                  f"quick ran on {sd['backend']!r}, committed on "
+                  f"{ref_sd['backend']!r}")
+        else:
+            grid = ("n_hosts", "n_containers", "horizon", "cells",
+                    "chunk", "slab")
+            if any(sd.get(k) != ref_sd.get(k) for k in grid):
+                failures.append(
+                    f"sweep_dist grid {[sd.get(k) for k in grid]} != "
+                    f"committed {[ref_sd.get(k) for k in grid]}")
+            else:
+                if not sd.get("finals_match"):
+                    failures.append(
+                        "regression: distributed sweep results are no "
+                        "longer bit-identical to the in-process sweep "
+                        "(sweep_dist finals_match is false)")
+                for name, arm in (sd.get("arms") or {}).items():
+                    if arm.get("compile_cache_misses", 99) > 2:
+                        failures.append(
+                            f"regression: sweep_dist arm {name!r} compiled "
+                            f"{arm.get('compile_cache_misses')}x per "
+                            f"process (must be <= 2: steady jstep + "
+                            f"final-slab remainder)")
+                got = sd.get("overlap_ratio")
+                ref = ref_sd.get("overlap_ratio")
+                if got and ref and got < ref * (1.0 - tol):
+                    failures.append(
+                        f"regression: within-run dist overlap_ratio "
+                        f"{got} < committed {ref} - {tol:.0%} — the "
+                        f"overlapped slab driver stopped hiding gathers")
 
     # -- one-sided gate on skew-normalized ratios ---------------------------
     if ratios:

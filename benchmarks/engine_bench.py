@@ -45,6 +45,13 @@ row), so the on/off pair measures the same code there; the pair only
 separates on TPU/GPU.  check_regression.py refuses cross-backend
 comparisons outright.
 
+ISSUE 8 (multi-process fabric) adds the ``sweep_dist`` entry: the same
+smoke grid through the in-process streamed sweep and three spawned
+``repro.launch.dist`` arms (1 proc, 2 procs, 2 procs serial-gather),
+gated on bit-identical results, the <=2/process compile bill, and the
+within-run overlap ratio; full mode also appends a headline row to
+``BENCH_history.jsonl`` via ``benchmarks.archive``.
+
     PYTHONPATH=src python -m benchmarks.engine_bench [--quick]
 """
 from __future__ import annotations
@@ -69,6 +76,12 @@ QUICK_SWEEP = dict(n_hosts=50, n_containers=300, horizon=40)
 # the tune smoke grid: both modes measure the SAME grid (the quick run is
 # gated against the committed entry like-for-like)
 TUNE_SMOKE = dict(n_hosts=50, n_containers=300, horizon=40, samples=8)
+# the multi-process fabric smoke grid (ISSUE 8): small enough that three
+# spawned arms fit in the quick bench, large enough for several slabs per
+# worker (24 cells / slab 6 = 4 slabs) so the handout and the overlapped
+# gather actually cycle
+DIST_SMOKE = dict(n_hosts=20, n_containers=120, horizon=40, chunk=20,
+                  slab=6)
 
 
 def _timed(f) -> float:
@@ -231,6 +244,111 @@ def measure_tune_point(n_hosts: int, n_containers: int, horizon: int,
     }
 
 
+def _trees_bitwise_equal(a, b) -> bool:
+    """Leaf-by-leaf byte equality (NaN-safe: same bits compare equal)."""
+    import jax
+    import numpy as np
+
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    if len(la) != len(lb):
+        return False
+    for x, y in zip(la, lb):
+        x, y = np.asarray(x), np.asarray(y)
+        if x.shape != y.shape or x.dtype != y.dtype \
+                or x.tobytes() != y.tobytes():
+            return False
+    return True
+
+
+def measure_dist_point(n_hosts: int, n_containers: int, horizon: int,
+                       chunk: int, slab: int) -> dict:
+    """Multi-process sweep fabric smoke (ISSUE 8): the same grid through
+    (a) the in-process streamed sweep — the bit-identity reference — then
+    three SPAWNED arms: 1 process, 2 processes, and 2 processes with the
+    overlapped slab driver disabled.  Every arm must reproduce the
+    reference finals+summary bit-for-bit and compile at most twice per
+    process (steady jstep + final-slab remainder).  Spawned walls are
+    COLD (python + jax import and XLA compile dominate at smoke scale),
+    so they stay out of check_regression's skew-normalized ratio pack —
+    the tracked numbers are the within-run ratios:
+
+    * ``overlap_ratio``       — serial / overlapped max worker wall at
+      2 processes (>1 means the overlapped gather hides transfer time);
+    * ``dist_parallel_ratio`` — 1-proc / 2-proc max worker wall.
+
+    On a single-core box both sit near 1.0 BY DESIGN: two worker
+    processes time-share the core and there is no spare compute to hide
+    gathers under.  The committed baseline records whatever the bench box
+    offers and the gate compares like-for-like (plus cross-backend skip).
+    """
+    import jax
+
+    from repro.core import SimConfig, list_policies
+    from repro.launch import dist
+    from repro.launch.sweep import run_sweep
+
+    cfg = SimConfig(n_jobs=max(10, n_containers // 3), n_tasks=n_containers,
+                    n_containers=n_containers, horizon=horizon)
+    n_leaf = max(4, n_hosts // 5)
+    n_spine = max(2, n_leaf // 4)
+    pols = list_policies()
+    specs = bench_scenarios()
+    cells = len(pols) * len(specs)
+
+    jax.clear_caches()
+    t0 = time.time()
+    ref = run_sweep(pols, specs, seeds=(0,), cfg=cfg, n_hosts=n_hosts,
+                    n_spine=n_spine, n_leaf=n_leaf, chunk=chunk, slab=slab)
+    inproc_wall = time.time() - t0
+
+    def arm(num_procs: int, overlap: bool) -> dict:
+        res = dist.run_dist_sweep(
+            pols, specs, seeds=(0,), cfg=cfg, n_hosts=n_hosts,
+            n_spine=n_spine, n_leaf=n_leaf, num_procs=num_procs,
+            devices_per_proc=1, chunk=chunk, slab=slab, overlap=overlap,
+            timeout_s=600.0)
+        metas = sorted(res.worker_meta, key=lambda m: m["process_index"])
+        return {
+            "procs": num_procs,
+            "overlap": overlap,
+            "wall_s": res.wall_s,
+            "max_worker_wall_s": round(max(m["wall_s"] for m in metas), 2),
+            "compile_cache_misses": res.compile_cache_misses,
+            "slabs_per_worker": [len(m["slabs"]) for m in metas],
+            "finals_match": (
+                _trees_bitwise_equal(res.finals, ref.finals)
+                and _trees_bitwise_equal(res.summary, ref.summary)),
+        }
+
+    arms = {
+        "1proc": arm(1, True),
+        "2proc": arm(2, True),
+        "2proc_serial": arm(2, False),
+    }
+
+    def ratio(num, den):
+        return round(arms[num]["max_worker_wall_s"]
+                     / max(arms[den]["max_worker_wall_s"], 1e-9), 2)
+
+    return {
+        "n_hosts": n_hosts,
+        "n_containers": n_containers,
+        "horizon": horizon,
+        "policies": len(pols),
+        "scenarios": len(specs),
+        "seeds": 1,
+        "cells": cells,
+        "chunk": chunk,
+        "slab": slab,
+        "devices_per_proc": 1,
+        "inproc_wall_s": round(inproc_wall, 2),
+        "arms": arms,
+        "overlap_ratio": ratio("2proc_serial", "2proc"),
+        "dist_parallel_ratio": ratio("1proc", "2proc"),
+        "finals_match": all(a["finals_match"] for a in arms.values()),
+    }
+
+
 def bench_engine(quick: bool = False):
     """Rows + claims for benchmarks.run; writes BENCH_engine.json."""
     import jax
@@ -302,11 +420,16 @@ def bench_engine(quick: bool = False):
         sweep = measure_sweep_point(500, 3000, horizon=20, with_loop=True)
         sweep_quick = measure_sweep_point(**QUICK_SWEEP, with_loop=False)
     tune = measure_tune_point(**TUNE_SMOKE)
+    # the multi-process fabric arms (ISSUE 8): measured in BOTH modes on
+    # the same smoke grid so the CI quick gate has a like-for-like
+    # committed twin (bit-identity + compile bill + overlap ratio)
+    sweep_dist = measure_dist_point(**DIST_SMOKE)
     from benchmarks.longhorizon_bench import measure_longhorizon
     longhorizon = measure_longhorizon(quick=quick)
     backend = jax.default_backend()
     sweep["backend"] = backend
     tune["backend"] = backend
+    sweep_dist["backend"] = backend
     out = {
         "bench": "engine_tick_throughput",
         "backend": backend,
@@ -316,6 +439,7 @@ def bench_engine(quick: bool = False):
         "sparse_speedup": speedup,
         "sweep": sweep,
         "tune": tune,
+        "sweep_dist": sweep_dist,
         "longhorizon": longhorizon,
     }
     if sweep_quick is not None:
@@ -352,6 +476,13 @@ def bench_engine(quick: bool = False):
          f"compiled {tune['compile_cache_misses']}x",
          f"cold {tune['tune_cold_s']}s, best/incumbent "
          f"{tune['best_vs_incumbent']}x on {tune['objective']}"),
+        (f"dist fabric {sweep_dist['cells']} cells (chunk "
+         f"{sweep_dist['chunk']}, slab {sweep_dist['slab']}) x "
+         f"{{1,2}} procs",
+         f"bitwise match: {sweep_dist['finals_match']}, "
+         f"overlap {sweep_dist['overlap_ratio']}x, 2-proc parallel "
+         f"{sweep_dist['dist_parallel_ratio']}x, compiles/process <= "
+         f"{max(a['compile_cache_misses'] for a in sweep_dist['arms'].values())}"),
         (f"longhorizon streaming @ {longhorizon['horizon']} ticks x "
          f"{longhorizon['seeds']} seeds",
          f"{longhorizon['stream']['max_rss_mb']} MB peak RSS, "
@@ -370,6 +501,12 @@ def bench_engine(quick: bool = False):
         claims.append(("policy ticks/s @ 500h/3000c "
                        "(firstfit vs jobgroup vs netaware)",
                        str(out.get("policy_comparison"))))
+        # every full refresh appends one headline row to the perf-history
+        # log (deduped by content digest — a no-change rerun appends none)
+        from benchmarks.archive import HISTORY_PATH, append_history
+        claims.append(("bench history",
+                       f"appended={append_history()} -> "
+                       f"{os.path.abspath(HISTORY_PATH)}"))
     return points, claims
 
 

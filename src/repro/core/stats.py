@@ -215,6 +215,51 @@ def online_fold(host: OnlineSummary, acc: SummaryAcc) -> OnlineSummary:
     )
 
 
+def online_merge(a: OnlineSummary, b: OnlineSummary) -> OnlineSummary:
+    """Merge two host-side summaries (both already f64/i64).
+
+    The cross-host reduction of the distributed sweep
+    (``repro.launch.dist``): each process folds its owned cells into a
+    grid-shaped partial summary whose non-owned cells are all-zero
+    (``online_init``), and the coordinator reduces the partials with this
+    combine.  It is the same Chan parallel-combine rule as
+    :func:`online_fold`, but over two finished summaries instead of a
+    summary and a device chunk — associative, and EXACT on zero cells
+    (``n_ticks == 0`` makes the Welford delta term collapse to the other
+    side's value bit-for-bit, sums add 0.0, peaks max with 0), so merging
+    disjoint-support partials reproduces the single-process summary
+    bit-identically, in any merge order.  Broadcasts over leading batch
+    axes.
+    """
+    na = a.n_ticks.astype(np.float64)
+    nb = b.n_ticks.astype(np.float64)
+    n = na + nb
+    safe_n = np.where(n > 0, n, 1.0)
+    delta = b.w_mean_util - a.w_mean_util
+    # the ratios are formed FIRST: on empty sides nb/n is exactly 1.0
+    # (na == 0) or 0.0 (nb == 0), so the delta term collapses bitwise.
+    # Left-to-right (delta * nb) / n would round twice and break the
+    # zero-partial identity (caught by test_sweep_dist).
+    w_mean = a.w_mean_util + delta * (nb / safe_n)
+    w_m2 = (a.w_m2_util + b.w_m2_util
+            + delta * delta * (na * nb / safe_n))
+    return OnlineSummary(
+        n_ticks=a.n_ticks + b.n_ticks,
+        sum_util_var=a.sum_util_var + b.sum_util_var,
+        sum_mean_util=a.sum_mean_util + b.sum_mean_util,
+        sum_flow_rate=a.sum_flow_rate + b.sum_flow_rate,
+        w_mean_util=w_mean, w_m2_util=w_m2,
+        sum_active_flows=a.sum_active_flows + b.sum_active_flows,
+        sum_arrivals=a.sum_arrivals + b.sum_arrivals,
+        sum_decisions=a.sum_decisions + b.sum_decisions,
+        sum_migrations=a.sum_migrations + b.sum_migrations,
+        peak_running=np.maximum(a.peak_running, b.peak_running),
+        peak_deployed=np.maximum(a.peak_deployed, b.peak_deployed),
+        peak_overloaded=np.maximum(a.peak_overloaded, b.peak_overloaded),
+        peak_inactive=np.maximum(a.peak_inactive, b.peak_inactive),
+    )
+
+
 def online_from_metrics(metrics: TickMetrics) -> OnlineSummary:
     """The stacked-path twin: the same summary computed from a full
     [..., T] ``TickMetrics`` series in f64.

@@ -9,14 +9,22 @@ from __future__ import annotations
 import jax
 
 
-def compat_mesh(shape, axes):
+def compat_mesh(shape, axes, devices=None):
     """``jax.make_mesh`` with Auto axis types where the jax version has them
-    (``jax.sharding.AxisType`` only exists in newer releases)."""
+    (``jax.sharding.AxisType`` only exists in newer releases).
+
+    ``devices`` optionally pins an explicit device sequence (e.g. a subset,
+    or ``jax.local_devices()`` under ``jax.distributed`` where the global
+    ``jax.devices()`` list contains non-addressable devices) — the sweep
+    fabric's ``grid_mesh`` builds through here so there is exactly ONE
+    AxisType-compat mesh constructor in the repo.
+    """
+    kwargs = {} if devices is None else {"devices": devices}
     axis_type = getattr(jax.sharding, "AxisType", None)
     if axis_type is not None:
         return jax.make_mesh(
-            shape, axes, axis_types=(axis_type.Auto,) * len(axes))
-    return jax.make_mesh(shape, axes)  # older jax: Auto is the only behavior
+            shape, axes, axis_types=(axis_type.Auto,) * len(axes), **kwargs)
+    return jax.make_mesh(shape, axes, **kwargs)  # older jax: Auto only
 
 
 _mesh = compat_mesh

@@ -39,6 +39,7 @@ from repro.core.scenario import (ScenarioSpec, build_scenarios,
 from repro.core.scheduling import validate_weights
 from repro.core.types import (OnlineSummary, PolicyParams, RunParams,
                               SimState, TickMetrics)
+from repro.launch.mesh import compat_mesh
 
 I32 = jnp.int32
 
@@ -79,18 +80,24 @@ def stack_policies(names_or_params: Sequence) -> PolicyParams:
 def grid_mesh(devices=None) -> Mesh | None:
     """1-axis device mesh for the flattened sweep batch.
 
-    ``devices``: None = all local devices, an int = that many, or an
+    ``devices``: None = all addressable devices, an int = that many, or an
     explicit device sequence.  Returns None for a single device — the
-    unsharded sweep needs no mesh at all.
+    unsharded sweep needs no mesh at all.  Defaults to
+    ``jax.local_devices()`` (not ``jax.devices()``): under
+    ``jax.distributed`` the global list contains other processes'
+    non-addressable devices, and the sweep fabric's cross-host story is
+    slab-per-process with a host-side reduction (``repro.launch.dist``),
+    never a global-SPMD program.  Built through ``mesh.compat_mesh`` —
+    the repo's one AxisType-compat mesh constructor.
     """
     if devices is None:
-        devices = jax.devices()
+        devices = jax.local_devices()
     elif isinstance(devices, int):
-        devices = jax.devices()[:devices]
+        devices = jax.local_devices()[:devices]
     devices = list(devices)
     if len(devices) <= 1:
         return None
-    return Mesh(np.asarray(devices), ("grid",))
+    return compat_mesh((len(devices),), ("grid",), devices=devices)
 
 
 def make_sweep_fn(cfg: SimConfig, n_hosts: int, n_nodes: int, horizon: int,
@@ -193,7 +200,8 @@ def _check_topology_uniform(sims) -> None:
 
 
 def make_stream_fn(cfg: SimConfig, n_hosts: int, n_nodes: int, horizon: int,
-                   chunk: int, slab: int | None = None, devices=None):
+                   chunk: int, slab: int | None = None, devices=None,
+                   overlap: bool = True):
     """The streaming sweep: the same [P, S, N] grid as ``make_sweep_fn``,
     but iterated in device-multiple SLABS of cells through ONE compiled
     slab-chunk step, with per-tick metrics folded into ``SummaryAcc``
@@ -206,11 +214,10 @@ def make_stream_fn(cfg: SimConfig, n_hosts: int, n_nodes: int, horizon: int,
 
     Chunking the horizon and slabbing the grid compose in one loop nest:
 
-        for each slab of cells:                # host gather, wrap-padded
-            accs = 0
-            for t0 in range(0, horizon, chunk):
-                sims, accs = step(sims, accs, t0)   # ONE jitted function
-                fold accs into the host f64/i64 summary
+        for each slab of cells:                # wrap-padded start offsets
+            enqueue every chunk step           # ONE jitted function, async
+            gather the PREVIOUS slab's finals + accs   # one device_get
+            fold its accs into the host f64/i64 summary
 
     The jitted step is compiled once for the main chunk size (+ one tail
     compile when ``chunk`` does not divide ``horizon``): ``t0`` is traced,
@@ -219,6 +226,25 @@ def make_stream_fn(cfg: SimConfig, n_hosts: int, n_nodes: int, horizon: int,
     directions (``in_axes``/``out_axes`` None) so every slab re-enters the
     same compiled program.  On non-CPU backends the (state, accumulator)
     carry is donated, so a slab's device footprint never doubles.
+
+    The driver is OVERLAPPED (PR 8): jax dispatch is asynchronous, so the
+    loop never blocks between chunks — per-chunk accumulators are kept as
+    device arrays and the whole slab (every finals leaf + every chunk's
+    ``SummaryAcc``) comes back in ONE batched ``jax.device_get``, issued
+    only after the NEXT slab's steps are already enqueued
+    (``overlap=True``).  The host-side fold and slice-write of slab *k*
+    then runs while the device integrates slab *k+1*; peak footprint is
+    two slabs (the in-flight one plus the one being gathered).
+    ``overlap=False`` keeps the gather synchronous (slab *k* is fetched
+    before slab *k+1* is touched) — the PR 7 behavior, minus its per-leaf
+    ``np.asarray`` and per-chunk host-fold stalls, kept as the bench
+    comparison arm.
+
+    ``fn.iter_slabs(sims, pols, rps, slab_starts)`` exposes the runner
+    itself — a generator of ``(s0, finals_leaves, slab_summary)`` per
+    start offset — so the distributed launcher (``repro.launch.dist``)
+    can drive the SAME compiled step from a coordinator-fed slab queue
+    instead of ``range(0, B, Bs)``.
     """
     stats.check_chunk(chunk, cfg.n_containers)
     mesh = grid_mesh(devices)
@@ -248,45 +274,103 @@ def make_stream_fn(cfg: SimConfig, n_hosts: int, n_nodes: int, horizon: int,
     donate = (0, 1) if jax.default_backend() != "cpu" else ()
     jstep = jax.jit(step, static_argnames=("csz",), donate_argnums=donate)
 
-    def fn(sims, pols, rps):
+    def slab_cells(B: int) -> int:
+        """Wrap-padded device-multiple slab size for a B-cell grid."""
+        Bs = B if slab is None else min(slab, B)
+        return Bs + (-Bs) % n_dev
+
+    def iter_slabs(sims, pols, rps, slab_starts):
+        """Run the wrap-padded slab at each start offset; yield
+        ``(s0, finals_leaves, slab_summary)`` — finals as host numpy per
+        flattened ``SimState`` leaf (statics de-batched), summary a [Bs]
+        ``OnlineSummary``.  ``slab_starts`` may be any iterable (a lazy
+        coordinator queue included); each start owns cells
+        ``(s0 + arange(Bs)) % B`` of which the first ``min(Bs, B - s0)``
+        are real."""
         _check_topology_uniform(sims)
         P = pols.weights.shape[0]
         S, N = sims.t.shape
         B = P * S * N
-        Bs = B if slab is None else min(slab, B)
-        Bs += (-Bs) % n_dev                      # device-multiple slabs
-
+        Bs = slab_cells(B)
         flat_sims, sims_def = jtu.tree_flatten_with_path(sims)
         statics = {i for i, (p, _) in enumerate(flat_sims)
                    if _is_static_leaf(p)}
-        summary = stats.online_init((B,))
-        finals_flat = None                       # host [B, ...] per leaf
+        if mesh is not None:
+            # pre-place slab inputs in their final layout: the FIRST jstep
+            # call then compiles for grid-sharded carries, the same
+            # signature every later chunk re-enters — without this the
+            # unsharded first call costs a third compilation per process
+            gspec = NamedSharding(mesh, PartitionSpec("grid"))
+            repl = NamedSharding(mesh, PartitionSpec())
+            place = lambda x, s: jax.device_put(x, s)
+        else:
+            gspec = repl = None
+            place = lambda x, s: x
         zero_accs = lambda: jax.tree.map(
-            lambda x: jnp.zeros((Bs,), x.dtype), stats.acc_init())
+            lambda x: place(jnp.zeros((Bs,), x.dtype), gspec),
+            stats.acc_init())
 
-        for s0 in range(0, B, Bs):
+        def enqueue(s0):
             idx = (s0 + np.arange(Bs)) % B       # wrap-pad the last slab
             p_i, s_i, n_i = idx // (S * N), (idx // N) % S, idx % N
             sim_slab = jtu.tree_unflatten(
-                sims_def, [x[0, 0] if i in statics else x[s_i, n_i]
+                sims_def, [place(x[0, 0], repl) if i in statics
+                           else place(x[s_i, n_i], gspec)
                            for i, (_, x) in enumerate(flat_sims)])
-            pol_slab = jax.tree.map(lambda x: x[p_i], pols)
-            rp_slab = jax.tree.map(lambda x: x[s_i], rps)
-            slab_sum = stats.online_init((Bs,))
+            pol_slab = jax.tree.map(lambda x: place(x[p_i], gspec), pols)
+            rp_slab = jax.tree.map(lambda x: place(x[s_i], gspec), rps)
+            accs = []
             t0 = 0
             while t0 < horizon:
                 sz = min(chunk, horizon - t0)    # tail: one extra compile
                 # the accumulator RESETS every chunk (the i32 bound and the
                 # f32 precision argument are per-chunk properties); the
-                # host fold below carries the running 64-bit totals
-                sim_slab, accs = jstep(sim_slab, zero_accs(), pol_slab,
-                                       rp_slab, jnp.asarray(t0, I32),
-                                       csz=sz)
-                slab_sum = stats.online_fold(slab_sum, accs)
+                # host fold in finish() carries the running 64-bit totals
+                sim_slab, acc = jstep(sim_slab, zero_accs(), pol_slab,
+                                      rp_slab, jnp.asarray(t0, I32),
+                                      csz=sz)
+                accs.append(acc)
                 t0 += sz
+            return s0, sim_slab, accs
+
+        def finish(pend):
+            s0, sim_slab, accs = pend
+            # ONE host transfer for the whole slab: every finals leaf and
+            # every chunk's SummaryAcc in a single batched device_get
+            # (PR 7 issued one blocking np.asarray per leaf per slab plus
+            # one per-chunk sync inside the fold loop)
+            host_leaves, host_accs = jax.device_get(
+                (jtu.tree_leaves(sim_slab), accs))
+            slab_sum = stats.online_init((Bs,))
+            for a in host_accs:
+                slab_sum = stats.online_fold(slab_sum, a)
+            return s0, host_leaves, slab_sum
+
+        pending = None
+        for s0 in slab_starts:
+            cur = enqueue(s0)                    # async: nothing blocks yet
+            if not overlap:
+                yield finish(cur)
+                continue
+            if pending is not None:              # gather k AFTER k+1 is in
+                yield finish(pending)
+            pending = cur
+        if pending is not None:
+            yield finish(pending)
+
+    def fn(sims, pols, rps):
+        P = pols.weights.shape[0]
+        S, N = sims.t.shape
+        B = P * S * N
+        Bs = slab_cells(B)
+        flat_sims, sims_def = jtu.tree_flatten_with_path(sims)
+        statics = {i for i, (p, _) in enumerate(flat_sims)
+                   if _is_static_leaf(p)}
+        summary = stats.online_init((B,))
+        finals_flat = None                       # host [B, ...] per leaf
+        for s0, host_slab, slab_sum in iter_slabs(sims, pols, rps,
+                                                  range(0, B, Bs)):
             real = min(Bs, B - s0)               # wrap rows are duplicates
-            host_slab = [np.asarray(x)
-                         for x in jtu.tree_leaves(sim_slab)]
             if finals_flat is None:
                 finals_flat = [
                     x if i in statics
@@ -308,6 +392,8 @@ def make_stream_fn(cfg: SimConfig, n_hosts: int, n_nodes: int, horizon: int,
 
     fn._cache_size = jstep._cache_size
     fn.n_devices = n_dev
+    fn.iter_slabs = iter_slabs
+    fn.slab_cells = slab_cells
     return fn
 
 
@@ -322,6 +408,7 @@ class SweepResult:
     compile_cache_misses: int  # jit cache entries the sweep call created
     n_devices: int = 1         # devices the flattened grid axis spans
     summary: OnlineSummary | None = None  # [P, S, N] streaming fold
+    worker_meta: list | None = None  # per-process slabs/walls (launch.dist)
     _rows: list | None = dataclasses.field(default=None, repr=False)
 
     def summaries(self) -> list[dict[str, Any]]:
@@ -342,7 +429,7 @@ def run_sweep(policies: Sequence[str] | None = None,
               seeds: Sequence[int] = (0,), cfg: SimConfig | None = None,
               n_hosts: int = 20, n_spine: int = 2,
               n_leaf: int = 4, devices=None, chunk: int | None = None,
-              slab: int | None = None) -> SweepResult:
+              slab: int | None = None, overlap: bool = True) -> SweepResult:
     """Build the grid and run it as one compiled call (sharded over
     ``devices`` — default: every local device).
 
@@ -351,6 +438,8 @@ def run_sweep(policies: Sequence[str] | None = None,
     iterated in slabs of ``slab`` cells (default: the whole grid) through
     one compiled step — [P, S, N] summaries without ever holding
     [P, S, N, T] metrics.  Cell results are bit-identical either way.
+    ``overlap`` (streaming only) gathers each slab's results one slab
+    behind the dispatch so host transfers hide under device compute.
     """
     policies = list(policies if policies is not None else list_policies())
     scenarios = list(scenarios if scenarios is not None
@@ -363,7 +452,7 @@ def run_sweep(policies: Sequence[str] | None = None,
     if chunk is not None:
         fn = make_stream_fn(cfg, net_spec.n_hosts, net_spec.n_nodes,
                             cfg.horizon, chunk=chunk, slab=slab,
-                            devices=devices)
+                            devices=devices, overlap=overlap)
         t0 = time.time()
         finals, summary = fn(sims, pol, rps)
         return SweepResult(policies=policies, scenarios=scenarios,
@@ -463,6 +552,9 @@ def main() -> None:
                     help="with --chunk: iterate the grid in slabs of this "
                          "many cells through one compiled step (default: "
                          "the whole grid at once)")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="with --chunk: gather each slab synchronously "
+                         "instead of one slab behind the async dispatch")
     ap.add_argument("--table", default="avg_runtime",
                     help="summary metric for the grouped table")
     ap.add_argument("--out", default=None,
@@ -487,7 +579,7 @@ def main() -> None:
     res = run_sweep(policies=policies, seeds=range(args.seeds), cfg=cfg,
                     n_hosts=args.hosts, n_spine=max(2, n_leaf // 4),
                     n_leaf=n_leaf, devices=args.devices, chunk=args.chunk,
-                    slab=args.slab)
+                    slab=args.slab, overlap=not args.no_overlap)
     cells = len(res.policies) * len(res.scenarios) * len(res.seeds)
     from repro.kernels import kernel_backend, resolve_kernel
     backend = kernel_backend()

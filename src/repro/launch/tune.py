@@ -126,7 +126,8 @@ def run_tune(n_samples: int = 16, seeds: Sequence[int] = (0,),
              space: dict[str, tuple[float, float]] | None = None,
              grid: bool = False, seed: int = 0,
              devices=None, reps: int = 1, chunk: int | None = None,
-             slab: int | None = None) -> TuneResult:
+             slab: int | None = None, overlap: bool = True,
+             procs: int = 1, devices_per_proc: int = 1) -> TuneResult:
     """One compiled call over the whole search population.
 
     The per-sample score is the objective's plain mean over every
@@ -142,9 +143,19 @@ def run_tune(n_samples: int = 16, seeds: Sequence[int] = (0,),
 
     ``chunk`` streams the search through ``make_stream_fn`` — [W, S, N]
     summaries via online folds, never a [W, S, N, T] metrics stack, with
-    the population optionally slabbed ``slab`` cells at a time.  Scores
+    the population optionally slabbed ``slab`` cells at a time (and, with
+    ``overlap``, gathered one slab behind the async dispatch).  Scores
     match the stacked search to float precision (integer objectives
     exactly).
+
+    ``procs > 1`` runs the streamed search MULTI-PROCESS through the
+    distributed sweep fabric (``repro.launch.dist``): the weight
+    population rides the same slab-per-process handout as a policy sweep
+    (weights are just the policy batch axis), each process owning
+    ``devices_per_proc`` forced CPU devices locally or one accelerator
+    process slot on a real fleet, and the partial summaries reduced with
+    ``stats.online_merge``.  Requires ``chunk``; scores are bit-identical
+    to the single-process streamed search.
     """
     cfg = cfg or SimConfig()
     scenarios = list(scenarios if scenarios is not None else [
@@ -159,10 +170,20 @@ def run_tune(n_samples: int = 16, seeds: Sequence[int] = (0,),
     net_spec, sims, rps = build_scenarios(scenarios, cfg, n_hosts=n_hosts,
                                           n_spine=n_spine, n_leaf=n_leaf,
                                           seeds=seeds)
-    if chunk is not None:
+    if procs > 1:
+        if chunk is None:
+            raise ValueError("procs > 1 requires chunk (the distributed "
+                             "fabric streams slabs; there is no stacked "
+                             "multi-process path)")
+        from repro.launch.dist import make_dist_fn
+        fn = make_dist_fn(cfg, scenarios, seeds, weights=W,
+                          n_hosts=n_hosts, n_spine=n_spine, n_leaf=n_leaf,
+                          num_procs=procs, devices_per_proc=devices_per_proc,
+                          chunk=chunk, slab=slab, overlap=overlap)
+    elif chunk is not None:
         fn = make_stream_fn(cfg, net_spec.n_hosts, net_spec.n_nodes,
                             cfg.horizon, chunk=chunk, slab=slab,
-                            devices=devices)
+                            devices=devices, overlap=overlap)
     else:
         fn = make_sweep_fn(cfg, net_spec.n_hosts, net_spec.n_nodes,
                            cfg.horizon, devices=devices)
@@ -219,6 +240,13 @@ def main() -> None:
                          "summaries (O(state) memory)")
     ap.add_argument("--slab", type=int, default=None,
                     help="with --chunk: population slab size in cells")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="with --chunk: synchronous slab gathers")
+    ap.add_argument("--procs", type=int, default=1,
+                    help="with --chunk: run the search across this many "
+                         "jax.distributed processes (repro.launch.dist)")
+    ap.add_argument("--devices-per-proc", type=int, default=1,
+                    help="forced CPU devices per process (--procs)")
     ap.add_argument("--top", type=int, default=10)
     ap.add_argument("--out", default=None,
                     help="write best weights + ranked samples as JSON")
@@ -231,7 +259,8 @@ def main() -> None:
                    n_spine=max(2, n_leaf // 4), n_leaf=n_leaf,
                    objective=args.objective, base=args.base,
                    grid=args.grid, seed=args.seed, chunk=args.chunk,
-                   slab=args.slab)
+                   slab=args.slab, overlap=not args.no_overlap,
+                   procs=args.procs, devices_per_proc=args.devices_per_proc)
     cells = args.samples * len(res.scenarios) * len(res.seeds)
     print(f"# {cells} cells ({args.samples} weight samples x "
           f"{len(res.scenarios)} scenarios x {len(res.seeds)} seeds) in "

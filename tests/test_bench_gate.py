@@ -30,6 +30,7 @@ def quick_from(base):
         "sparse_speedup": 1.5,
         "sweep": copy.deepcopy(base["sweep_quick"]),
         "tune": copy.deepcopy(base["tune"]),
+        "sweep_dist": copy.deepcopy(base["sweep_dist"]),
         "longhorizon": lh,
     }
 
@@ -54,6 +55,16 @@ def test_committed_baseline_has_the_gate_inputs():
     assert lh["stream"]["max_rss_mb"] <= lh["ceiling_mb"]
     assert lh["stacked"]["exceeded_ceiling"] is True
     assert lh["stacked_buffer_mb"] > 0
+    # PR 8 acceptance: the committed multi-process fabric entry must
+    # demonstrate bit-identical distributed results on every spawned arm
+    # with at most 2 compiles per process
+    sd = base.get("sweep_dist")
+    assert sd, "full bench must record the sweep_dist fabric entry"
+    assert sd["finals_match"] is True
+    assert set(sd["arms"]) == {"1proc", "2proc", "2proc_serial"}
+    for arm in sd["arms"].values():
+        assert arm["compile_cache_misses"] <= 2, sd["arms"]
+        assert arm["finals_match"] is True
 
 
 def test_gate_passes_on_matching_run():
@@ -337,3 +348,134 @@ def test_gate_enforces_branch_free_tax_ceiling():
     base["sweep_quick"]["vmap_cell_tax"] = bad   # relative gate blinded
     failures = check(quick, base, TOL)
     assert any("ceiling" in m for m in failures), failures
+
+
+# -- the multi-process fabric gate (PR 8) -----------------------------------
+
+def test_gate_fails_without_committed_sweep_dist():
+    base = load_base()
+    quick = quick_from(base)
+    del base["sweep_dist"]
+    failures = check(quick, base, TOL)
+    assert any("sweep_dist" in m for m in failures), failures
+
+
+def test_gate_fails_when_dist_identity_breaks():
+    """Bit-identity between the distributed and in-process sweeps is THE
+    fabric's correctness claim — a quick run losing it must fail."""
+    base = load_base()
+    quick = quick_from(base)
+    quick["sweep_dist"]["finals_match"] = False
+    failures = check(quick, base, TOL)
+    assert any("bit-identical" in m for m in failures), failures
+
+
+def test_gate_fails_when_baseline_lost_dist_identity():
+    """A baseline refresh recording finals_match=false must fail loudly —
+    the identity claim would be ungated from then on."""
+    base = load_base()
+    quick = quick_from(base)
+    base["sweep_dist"]["finals_match"] = False
+    failures = check(quick, base, TOL)
+    assert any("ungated" in m for m in failures), failures
+
+
+def test_gate_fails_on_dist_extra_compilation():
+    """Each worker process may compile at most twice (steady jstep +
+    final-slab remainder); a third compile means sharding or shapes leak
+    into the cache key."""
+    base = load_base()
+    quick = quick_from(base)
+    quick["sweep_dist"]["arms"]["2proc"]["compile_cache_misses"] = 3
+    failures = check(quick, base, TOL)
+    assert any("sweep_dist arm" in m and "<= 2" in m
+               for m in failures), failures
+
+
+def test_gate_fails_on_dist_overlap_regression():
+    """overlap_ratio is within-run (serial vs overlapped gather on the
+    same box) so machine skew cancels; falling >tol below the committed
+    ratio means the overlapped driver stopped overlapping."""
+    base = load_base()
+    quick = quick_from(base)
+    quick["sweep_dist"]["overlap_ratio"] = round(
+        base["sweep_dist"]["overlap_ratio"] * (1 - TOL - 0.2), 2)
+    failures = check(quick, base, TOL)
+    assert any("overlap_ratio" in m for m in failures), failures
+
+
+def test_gate_fails_on_dist_grid_mismatch():
+    base = load_base()
+    quick = quick_from(base)
+    quick["sweep_dist"]["slab"] += 1
+    failures = check(quick, base, TOL)
+    assert any("sweep_dist grid" in m for m in failures), failures
+
+
+def test_gate_skips_cross_backend_sweep_dist():
+    """Quick-vs-committed dist comparisons skip across backends like every
+    other entry (the committed baseline's own identity claim still
+    gates)."""
+    base = load_base()
+    quick = quick_from(base)
+    base["sweep_dist"]["backend"] = "gpu"
+    quick["sweep_dist"]["backend"] = "cpu"
+    quick["sweep_dist"]["finals_match"] = False
+    quick["sweep_dist"]["overlap_ratio"] = 0.01
+    failures = check(quick, base, TOL)
+    assert not any("bit-identical" in m or "overlap_ratio" in m
+                   for m in failures), failures
+
+
+def test_gate_keeps_dist_walls_out_of_the_ratio_pack():
+    """Spawned-arm walls are compile-bound cold numbers (like
+    tune_cold_s): inflating them 100x must not fail the gate — only the
+    within-run ratios and the identity/compile gates apply."""
+    base = load_base()
+    quick = quick_from(base)
+    for arm in quick["sweep_dist"]["arms"].values():
+        arm["wall_s"] = round(arm["wall_s"] * 100, 2)
+        arm["max_worker_wall_s"] = round(arm["max_worker_wall_s"] * 100, 2)
+    quick["sweep_dist"]["inproc_wall_s"] = round(
+        quick["sweep_dist"]["inproc_wall_s"] * 100, 2)
+    assert check(quick, base, TOL) == []
+
+
+# -- the perf-history archive (PR 8) ----------------------------------------
+
+def test_archive_appends_and_dedups(tmp_path):
+    """One row per distinct snapshot: a rerun on an unchanged artifact
+    appends nothing; a changed artifact appends exactly one more row."""
+    import json as _json
+
+    from benchmarks.archive import append_history, read_history
+
+    bench = load_base()
+    bp, hp = str(tmp_path / "bench.json"), str(tmp_path / "hist.jsonl")
+    with open(bp, "w") as f:
+        _json.dump(bench, f)
+    assert append_history(bp, hp) is True
+    assert append_history(bp, hp) is False      # unchanged -> dedup
+    bench["sparse_speedup"] = (bench.get("sparse_speedup") or 1) + 1
+    with open(bp, "w") as f:
+        _json.dump(bench, f)
+    assert append_history(bp, hp) is True
+    rows = read_history(hp)
+    assert len(rows) == 2
+    assert rows[0]["digest"] != rows[1]["digest"]
+    for row in rows:
+        assert row["date"] and "sparse_speedup" in row
+        assert "vmap_cell_tax" in row and "dist_overlap_ratio" in row
+
+
+def test_committed_history_has_rows():
+    """PR 8 acceptance: the tracked BENCH_history.jsonl carries at least
+    two distinct rows and its latest row reflects the current committed
+    snapshot (digest match, dist identity demonstrated)."""
+    from benchmarks.archive import _digest, read_history
+
+    rows = read_history()
+    assert len(rows) >= 2, "BENCH_history.jsonl must carry >= 2 rows"
+    assert len({r["digest"] for r in rows}) == len(rows)
+    assert rows[-1]["digest"] == _digest(load_base())
+    assert rows[-1]["dist_finals_match"] is True
