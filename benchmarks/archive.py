@@ -73,6 +73,7 @@ def headline(bench: dict) -> dict:
     top = max(sparse, key=lambda p: p["n_hosts"]) if sparse else None
     sw = bench.get("sweep") or {}
     tn = bench.get("tune") or {}
+    tg = bench.get("tune_grad") or {}
     lh = bench.get("longhorizon") or {}
     sd = bench.get("sweep_dist") or {}
     return {
@@ -86,6 +87,8 @@ def headline(bench: dict) -> dict:
         "sweep_cells_per_s": sw.get("cells_per_s"),
         "vmap_cell_tax": sw.get("vmap_cell_tax"),
         "tune_steady_s": tn.get("tune_steady_s"),
+        "tune_grad_vs_random": tg.get("grad_vs_random"),
+        "tune_grad_best_oracle": tg.get("best_oracle"),
         "stream_max_rss_mb": (lh.get("stream") or {}).get("max_rss_mb"),
         "dist_overlap_ratio": sd.get("overlap_ratio"),
         "dist_parallel_ratio": sd.get("dist_parallel_ratio"),

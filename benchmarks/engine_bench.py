@@ -52,6 +52,14 @@ gated on bit-identical results, the <=2/process compile bill, and the
 within-run overlap ratio; full mode also appends a headline row to
 ``BENCH_history.jsonl`` via ``benchmarks.archive``.
 
+ISSUE 9 (differentiable simulator) adds the ``tune_grad`` entry: gradient
+descent on the soft-placement surrogate (``run_tune_grad`` — one
+value_and_grad executable + one hard-oracle executable, tau annealed as a
+traced RunParams field) raced against an equal-oracle-budget random
+search.  Gated numbers (``grad_vs_random``, the 2-executable compile
+bill) are within-run and machine-independent; the cold wall stays out of
+the skew-normalized pack.
+
     PYTHONPATH=src python -m benchmarks.engine_bench [--quick]
 """
 from __future__ import annotations
@@ -76,6 +84,13 @@ QUICK_SWEEP = dict(n_hosts=50, n_containers=300, horizon=40)
 # the tune smoke grid: both modes measure the SAME grid (the quick run is
 # gated against the committed entry like-for-like)
 TUNE_SMOKE = dict(n_hosts=50, n_containers=300, horizon=40, samples=8)
+# the differentiable-tuning smoke grid (ISSUE 9): the slow-net scenario
+# where placement weights have headroom, small enough that 6 grad steps +
+# the equal-budget random race fit in the quick bench.  steps=6 with
+# eval_every=3 spends exactly 3 oracle rounds x batch candidates, so the
+# random arm gets n_samples = oracle_evals — a like-for-like budget.
+TUNE_GRAD_SMOKE = dict(n_hosts=20, n_containers=40, horizon=30, steps=6,
+                       batch=4)
 # the multi-process fabric smoke grid (ISSUE 8): small enough that three
 # spawned arms fit in the quick bench, large enough for several slabs per
 # worker (24 cells / slab 6 = 4 slabs) so the handout and the overlapped
@@ -244,6 +259,80 @@ def measure_tune_point(n_hosts: int, n_containers: int, horizon: int,
     }
 
 
+def measure_tune_grad_point(n_hosts: int, n_containers: int, horizon: int,
+                            steps: int, batch: int) -> dict:
+    """Differentiable-tuning smoke (ISSUE 9): descend the soft-placement
+    surrogate with ``jax.grad`` through the compiled sweep
+    (``run_tune_grad``: one value_and_grad executable + one hard-oracle
+    executable, tau annealed as a traced RunParams field), then race the
+    SAME oracle budget of random search through ``run_tune``.  Tracked
+    numbers are within-run and machine-independent:
+
+    * ``grad_vs_random``    — random-best / grad-best oracle score on the
+      minimized objective (>1 means gradient search wins at equal budget
+      — the ISSUE 9 acceptance claim);
+    * ``grad_vs_incumbent`` — incumbent / grad-best (>= 1 by
+      construction: the incumbent is oracle-scored before step 0);
+    * ``compile_cache_misses`` — must stay at 2 (surrogate + oracle);
+      tau/weights ride traced leaves, so annealing never recompiles.
+
+    The cold wall is compile-bound at smoke scale and stays out of
+    check_regression's skew-normalized ratio pack (like tune_cold_s)."""
+    import jax
+    import numpy as np
+
+    from repro.core import SimConfig
+    from repro.core.scenario import ScenarioSpec
+    from repro.launch.tune import run_tune, run_tune_grad
+
+    cfg = SimConfig(n_jobs=max(10, n_containers // 4), n_tasks=n_containers,
+                    n_containers=n_containers, horizon=horizon,
+                    arrival_window=10.0, placements_per_tick=16,
+                    migrations_per_tick=2)
+    scen = [ScenarioSpec("slow_net", bw=200.0)]
+    jax.clear_caches()
+    t0 = time.time()
+    g = run_tune_grad(steps=steps, batch=batch, lr=0.3, eval_every=3,
+                      seeds=(0,), scenarios=scen, cfg=cfg, n_hosts=n_hosts,
+                      n_spine=2, n_leaf=4, objective="avg_runtime", seed=0)
+    grad_wall = time.time() - t0
+    # the equal-budget random arm: as many oracle-scored samples as the
+    # grad run spent, same base/space/seed machinery, same hard oracle —
+    # its row 0 is the untouched incumbent, which the grad result does
+    # not carry separately
+    r = run_tune(n_samples=g.oracle_evals, seeds=(0,), scenarios=scen,
+                 cfg=cfg, n_hosts=n_hosts, n_spine=2, n_leaf=4,
+                 objective="avg_runtime", seed=0)
+    random_best = float(r.scores[r.best])
+    incumbent = float(r.scores[0])
+
+    def vs(a, b):
+        return (round(a / b, 4)
+                if np.isfinite(a) and np.isfinite(b) and b > 0 else None)
+
+    return {
+        "n_hosts": n_hosts,
+        "n_containers": n_containers,
+        "horizon": horizon,
+        "steps": steps,
+        "batch": batch,
+        "scenarios": len(scen),
+        "seeds": 1,
+        "objective": g.objective,
+        "surrogate": g.surrogate_name,
+        "compile_cache_misses": g.compile_cache_misses,
+        "tune_grad_cold_s": round(grad_wall, 2),
+        "surrogate_evals": g.surrogate_evals,
+        "oracle_evals": g.oracle_evals,
+        "tau_final": g.history[-1]["tau"] if g.history else None,
+        "incumbent_score": round(incumbent, 4),
+        "best_oracle": round(g.best_oracle, 4),
+        "random_best": round(random_best, 4),
+        "grad_vs_incumbent": vs(incumbent, g.best_oracle),
+        "grad_vs_random": vs(random_best, g.best_oracle),
+    }
+
+
 def _trees_bitwise_equal(a, b) -> bool:
     """Leaf-by-leaf byte equality (NaN-safe: same bits compare equal)."""
     import jax
@@ -283,7 +372,7 @@ def measure_dist_point(n_hosts: int, n_containers: int, horizon: int,
     """
     import jax
 
-    from repro.core import SimConfig, list_policies
+    from repro.core import ExecPlan, SimConfig, list_policies
     from repro.launch import dist
     from repro.launch.sweep import run_sweep
 
@@ -298,14 +387,16 @@ def measure_dist_point(n_hosts: int, n_containers: int, horizon: int,
     jax.clear_caches()
     t0 = time.time()
     ref = run_sweep(pols, specs, seeds=(0,), cfg=cfg, n_hosts=n_hosts,
-                    n_spine=n_spine, n_leaf=n_leaf, chunk=chunk, slab=slab)
+                    n_spine=n_spine, n_leaf=n_leaf,
+                    plan=ExecPlan(chunk=chunk, slab=slab))
     inproc_wall = time.time() - t0
 
     def arm(num_procs: int, overlap: bool) -> dict:
         res = dist.run_dist_sweep(
             pols, specs, seeds=(0,), cfg=cfg, n_hosts=n_hosts,
-            n_spine=n_spine, n_leaf=n_leaf, num_procs=num_procs,
-            devices_per_proc=1, chunk=chunk, slab=slab, overlap=overlap,
+            n_spine=n_spine, n_leaf=n_leaf,
+            plan=ExecPlan(procs=num_procs, devices_per_proc=1, chunk=chunk,
+                          slab=slab, overlap=overlap),
             timeout_s=600.0)
         metas = sorted(res.worker_meta, key=lambda m: m["process_index"])
         return {
@@ -420,6 +511,10 @@ def bench_engine(quick: bool = False):
         sweep = measure_sweep_point(500, 3000, horizon=20, with_loop=True)
         sweep_quick = measure_sweep_point(**QUICK_SWEEP, with_loop=False)
     tune = measure_tune_point(**TUNE_SMOKE)
+    # the differentiable-tuning arm (ISSUE 9): measured in BOTH modes on
+    # the same smoke grid — the gated numbers (grad_vs_random, the 2-
+    # executable compile bill) are within-run and machine-independent
+    tune_grad = measure_tune_grad_point(**TUNE_GRAD_SMOKE)
     # the multi-process fabric arms (ISSUE 8): measured in BOTH modes on
     # the same smoke grid so the CI quick gate has a like-for-like
     # committed twin (bit-identity + compile bill + overlap ratio)
@@ -429,6 +524,7 @@ def bench_engine(quick: bool = False):
     backend = jax.default_backend()
     sweep["backend"] = backend
     tune["backend"] = backend
+    tune_grad["backend"] = backend
     sweep_dist["backend"] = backend
     out = {
         "bench": "engine_tick_throughput",
@@ -439,6 +535,7 @@ def bench_engine(quick: bool = False):
         "sparse_speedup": speedup,
         "sweep": sweep,
         "tune": tune,
+        "tune_grad": tune_grad,
         "sweep_dist": sweep_dist,
         "longhorizon": longhorizon,
     }
@@ -476,6 +573,14 @@ def bench_engine(quick: bool = False):
          f"compiled {tune['compile_cache_misses']}x",
          f"cold {tune['tune_cold_s']}s, best/incumbent "
          f"{tune['best_vs_incumbent']}x on {tune['objective']}"),
+        (f"tune-grad {tune_grad['steps']} steps x {tune_grad['batch']} "
+         f"candidates ({tune_grad['compile_cache_misses']} executables: "
+         f"surrogate grad + hard oracle)",
+         f"oracle best {tune_grad['best_oracle']} vs random "
+         f"{tune_grad['random_best']} at {tune_grad['oracle_evals']} "
+         f"oracle evals = {tune_grad['grad_vs_random']}x, "
+         f"vs incumbent {tune_grad['grad_vs_incumbent']}x on "
+         f"{tune_grad['objective']}"),
         (f"dist fabric {sweep_dist['cells']} cells (chunk "
          f"{sweep_dist['chunk']}, slab {sweep_dist['slab']}) x "
          f"{{1,2}} procs",

@@ -10,9 +10,9 @@ policy, then the whole 120 s simulation runs as a single compiled program).
 import sys
 sys.path.insert(0, "src")
 
-from repro.core import (SimConfig, build_paper_hosts, build_paper_network,
-                        get_policy, init_sim, list_policies, paper_workload,
-                        run_sim, summarize)
+from repro.core import (ExecPlan, SimConfig, build_paper_hosts,
+                        build_paper_network, get_policy, init_sim,
+                        list_policies, paper_workload, run_sim, summarize)
 
 
 def main() -> None:
@@ -40,7 +40,7 @@ def main() -> None:
     sim0 = init_sim(hosts, containers, net, seed=0)
     final, online = run_sim(sim0, cfg, get_policy("netaware"),
                             spec.n_hosts, spec.n_nodes, cfg.horizon,
-                            chunk=32)
+                            plan=ExecPlan(chunk=32))
     rep = summarize(final, online)
     print(f"\nstreaming (chunk=32)  netaware: completed="
           f"{rep['n_completed']}, mean_util={rep['mean_util']:.3f}, "

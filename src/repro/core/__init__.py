@@ -17,12 +17,13 @@ from repro.core.scheduling import (  # noqa: F401
     get_policy, list_policies, register, validate_weights, weight_vector,
 )
 from repro.core.stats import (  # noqa: F401
-    acc_init, acc_update, check_chunk, max_chunk_ticks, online_fold,
-    online_from_metrics, online_init,
+    SOFT_OBJECTIVES, acc_init, acc_update, check_chunk, max_chunk_ticks,
+    online_fold, online_from_metrics, online_init, soft_num_den,
+    soft_objective,
 )
 from repro.core.types import (  # noqa: F401
-    NUM_POLICY_WEIGHTS, WEIGHT_NAMES, OnlineSummary, PolicyParams, RunParams,
-    SummaryAcc,
+    NUM_POLICY_WEIGHTS, WEIGHT_NAMES, ExecPlan, OnlineSummary, PolicyParams,
+    RunParams, SummaryAcc,
 )
 from repro.core.workload import (  # noqa: F401
     bursty_workload, paper_workload, trace_workload,

@@ -82,6 +82,15 @@ class SimConfig:
     waterfill_kernel: str = "auto"    # fused seg_waterfill flow allocation
     sparse_flows: bool = True         # segment-based flow engine (docs/perf.md)
     batched_placement: bool = True    # conflict-resolved top-K placement round
+    # Differentiable-scheduling surrogate (docs/autodiff.md): when on, every
+    # placement/migration argmin ALSO accumulates softmax expected-feature
+    # costs (temperature RunParams.tau) into TickMetrics/SummaryAcc — the
+    # dynamics stay the exact hard argmin, so results are bit-for-bit
+    # identical to soft_placement=False; the extra terms are what
+    # jax.grad(objective)(weights) differentiates.  Requires
+    # batched_placement.
+    soft_placement: bool = False
+    tau: float = 1.0                  # RunParams.tau default (runtime knob)
     stall_rate_floor: float = 50.0    # KB/s under which a flow is 'stalled'
     mig_kb_per_gb: float = 1024.0     # migration bytes per GB of memory req
     queue_coef: float = 0.5           # RunParams default (runtime knob)
@@ -99,6 +108,7 @@ class SimConfig:
             queue_coef=f32(self.queue_coef),
             overload_threshold=f32(self.overload_threshold),
             idle_threshold=f32(self.idle_threshold),
+            tau=f32(self.tau),
         )
 
 

@@ -19,6 +19,7 @@ paper's process-per-entity design fundamentally lacks (its Table 7 shows
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Tuple
 
 import jax
@@ -29,10 +30,10 @@ from repro.core.datacenter import SimConfig
 from repro.kernels import resolve_kernel
 from repro.core.scheduling import BIG, INT_BIG, feasible_hosts
 from repro.core.types import (
-    STATUS_COMMUNICATING, STATUS_COMPLETED, STATUS_INACTIVE, STATUS_MIGRATING,
-    STATUS_RUNNING, STATUS_UNBORN, STATUS_WAITING, W_CROSS_LEAF, W_UTIL,
-    ContainerState, HostState, NetState, PolicyParams, RunParams, SchedState,
-    SimState, TickMetrics,
+    F_COMM, F_HOST_UTIL, STATUS_COMMUNICATING, STATUS_COMPLETED,
+    STATUS_INACTIVE, STATUS_MIGRATING, STATUS_RUNNING, STATUS_UNBORN,
+    STATUS_WAITING, W_CROSS_LEAF, W_UTIL, ContainerState, ExecPlan, HostState,
+    NetState, PolicyParams, RunParams, SchedState, SimState, TickMetrics,
 )
 
 I32 = jnp.int32
@@ -197,7 +198,7 @@ def _scatter_to_containers(C: int, idx: jnp.ndarray, ok: jnp.ndarray):
 
 
 def _place_batched(sim: SimState, cfg: SimConfig, params: RunParams,
-                   policy: PolicyParams) -> SimState:
+                   policy: PolicyParams):
     """Batched conflict-resolved placement round.
 
     Instead of ``placements_per_tick`` full select+score passes (each one
@@ -215,10 +216,19 @@ def _place_batched(sim: SimState, cfg: SimConfig, params: RunParams,
     One deliberate semantic upgrade over the sequential reference: a
     candidate with no feasible host no longer blocks the rest of the round
     (the sequential argmin re-selected the same stuck head every step).
+
+    Returns ``(sim', (soft_comm, soft_util, soft_n))``.  With
+    ``cfg.soft_placement`` the admit scan ALSO carries the softmax
+    expected-cost sums of the surrogate (``scheduling.soft_assign`` over
+    the same score row the argmin consumes; docs/autodiff.md) — the
+    decisions themselves are computed identically, so the final state is
+    bit-for-bit the ``soft_placement=False`` state.  With it off the soft
+    terms are constant 0.0 and this is exactly the old round.
     """
     C = sim.containers.status.shape[0]
     H = sim.hosts.cap.shape[0]
     K = min(cfg.placements_per_tick, C)
+    soft_on = cfg.soft_placement
 
     key = scheduling.select_key(sim, policy)              # i32[C]
     neg_vals, cand = jax.lax.top_k(-key, K)               # K smallest keys
@@ -227,10 +237,24 @@ def _place_batched(sim: SimState, cfg: SimConfig, params: RunParams,
     pcarry0 = scheduling.init_place_carry(sim, cand, policy)
 
     def admit(carry, k):
-        used, ncont, pcarry = carry
+        if soft_on:
+            used, ncont, pcarry, s_comm, s_util, s_n = carry
+        else:
+            used, ncont, pcarry = carry
         feas = feasible_hosts(sim.hosts.cap, used, ncont,
                               req_k[k], cfg) & valid[k]
-        h = _pick_host(sim, cfg, params, policy, pcarry, k, cand, used, feas)
+        if soft_on:
+            row, cols = scheduling.host_row_cols(sim, cfg, params, policy,
+                                                 pcarry, k, cand, used)
+            h = jnp.where(feas.any(), jnp.argmin(jnp.where(feas, row, BIG)),
+                          -1)
+            q = scheduling.soft_assign(row, feas, params.tau)
+            s_comm = s_comm + (q * cols[F_COMM]).sum()
+            s_util = s_util + (q * cols[F_HOST_UTIL]).sum()
+            s_n = s_n + feas.any().astype(F32)
+        else:
+            h = _pick_host(sim, cfg, params, policy, pcarry, k, cand, used,
+                           feas)
         ok = h >= 0
         hh = jnp.clip(h, 0, H - 1)
         hot = _one_hot(H, hh, ok)
@@ -238,10 +262,21 @@ def _place_batched(sim: SimState, cfg: SimConfig, params: RunParams,
         ncont = jnp.where(hot, ncont + 1, ncont)
         pcarry = scheduling.update_place_carry(sim, policy, pcarry, k, cand,
                                                hh, ok)
+        if soft_on:
+            return (used, ncont, pcarry, s_comm, s_util, s_n), h
         return (used, ncont, pcarry), h
 
-    init = (sim.hosts.used, sim.hosts.n_containers, pcarry0)
-    (used, ncont, pcarry), chosen = jax.lax.scan(admit, init, jnp.arange(K))
+    zero = jnp.zeros((), F32)
+    if soft_on:
+        init = (sim.hosts.used, sim.hosts.n_containers, pcarry0,
+                zero, zero, zero)
+        (used, ncont, pcarry, s_comm, s_util, s_n), chosen = jax.lax.scan(
+            admit, init, jnp.arange(K))
+    else:
+        init = (sim.hosts.used, sim.hosts.n_containers, pcarry0)
+        (used, ncont, pcarry), chosen = jax.lax.scan(admit, init,
+                                                     jnp.arange(K))
+        s_comm = s_util = s_n = zero
 
     ok = chosen >= 0
     hh = jnp.clip(chosen, 0, H - 1)
@@ -256,11 +291,12 @@ def _place_batched(sim: SimState, cfg: SimConfig, params: RunParams,
     hosts = sim.hosts._replace(used=used, n_containers=ncont)
     sched = scheduling.commit_place_carry(sim.sched, pcarry)._replace(
         decisions=sim.sched.decisions + ok.sum().astype(I32))
-    return sim._replace(hosts=hosts, containers=conts, sched=sched)
+    return (sim._replace(hosts=hosts, containers=conts, sched=sched),
+            (s_comm, s_util, s_n))
 
 
 def _migrate_batched(sim: SimState, cfg: SimConfig, params: RunParams,
-                     policy: PolicyParams) -> SimState:
+                     policy: PolicyParams):
     """Migration decision round.
 
     The decision scan carries only the fields a migration start can change
@@ -270,16 +306,29 @@ def _migrate_batched(sim: SimState, cfg: SimConfig, params: RunParams,
     destination score of ``scheduling.migrate`` — a policy whose
     ``W_MIG_ENABLE`` weight is zero yields uniform (-1, -1) decisions and
     the round leaves the state untouched.
+
+    Returns ``(sim', (soft_mig, soft_mig_n))``; with ``cfg.soft_placement``
+    the scan also sums ``scheduling.migrate_soft``'s expected-path-util
+    surrogate (hard decisions unchanged), otherwise constant 0.0.
     """
     C = sim.containers.status.shape[0]
     H = sim.hosts.cap.shape[0]
+    soft_on = cfg.soft_placement
 
     def decide(carry, _):
-        used, ncont, status = carry
+        if soft_on:
+            used, ncont, status, s_mig, s_n = carry
+        else:
+            used, ncont, status = carry
         view = sim._replace(
             hosts=sim.hosts._replace(used=used, n_containers=ncont),
             containers=sim.containers._replace(status=status))
-        c, dst = scheduling.migrate(view, cfg, params, policy)
+        if soft_on:
+            c, dst, sv, sc = scheduling.migrate_soft(view, cfg, params,
+                                                     policy)
+            s_mig, s_n = s_mig + sv, s_n + sc
+        else:
+            c, dst = scheduling.migrate(view, cfg, params, policy)
         ok = (c >= 0) & (dst >= 0)
         cc = jnp.clip(c, 0, C - 1)
         hh = jnp.clip(dst, 0, H - 1)
@@ -289,12 +338,23 @@ def _migrate_batched(sim: SimState, cfg: SimConfig, params: RunParams,
                          used + sim.containers.req[cc][None, :], used)
         ncont = jnp.where(hot_h, ncont + 1, ncont)
         status = jnp.where(_one_hot(C, cc, ok), STATUS_MIGRATING, status)
-        return (used, ncont, status), (jnp.where(ok, cc, -1),
-                                       jnp.where(ok, hh, -1))
+        out = (jnp.where(ok, cc, -1), jnp.where(ok, hh, -1))
+        if soft_on:
+            return (used, ncont, status, s_mig, s_n), out
+        return (used, ncont, status), out
 
-    init = (sim.hosts.used, sim.hosts.n_containers, sim.containers.status)
-    (used, ncont, status), (cs, dsts) = jax.lax.scan(
-        decide, init, None, length=cfg.migrations_per_tick)
+    zero = jnp.zeros((), F32)
+    if soft_on:
+        init = (sim.hosts.used, sim.hosts.n_containers,
+                sim.containers.status, zero, zero)
+        (used, ncont, status, s_mig, s_n), (cs, dsts) = jax.lax.scan(
+            decide, init, None, length=cfg.migrations_per_tick)
+    else:
+        init = (sim.hosts.used, sim.hosts.n_containers,
+                sim.containers.status)
+        (used, ncont, status), (cs, dsts) = jax.lax.scan(
+            decide, init, None, length=cfg.migrations_per_tick)
+        s_mig = s_n = zero
 
     ok = cs >= 0
     # chosen containers are distinct (STATUS_MIGRATING removes them from the
@@ -312,7 +372,34 @@ def _migrate_batched(sim: SimState, cfg: SimConfig, params: RunParams,
     hosts = sim.hosts._replace(used=used, n_containers=ncont)
     sched = sim.sched._replace(
         migrations=sim.sched.migrations + ok.sum().astype(I32))
-    return sim._replace(hosts=hosts, containers=conts, sched=sched)
+    return (sim._replace(hosts=hosts, containers=conts, sched=sched),
+            (s_mig, s_n))
+
+
+def phase_schedule_soft(sim: SimState, cfg: SimConfig, policy: PolicyParams,
+                        params: RunParams | None = None):
+    """:func:`phase_schedule` plus the tick's soft-surrogate terms.
+
+    Returns ``(sim', (soft_comm, soft_util, soft_n, soft_mig,
+    soft_mig_n))`` — all exact 0.0 unless ``cfg.soft_placement``.  The
+    state transition is identical to :func:`phase_schedule` either way.
+    """
+    params = cfg.run_params() if params is None else params
+    if cfg.soft_placement and not cfg.batched_placement:
+        raise ValueError(
+            "SimConfig.soft_placement requires batched_placement: the "
+            "sequential reference path has no admit round to relax")
+    sim = sim._replace(sched=sim.sched._replace(
+        decisions=jnp.zeros((), I32), migrations=jnp.zeros((), I32)))
+
+    if cfg.batched_placement:
+        sim, (s_comm, s_util, s_n) = _place_batched(sim, cfg, params, policy)
+    else:
+        sim = _place_sequential(sim, cfg, params, policy)
+        s_comm = s_util = s_n = jnp.zeros((), F32)
+
+    sim, (s_mig, s_mig_n) = _migrate_batched(sim, cfg, params, policy)
+    return sim, (s_comm, s_util, s_n, s_mig, s_mig_n)
 
 
 def phase_schedule(sim: SimState, cfg: SimConfig, policy: PolicyParams,
@@ -327,16 +414,7 @@ def phase_schedule(sim: SimState, cfg: SimConfig, policy: PolicyParams,
     policy migrates, and where to, is its weight vector, not Python
     structure.
     """
-    params = cfg.run_params() if params is None else params
-    sim = sim._replace(sched=sim.sched._replace(
-        decisions=jnp.zeros((), I32), migrations=jnp.zeros((), I32)))
-
-    if cfg.batched_placement:
-        sim = _place_batched(sim, cfg, params, policy)
-    else:
-        sim = _place_sequential(sim, cfg, params, policy)
-
-    return _migrate_batched(sim, cfg, params, policy)
+    return phase_schedule_soft(sim, cfg, policy, params)[0]
 
 
 def pick_comm_peers(ct: ContainerState) -> jnp.ndarray:
@@ -537,7 +615,7 @@ def make_tick(cfg: SimConfig, policy: PolicyParams, params: RunParams,
 
     def tick(sim: SimState, tt: jnp.ndarray) -> Tuple[SimState, TickMetrics]:
         sim, n_arrived = phase_arrive(sim)
-        sim = phase_schedule(sim, cfg, policy, params)
+        sim, soft = phase_schedule_soft(sim, cfg, policy, params)
         sim, comm_rates, mig_rates, flow_active, all_rates = \
             phase_flows(sim, cfg, use_kernel=use_wf_kernel)
         sim = phase_communicate(sim, cfg, comm_rates)
@@ -567,7 +645,7 @@ def make_tick(cfg: SimConfig, policy: PolicyParams, params: RunParams,
 
         m = stats.collect(sim, n_arrived, sim.sched.decisions,
                           sim.sched.migrations, params,
-                          flow_active, all_rates)
+                          flow_active, all_rates, soft=soft)
         sim = sim._replace(t=sim.t + 1.0)
         return sim, m
 
@@ -685,27 +763,60 @@ def _run_sim_jit(sim0, cfg, policy, params, n_hosts, n_nodes, horizon):
     return simulate(sim0, cfg, policy, n_hosts, n_nodes, horizon, params)
 
 
+def resolve_plan(plan: ExecPlan | None, cfg: SimConfig,
+                 **legacy) -> tuple[ExecPlan, SimConfig]:
+    """Shared plan/legacy-kwarg resolution for every run entry point.
+
+    ``legacy`` maps old kwarg names to their (possibly None) values; any
+    non-None value raises a loud ``DeprecationWarning`` and is folded into
+    the plan (one deprecation cycle, then the kwargs go away).  Passing
+    both a plan and a legacy kwarg is an error — silently preferring one
+    would hide the conflict.  Returns the resolved plan and the config
+    with the plan's kernel selectors applied (the jit cache key stays the
+    config, exactly as before).
+    """
+    used = {k: v for k, v in legacy.items() if v is not None}
+    if used:
+        if plan is not None:
+            raise TypeError(
+                f"pass execution options via plan= OR the deprecated "
+                f"kwargs {sorted(used)}, not both")
+        warnings.warn(
+            f"the {sorted(used)} kwargs are deprecated; pass "
+            f"plan=ExecPlan({', '.join(f'{k}={v!r}' for k, v in sorted(used.items()))}) "
+            f"instead", DeprecationWarning, stacklevel=3)
+        plan = ExecPlan(**used)
+    plan = ExecPlan() if plan is None else plan
+    return plan, plan.apply_to_config(cfg)
+
+
 def run_sim(sim0: SimState, cfg: SimConfig, policy: PolicyParams,
             n_hosts: int, n_nodes: int, horizon: int,
-            params: RunParams | None = None, chunk: int | None = None
+            params: RunParams | None = None, chunk: int | None = None,
+            plan: ExecPlan | None = None
             ) -> Tuple[SimState, TickMetrics]:
     """Run ``horizon`` ticks; returns (final state, metrics).
 
-    ``chunk=None`` (default, right for short horizons) stacks per-tick
-    ``TickMetrics`` over the whole run — O(horizon) memory, the streaming
-    path's oracle.  A ``chunk`` size streams the run through
+    Execution options ride in ``plan`` (:class:`~repro.core.types.ExecPlan`
+    — chunking and kernel selection apply here; sweep/dist fields are
+    ignored).  ``plan=None`` (default, right for short horizons) stacks
+    per-tick ``TickMetrics`` over the whole run — O(horizon) memory, the
+    streaming path's oracle.  A ``plan.chunk`` streams the run through
     :func:`run_sim_chunked` instead: same final state bit-for-bit, an
     f64/i64 ``OnlineSummary`` instead of the stacked series, O(state)
     memory at any horizon.  ``report.summarize`` accepts either form.
+    The bare ``chunk=`` kwarg is deprecated (one cycle).
 
-    Only ``cfg``, the shape arguments, and ``chunk`` are static.  ``policy``
-    (a weight vector) and ``params`` (bw/loss/queue/threshold knobs,
-    defaulting from the config) are DATA: every policy — including ones
-    registered after this call — and every runtime-parameter point reuses
-    one compilation per (config, shapes) combination.
+    Only ``cfg`` (after the plan's kernel selectors fold in), the shape
+    arguments, and the chunk size are static.  ``policy`` (a weight
+    vector) and ``params`` (bw/loss/queue/threshold knobs, defaulting from
+    the config) are DATA: every policy — including ones registered after
+    this call — and every runtime-parameter point reuses one compilation
+    per (config, shapes) combination.
     """
+    plan, cfg = resolve_plan(plan, cfg, chunk=chunk)
     params = cfg.run_params() if params is None else params
-    if chunk is not None:
+    if plan.chunk is not None:
         return run_sim_chunked(sim0, cfg, policy, n_hosts, n_nodes, horizon,
-                               chunk, params=params)
+                               plan.chunk, params=params)
     return _run_sim_jit(sim0, cfg, policy, params, n_hosts, n_nodes, horizon)

@@ -57,6 +57,16 @@ def _online_keys(os: OnlineSummary) -> Dict[str, Any]:
         "peak_deployed": int(os.peak_deployed),
         "peak_overloaded": int(os.peak_overloaded),
         "peak_queue": int(os.peak_inactive),
+        # soft-placement surrogate means (docs/autodiff.md) — 0.0 with
+        # soft placement off (no admits were soft-scored, counts are 0)
+        "soft_expected_comm": (float(os.sum_soft_comm)
+                               / max(float(os.sum_soft_n), 1.0)),
+        "soft_expected_util": (float(os.sum_soft_util)
+                               / max(float(os.sum_soft_n), 1.0)),
+        "soft_expected_mig_util": (float(os.sum_soft_mig)
+                                   / max(float(os.sum_soft_mig_n), 1.0)),
+        "soft_blend": (float(os.sum_soft_comm + os.sum_soft_util)
+                       / max(float(os.sum_soft_n), 1.0)),
     }
 
 

@@ -54,6 +54,7 @@ class ScenarioSpec:
     queue_coef: float | None = None
     overload_threshold: float | None = None
     idle_threshold: float | None = None
+    tau: float | None = None           # soft-placement temperature override
 
     def __post_init__(self):
         # the RunParams sentinels (<=0 bw, <0 loss) mean "keep"; reject
@@ -67,6 +68,8 @@ class ScenarioSpec:
         if self.arrival not in ARRIVALS:
             raise KeyError(f"{self.name}: unknown arrival "
                            f"{self.arrival!r}; known: {sorted(ARRIVALS)}")
+        if self.tau is not None and self.tau <= 0:
+            raise ValueError(f"{self.name}: tau must be > 0, got {self.tau}")
 
     def run_params(self, cfg: SimConfig) -> RunParams:
         base = cfg.run_params()
@@ -79,6 +82,7 @@ class ScenarioSpec:
             overload_threshold=f32(self.overload_threshold,
                                    base.overload_threshold),
             idle_threshold=f32(self.idle_threshold, base.idle_threshold),
+            tau=f32(self.tau, base.tau),
         )
 
 

@@ -45,7 +45,7 @@ import numpy as np
 from repro.core import network
 from repro.core.datacenter import SimConfig
 from repro.core.types import (
-    NUM_MIG_FEATURES, NUM_POLICY_WEIGHTS, NUM_ROW_FEATURES,
+    M_PATH_UTIL, NUM_MIG_FEATURES, NUM_POLICY_WEIGHTS, NUM_ROW_FEATURES,
     STATUS_COMMUNICATING, STATUS_INACTIVE, STATUS_MIGRATING, STATUS_RUNNING,
     STATUS_WAITING, W_MIG0, W_MIG_ENABLE, W_ROW0, W_RR_TRACK, W_SEL_DURATION,
     W_SEL_SUBMIT, WEIGHT_NAMES, PolicyParams, RunParams, SimState,
@@ -109,6 +109,27 @@ def _first_true(order_key: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
     """Index minimizing order_key among mask; -1 if mask empty."""
     key = jnp.where(mask, order_key, BIG)
     return jnp.where(mask.any(), jnp.argmin(key), -1)
+
+
+def soft_assign(row: jnp.ndarray, feas: jnp.ndarray,
+                tau: jnp.ndarray) -> jnp.ndarray:
+    """Softmax relaxation of ``argmin over the feasible hosts``.
+
+    ``q[h] = softmax(-row/tau)[h]`` over ``feas``; infeasible hosts get an
+    exact 0.0 and an all-infeasible row returns all-zero (NOT uniform — a
+    no-decision contributes nothing to the surrogate sums).  NaN-safety
+    under ``jax.grad`` is load-bearing: the row is shifted by its feasible
+    minimum BEFORE the masked exp, so every exponent is finite and
+    non-positive (``exp <= 1``) and no ``0 * inf`` appears in either the
+    primal or the cotangent.  As ``tau -> 0`` the weights underflow to the
+    exact one-hot of the hard argmin — the annealing limit the oracle
+    tests rely on.
+    """
+    feas_f = feas.astype(row.dtype)
+    lo = jnp.min(jnp.where(feas, row, BIG))
+    shifted = jnp.where(feas, row - lo, 0.0)
+    e = jnp.exp(-shifted / tau) * feas_f
+    return e / jnp.maximum(e.sum(), jnp.float32(1e-30))
 
 
 # ---------------------------------------------------------------------------
@@ -267,6 +288,21 @@ def placement_features(sim: SimState, cfg: SimConfig, params: RunParams,
                                           used), axis=1)
 
 
+def host_row_cols(sim: SimState, cfg: SimConfig, params: RunParams,
+                  pol: PolicyParams, carry: PlaceCarry, k, cand,
+                  used) -> tuple:
+    """:func:`host_row` plus the raw feature columns it was summed from —
+    the soft-placement path needs both (the score for the softmax, the
+    columns for the expected-cost surrogate) without paying the bank
+    twice."""
+    cols = _row_feature_columns(sim, cfg, params, carry, k, cand, used)
+    w = pol.weights
+    score = cols[0] * w[W_ROW0]
+    for i in range(1, NUM_ROW_FEATURES):
+        score = score + cols[i] * w[W_ROW0 + i]
+    return score, cols
+
+
 def host_row(sim: SimState, cfg: SimConfig, params: RunParams,
              pol: PolicyParams, carry: PlaceCarry, k, cand,
              used) -> jnp.ndarray:
@@ -279,12 +315,7 @@ def host_row(sim: SimState, cfg: SimConfig, params: RunParams,
     but the live one is an exact 0.0 in any order.  Feasibility is NOT
     baked in — the engine masks infeasible hosts against its live
     resource counters so intra-round decisions see each other."""
-    cols = _row_feature_columns(sim, cfg, params, carry, k, cand, used)
-    w = pol.weights
-    score = cols[0] * w[W_ROW0]
-    for i in range(1, NUM_ROW_FEATURES):
-        score = score + cols[i] * w[W_ROW0 + i]
-    return score
+    return host_row_cols(sim, cfg, params, pol, carry, k, cand, used)[0]
 
 
 def update_place_carry(sim: SimState, pol: PolicyParams, carry: PlaceCarry,
@@ -369,6 +400,22 @@ def _migration_pair(src, cont, dst):
     return jnp.where(ok, cont, -1), jnp.where(ok, dst, -1)
 
 
+def _migrate_core(sim: SimState, cfg: SimConfig, params: RunParams,
+                  pol: PolicyParams):
+    """The shared decision: hard (container | -1, dst | -1) outputs plus the
+    destination score row / feature bank / mask the soft surrogate reads."""
+    w = pol.weights
+    src, cont, src_c, dst_mask = _overload_source(sim, cfg, params)
+    feats = migration_features(sim, src_c)
+    score = feats @ w[W_MIG0:W_MIG0 + NUM_MIG_FEATURES]
+    dst = _first_true(score, dst_mask)
+    cont_out, dst_out = _migration_pair(src, cont, dst)
+    enabled = w[W_MIG_ENABLE] > 0
+    minus1 = jnp.full((), -1, jnp.int32)
+    return (jnp.where(enabled, cont_out, minus1),
+            jnp.where(enabled, dst_out, minus1), feats, score, dst_mask)
+
+
 def migrate(sim: SimState, cfg: SimConfig, params: RunParams,
             pol: PolicyParams):
     """(container | -1, dst | -1) for this decision step.
@@ -377,16 +424,28 @@ def migrate(sim: SimState, cfg: SimConfig, params: RunParams,
     (-1, -1) no-op the engine's where-masks turn into an identity — the
     exact behavior of the old no-op branch, without a branch.
     """
-    w = pol.weights
-    src, cont, src_c, dst_mask = _overload_source(sim, cfg, params)
-    score = migration_features(sim, src_c) @ w[W_MIG0:W_MIG0
-                                               + NUM_MIG_FEATURES]
-    dst = _first_true(score, dst_mask)
-    cont_out, dst_out = _migration_pair(src, cont, dst)
-    enabled = w[W_MIG_ENABLE] > 0
-    minus1 = jnp.full((), -1, jnp.int32)
-    return (jnp.where(enabled, cont_out, minus1),
-            jnp.where(enabled, dst_out, minus1))
+    cont_out, dst_out, _, _, _ = _migrate_core(sim, cfg, params, pol)
+    return cont_out, dst_out
+
+
+def migrate_soft(sim: SimState, cfg: SimConfig, params: RunParams,
+                 pol: PolicyParams):
+    """:func:`migrate` plus the softmax surrogate terms.
+
+    Returns ``(cont, dst, soft_val, soft_cnt)`` where the hard pair is
+    bit-identical to :func:`migrate` and ``soft_val`` is the expected
+    bottleneck-path utilization of the destination under
+    ``q = soft_assign(score, dst_mask, tau)`` — differentiable in the
+    migration weights (the score is ``features @ w[W_MIG0:]``).  Both soft
+    terms are exact 0.0 when no migration actually fires this step, so
+    disabled policies contribute nothing to the surrogate sums.
+    """
+    cont_out, dst_out, feats, score, dst_mask = _migrate_core(
+        sim, cfg, params, pol)
+    q = soft_assign(score, dst_mask, params.tau)
+    fired = (dst_out >= 0).astype(jnp.float32)
+    soft_val = fired * (q * feats[:, M_PATH_UTIL]).sum()
+    return cont_out, dst_out, soft_val, fired
 
 
 def overload_migrate(sim: SimState, cfg: SimConfig,

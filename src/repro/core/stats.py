@@ -33,14 +33,23 @@ F32 = jnp.float32
 
 def collect(sim: SimState, new_arrivals: jnp.ndarray, decisions: jnp.ndarray,
             migrations: jnp.ndarray, params: RunParams,
-            flow_active: jnp.ndarray, flow_rates: jnp.ndarray) -> TickMetrics:
+            flow_active: jnp.ndarray, flow_rates: jnp.ndarray,
+            soft=None) -> TickMetrics:
     """Per-tick metrics; ``params`` carries the (traced, sweepable)
     overload threshold the ``n_overloaded`` count is judged against.
+
+    ``soft`` is the scheduling round's surrogate 5-tuple ``(soft_comm,
+    soft_util, soft_n, soft_mig, soft_mig_n)`` from
+    ``engine.phase_schedule_soft`` — exact 0.0 scalars when soft placement
+    is off (or when the caller omits it).
 
     Pure gathers and reductions — no scatters, so the whole collection
     phase batches cleanly when the sweep vmaps the tick.  All lifecycle
     counts come from ONE [C, 6] comparison pass instead of six [C] sweeps.
     """
+    if soft is None:
+        soft = (jnp.zeros((), F32),) * 5
+    soft_comm, soft_util, soft_n, soft_mig, soft_mig_n = soft
     st = sim.containers.status
     util = sim.hosts.used / jnp.maximum(sim.hosts.cap, 1e-6)      # [H, 3]
     worst = util.max(axis=1)
@@ -72,6 +81,8 @@ def collect(sim: SimState, new_arrivals: jnp.ndarray, decisions: jnp.ndarray,
         mean_util=mean_util.mean(),
         active_flows=n_active_flows,
         mean_flow_rate=mean_rate,
+        soft_comm=soft_comm, soft_util=soft_util, soft_n=soft_n,
+        soft_mig=soft_mig, soft_mig_n=soft_mig_n,
     )
 
 
@@ -115,6 +126,11 @@ def acc_init() -> SummaryAcc:
         sum_active_flows=z_i, sum_arrivals=z_i, sum_decisions=z_i,
         sum_migrations=z_i, peak_running=z_i, peak_deployed=z_i,
         peak_overloaded=z_i, peak_inactive=z_i,
+        sum_soft_comm=z_f, c_soft_comm=z_f,
+        sum_soft_util=z_f, c_soft_util=z_f,
+        sum_soft_n=z_f, c_soft_n=z_f,
+        sum_soft_mig=z_f, c_soft_mig=z_f,
+        sum_soft_mig_n=z_f, c_soft_mig_n=z_f,
     )
 
 
@@ -136,6 +152,11 @@ def acc_update(acc: SummaryAcc, m: TickMetrics) -> SummaryAcc:
     su, cu = _kahan(acc.sum_util_var, acc.c_util_var, m.util_variance)
     sm, cm = _kahan(acc.sum_mean_util, acc.c_mean_util, m.mean_util)
     sf, cf = _kahan(acc.sum_flow_rate, acc.c_flow_rate, m.mean_flow_rate)
+    ssc, csc = _kahan(acc.sum_soft_comm, acc.c_soft_comm, m.soft_comm)
+    ssu, csu = _kahan(acc.sum_soft_util, acc.c_soft_util, m.soft_util)
+    ssn, csn = _kahan(acc.sum_soft_n, acc.c_soft_n, m.soft_n)
+    ssm, csm = _kahan(acc.sum_soft_mig, acc.c_soft_mig, m.soft_mig)
+    ssmn, csmn = _kahan(acc.sum_soft_mig_n, acc.c_soft_mig_n, m.soft_mig_n)
     n = acc.n_ticks + 1
     delta = m.mean_util - acc.w_mean_util
     w_mean = acc.w_mean_util + delta / n.astype(F32)
@@ -154,6 +175,11 @@ def acc_update(acc: SummaryAcc, m: TickMetrics) -> SummaryAcc:
         peak_deployed=jnp.maximum(acc.peak_deployed, m.n_deployed),
         peak_overloaded=jnp.maximum(acc.peak_overloaded, m.n_overloaded),
         peak_inactive=jnp.maximum(acc.peak_inactive, m.n_inactive),
+        sum_soft_comm=ssc, c_soft_comm=csc,
+        sum_soft_util=ssu, c_soft_util=csu,
+        sum_soft_n=ssn, c_soft_n=csn,
+        sum_soft_mig=ssm, c_soft_mig=csm,
+        sum_soft_mig_n=ssmn, c_soft_mig_n=csmn,
     )
 
 
@@ -172,6 +198,8 @@ def online_init(batch_shape: tuple = ()) -> OnlineSummary:
         sum_active_flows=z_i(), sum_arrivals=z_i(), sum_decisions=z_i(),
         sum_migrations=z_i(), peak_running=z_i(), peak_deployed=z_i(),
         peak_overloaded=z_i(), peak_inactive=z_i(),
+        sum_soft_comm=z_f(), sum_soft_util=z_f(), sum_soft_n=z_f(),
+        sum_soft_mig=z_f(), sum_soft_mig_n=z_f(),
     )
 
 
@@ -212,6 +240,15 @@ def online_fold(host: OnlineSummary, acc: SummaryAcc) -> OnlineSummary:
         peak_overloaded=np.maximum(host.peak_overloaded,
                                    i64(a.peak_overloaded)),
         peak_inactive=np.maximum(host.peak_inactive, i64(a.peak_inactive)),
+        sum_soft_comm=(host.sum_soft_comm
+                       + f64(a.sum_soft_comm, a.c_soft_comm)),
+        sum_soft_util=(host.sum_soft_util
+                       + f64(a.sum_soft_util, a.c_soft_util)),
+        sum_soft_n=host.sum_soft_n + f64(a.sum_soft_n, a.c_soft_n),
+        sum_soft_mig=(host.sum_soft_mig
+                      + f64(a.sum_soft_mig, a.c_soft_mig)),
+        sum_soft_mig_n=(host.sum_soft_mig_n
+                        + f64(a.sum_soft_mig_n, a.c_soft_mig_n)),
     )
 
 
@@ -257,6 +294,11 @@ def online_merge(a: OnlineSummary, b: OnlineSummary) -> OnlineSummary:
         peak_deployed=np.maximum(a.peak_deployed, b.peak_deployed),
         peak_overloaded=np.maximum(a.peak_overloaded, b.peak_overloaded),
         peak_inactive=np.maximum(a.peak_inactive, b.peak_inactive),
+        sum_soft_comm=a.sum_soft_comm + b.sum_soft_comm,
+        sum_soft_util=a.sum_soft_util + b.sum_soft_util,
+        sum_soft_n=a.sum_soft_n + b.sum_soft_n,
+        sum_soft_mig=a.sum_soft_mig + b.sum_soft_mig,
+        sum_soft_mig_n=a.sum_soft_mig_n + b.sum_soft_mig_n,
     )
 
 
@@ -288,4 +330,71 @@ def online_from_metrics(metrics: TickMetrics) -> OnlineSummary:
         peak_deployed=i(metrics.n_deployed).max(axis=-1),
         peak_overloaded=i(metrics.n_overloaded).max(axis=-1),
         peak_inactive=i(metrics.n_inactive).max(axis=-1),
+        sum_soft_comm=f(metrics.soft_comm).sum(axis=-1),
+        sum_soft_util=f(metrics.soft_util).sum(axis=-1),
+        sum_soft_n=f(metrics.soft_n).sum(axis=-1),
+        sum_soft_mig=f(metrics.soft_mig).sum(axis=-1),
+        sum_soft_mig_n=f(metrics.soft_mig_n).sum(axis=-1),
     )
+
+
+# ---------------------------------------------------------------------------
+# Differentiable surrogate objectives (SimConfig.soft_placement)
+# ---------------------------------------------------------------------------
+# name -> which surrogate sums form the mean.  'soft_blend' mixes the
+# comm- and util-expectation columns: a single-column objective is
+# invariant to scaling ITS one weight (softmax over a rescaled row moves,
+# but for the disjoint-support legacy vectors the hard argmin does not),
+# so the blend is the default the grad tuner descends.  Lower = better.
+SOFT_OBJECTIVES: tuple = ("soft_blend", "soft_comm", "soft_util",
+                          "soft_mig_util")
+
+
+def soft_num_den(m, objective: str = "soft_blend"):
+    """(numerator, denominator) of a named surrogate objective.
+
+    ``m`` may be stacked ``TickMetrics`` (trailing time axis, summed
+    here), a ``SummaryAcc`` (in-jit streaming carry — the Kahan pair is
+    collapsed as ``sum + c``, matching ``online_fold``'s recovery), or a
+    host-side ``OnlineSummary``.  Stays inside jit and is differentiable
+    end to end — this is the reduction ``jax.grad`` flows through.
+    """
+    if objective not in SOFT_OBJECTIVES:
+        raise KeyError(f"unknown soft objective {objective!r}; known: "
+                       f"{list(SOFT_OBJECTIVES)}")
+    if isinstance(m, SummaryAcc):
+        comm = m.sum_soft_comm + m.c_soft_comm
+        util = m.sum_soft_util + m.c_soft_util
+        n = m.sum_soft_n + m.c_soft_n
+        mig = m.sum_soft_mig + m.c_soft_mig
+        mig_n = m.sum_soft_mig_n + m.c_soft_mig_n
+    elif isinstance(m, OnlineSummary):
+        comm, util, n = m.sum_soft_comm, m.sum_soft_util, m.sum_soft_n
+        mig, mig_n = m.sum_soft_mig, m.sum_soft_mig_n
+    elif isinstance(m, TickMetrics):
+        comm = m.soft_comm.sum(axis=-1)
+        util = m.soft_util.sum(axis=-1)
+        n = m.soft_n.sum(axis=-1)
+        mig = m.soft_mig.sum(axis=-1)
+        mig_n = m.soft_mig_n.sum(axis=-1)
+    else:
+        raise TypeError(f"expected TickMetrics, SummaryAcc or "
+                        f"OnlineSummary, got {type(m).__name__}")
+    if objective == "soft_comm":
+        return comm, n
+    if objective == "soft_util":
+        return util, n
+    if objective == "soft_mig_util":
+        return mig, mig_n
+    return comm + util, n
+
+
+def soft_objective(m, objective: str = "soft_blend"):
+    """Mean surrogate cost (lower = better): numerator / max(count, 1).
+
+    The count denominator comes from non-differentiable feasibility
+    decisions, so it is piecewise-constant in the weights — the gradient
+    is the exact gradient of the numerator scaled by it.
+    """
+    num, den = soft_num_den(m, objective)
+    return num / jnp.maximum(den, 1.0)

@@ -7,6 +7,7 @@ be carried through ``lax.scan`` and ``vmap``-ed over scenarios.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import NamedTuple
 
 import jax.numpy as jnp
@@ -207,6 +208,10 @@ class RunParams(NamedTuple):
     queue_coef: jnp.ndarray         # f32[] M/M/1 queueing-delay coefficient
     overload_threshold: jnp.ndarray  # f32[] migration source / stats threshold
     idle_threshold: jnp.ndarray     # f32[] migration destination threshold
+    tau: jnp.ndarray                # f32[] soft-placement softmax temperature
+    #                                       (only read when
+    #                                       SimConfig.soft_placement; traced,
+    #                                       so annealing never recompiles)
 
 
 class SchedState(NamedTuple):
@@ -246,6 +251,18 @@ class TickMetrics(NamedTuple):
     mean_util: jnp.ndarray
     active_flows: jnp.ndarray
     mean_flow_rate: jnp.ndarray    # KB/s over active flows
+    # --- soft-placement surrogate terms (SimConfig.soft_placement) ---
+    # Expected feature costs under the softmax relaxation of each discrete
+    # placement/migration decision: q = softmax(-score_row / tau) over the
+    # feasible hosts.  The *dynamics* stay the hard argmin (bit-for-bit
+    # identical to soft_placement=False); these extra observables are the
+    # differentiable surrogate that jax.grad(objective)(weights) flows
+    # through.  All exact 0.0 when soft placement is off.
+    soft_comm: jnp.ndarray         # sum of E_q[comm-cost col] over admits
+    soft_util: jnp.ndarray         # sum of E_q[host-util col] over admits
+    soft_n: jnp.ndarray            # f32 count of admits with >=1 feasible host
+    soft_mig: jnp.ndarray          # sum of E_q[path-util col] over migrations
+    soft_mig_n: jnp.ndarray        # f32 count of soft-scored migrations
 
 
 class SummaryAcc(NamedTuple):
@@ -284,6 +301,18 @@ class SummaryAcc(NamedTuple):
     peak_deployed: jnp.ndarray     # i32[]
     peak_overloaded: jnp.ndarray   # i32[]
     peak_inactive: jnp.ndarray     # i32[] worst scheduling-queue depth
+    # Kahan-compensated f32 sums of the soft-placement surrogate series
+    # (all exact 0.0 when SimConfig.soft_placement is off)
+    sum_soft_comm: jnp.ndarray     # f32[]
+    c_soft_comm: jnp.ndarray       # f32[]
+    sum_soft_util: jnp.ndarray     # f32[]
+    c_soft_util: jnp.ndarray       # f32[]
+    sum_soft_n: jnp.ndarray        # f32[]
+    c_soft_n: jnp.ndarray          # f32[]
+    sum_soft_mig: jnp.ndarray      # f32[]
+    c_soft_mig: jnp.ndarray        # f32[]
+    sum_soft_mig_n: jnp.ndarray    # f32[]
+    c_soft_mig_n: jnp.ndarray      # f32[]
 
 
 class OnlineSummary(NamedTuple):
@@ -308,6 +337,106 @@ class OnlineSummary(NamedTuple):
     peak_deployed: np.ndarray      # i64
     peak_overloaded: np.ndarray    # i64
     peak_inactive: np.ndarray      # i64
+    # soft-placement surrogate sums (f64; 0.0 when soft placement is off)
+    sum_soft_comm: np.ndarray      # f64
+    sum_soft_util: np.ndarray      # f64
+    sum_soft_n: np.ndarray         # f64
+    sum_soft_mig: np.ndarray       # f64
+    sum_soft_mig_n: np.ndarray     # f64
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecPlan:
+    """One object for every *execution* knob — how a run is executed, never
+    what it simulates.
+
+    PRs 6-8 grew these knobs one call-site at a time (``chunk=`` on
+    ``run_sim``, ``slab=``/``overlap=``/``devices=`` on the sweep,
+    ``procs=``/``devices_per_proc=`` on tune, kernel selectors on
+    ``SimConfig``); this consolidates them so ``run_sim``/``run_sweep``/
+    ``run_tune``/``launch.dist`` all accept ``plan=ExecPlan(...)`` and the
+    old kwargs survive exactly one deprecation cycle.
+
+    jit-cache-key semantics are unchanged: the plan is *resolved* at the
+    call boundary — kernel selectors are folded into the static
+    ``SimConfig`` (``apply_to_config``), chunk/slab shape the host loop and
+    the compiled step's shapes, devices pick the sharding mesh — so the
+    plan itself is never a traced value and never a jit static argument.
+
+    ``None`` everywhere means "keep the current default" (stacked run,
+    config's kernel selectors, all local devices, in-process).
+    """
+
+    chunk: int | None = None            # ticks per compiled scan segment;
+    #                                     None = stacked single-scan run
+    slab: int | None = None             # sweep cells per device per slab;
+    #                                     None = whole grid in one slab
+    delay_kernel: str | None = None     # override SimConfig.delay_kernel
+    #                                     ('auto'|'on'|'off'); None keeps
+    waterfill_kernel: str | None = None  # override SimConfig.waterfill_kernel
+    devices: tuple | int | None = None  # jax devices for the sweep mesh
+    #                                     (sequence, or a count of local
+    #                                     devices); None = all local devices
+    overlap: bool = True                # overlap slab gather behind compute
+    procs: int = 1                      # worker processes (launch.dist)
+    devices_per_proc: int = 1           # devices each dist worker claims
+
+    def __post_init__(self):
+        if self.devices is not None \
+                and not isinstance(self.devices, (tuple, int)):
+            object.__setattr__(self, "devices", tuple(self.devices))
+        for name in ("chunk", "slab"):
+            v = getattr(self, name)
+            if v is not None and v <= 0:
+                raise ValueError(f"ExecPlan.{name} must be positive, "
+                                 f"got {v}")
+        if self.procs < 1 or self.devices_per_proc < 1:
+            raise ValueError("ExecPlan.procs and devices_per_proc must be "
+                             ">= 1")
+        for name in ("delay_kernel", "waterfill_kernel"):
+            v = getattr(self, name)
+            if v is not None and v not in ("auto", "on", "off"):
+                raise ValueError(f"ExecPlan.{name} must be one of "
+                                 f"'auto'/'on'/'off'/None, got {v!r}")
+
+    def apply_to_config(self, cfg):
+        """Fold the kernel selectors into the static ``SimConfig``.
+
+        The config stays the jit cache key: two plans that pick the same
+        kernels hit the same compiled program, and a kernel change
+        recompiles exactly as a config change always did.
+        """
+        updates = {}
+        if self.delay_kernel is not None \
+                and self.delay_kernel != cfg.delay_kernel:
+            updates["delay_kernel"] = self.delay_kernel
+        if self.waterfill_kernel is not None \
+                and self.waterfill_kernel != cfg.waterfill_kernel:
+            updates["waterfill_kernel"] = self.waterfill_kernel
+        return dataclasses.replace(cfg, **updates) if updates else cfg
+
+    @classmethod
+    def from_args(cls, args) -> "ExecPlan":
+        """Build a plan from an ``argparse`` namespace produced by
+        ``repro.launch.execargs.add_exec_args`` — missing attributes fall
+        back to the field defaults, so partial namespaces work."""
+        defaults = cls()
+
+        def get(name, fallback):
+            v = getattr(args, name, None)
+            return fallback if v is None else v
+
+        return cls(
+            chunk=getattr(args, "chunk", None),
+            slab=getattr(args, "slab", None),
+            delay_kernel=getattr(args, "delay_kernel", None),
+            waterfill_kernel=getattr(args, "waterfill_kernel", None),
+            devices=getattr(args, "devices", None),
+            overlap=(not getattr(args, "no_overlap", False)),
+            procs=get("procs", defaults.procs),
+            devices_per_proc=get("devices_per_proc",
+                                 defaults.devices_per_proc),
+        )
 
 
 def empty_containers(capacity: int) -> ContainerState:

@@ -65,6 +65,7 @@ import sys
 import tempfile
 import threading
 import time
+import warnings
 from typing import Sequence
 
 import jax
@@ -75,7 +76,7 @@ from repro.core import SimConfig, list_policies, stats
 from repro.core.scenario import (ScenarioSpec, build_scenarios,
                                  default_scenarios)
 from repro.core.scheduling import validate_weights
-from repro.core.types import OnlineSummary, PolicyParams
+from repro.core.types import ExecPlan, OnlineSummary, PolicyParams
 from repro.distributed import checkpoint as ckpt
 from repro.distributed.fault import FaultConfig, StragglerDetector
 from repro.launch.sweep import (SweepResult, _is_static_leaf, make_stream_fn,
@@ -84,6 +85,31 @@ from repro.launch.sweep import (SweepResult, _is_static_leaf, make_stream_fn,
 _SRC = pathlib.Path(__file__).resolve().parents[2]   # .../src
 _SLAB_RE = re.compile(r"slab_(\d{8})$")
 _META_RE = re.compile(r"worker_(\d+)\.json$")
+
+
+def _resolve_dist_plan(plan: ExecPlan | None, cfg: SimConfig,
+                       **legacy) -> tuple[ExecPlan, SimConfig]:
+    """Dist twin of ``engine.resolve_plan``: same deprecation cycle for
+    the bare kwargs, but the no-plan default keeps the fabric's historical
+    2-worker spawn (``ExecPlan.procs`` defaults to 1 = in-process, which
+    is right for ``run_sim``/``run_sweep`` but would silently turn the
+    dist entry points into single-worker runs)."""
+    used = {k: v for k, v in legacy.items() if v is not None}
+    if used:
+        if plan is not None:
+            raise TypeError(
+                f"pass execution options via plan= OR the deprecated "
+                f"kwargs {sorted(used)}, not both")
+        warnings.warn(
+            f"the {sorted(used)} kwargs are deprecated; pass "
+            f"plan=ExecPlan(...) instead", DeprecationWarning, stacklevel=3)
+    if plan is None:
+        plan = ExecPlan(
+            chunk=used.get("chunk"), slab=used.get("slab"),
+            overlap=used.get("overlap", True),
+            procs=used.get("num_procs", 2),
+            devices_per_proc=used.get("devices_per_proc", 1))
+    return plan, plan.apply_to_config(cfg)
 
 
 def _slab_cells(B: int, slab: int | None, n_dev: int) -> int:
@@ -612,20 +638,35 @@ def make_dist_fn(cfg: SimConfig, scenarios: Sequence[ScenarioSpec],
                  seeds: Sequence[int], *,
                  policies: Sequence[str] | None = None, weights=None,
                  n_hosts: int = 20, n_spine: int = 2, n_leaf: int = 4,
-                 num_procs: int = 2, devices_per_proc: int = 1,
-                 chunk: int, slab: int | None = None, overlap: bool = True,
+                 num_procs: int | None = None,
+                 devices_per_proc: int | None = None,
+                 chunk: int | None = None, slab: int | None = None,
+                 overlap: bool | None = None,
+                 plan: ExecPlan | None = None,
                  out_dir: str | None = None, dist_init: bool = True,
                  force_cpu: bool = True, timeout_s: float = 900.0):
     """Drop-in sweep callable (``fn(sims, pols, rps) -> (finals,
     summary)`` with ``fn._cache_size``/``fn.n_devices``, like
-    ``make_stream_fn``) that runs the grid MULTI-PROCESS.  The spec — not
-    the passed trees — is the source of truth: workers rebuild the grid
-    from it, so the call only sanity-checks that the caller's batch
-    matches (``launch.tune`` rides this for ``--procs``)."""
+    ``make_stream_fn``) that runs the grid MULTI-PROCESS.  Execution
+    options ride in ``plan`` (``procs`` = worker processes; the bare
+    ``num_procs``/``devices_per_proc``/``chunk``/``slab``/``overlap``
+    kwargs are deprecated, one cycle).  The spec — not the passed trees —
+    is the source of truth: workers rebuild the grid from it, so the call
+    only sanity-checks that the caller's batch matches (``launch.tune``
+    rides this for ``--procs``)."""
+    plan, cfg = _resolve_dist_plan(plan, cfg, num_procs=num_procs,
+                                   devices_per_proc=devices_per_proc,
+                                   chunk=chunk, slab=slab, overlap=overlap)
+    if plan.chunk is None:
+        raise ValueError("the dist fabric streams slabs: the plan needs a "
+                         "chunk (there is no stacked multi-process path)")
+    num_procs = plan.procs
+    devices_per_proc = plan.devices_per_proc
     spec = GridSpec.build(cfg=cfg, scenarios=scenarios, seeds=seeds,
                           policies=policies, weights=weights,
                           n_hosts=n_hosts, n_spine=n_spine, n_leaf=n_leaf,
-                          chunk=chunk, slab=slab, overlap=overlap,
+                          chunk=plan.chunk, slab=plan.slab,
+                          overlap=plan.overlap,
                           devices_per_proc=devices_per_proc)
     state: dict = {"metas": []}
 
@@ -658,14 +699,19 @@ def run_dist_sweep(policies: Sequence[str] | None = None,
                    scenarios: Sequence[ScenarioSpec] | None = None,
                    seeds: Sequence[int] = (0,),
                    cfg: SimConfig | None = None, n_hosts: int = 20,
-                   n_spine: int = 2, n_leaf: int = 4, num_procs: int = 2,
-                   devices_per_proc: int = 1, chunk: int | None = None,
-                   slab: int | None = None, overlap: bool = True,
+                   n_spine: int = 2, n_leaf: int = 4,
+                   num_procs: int | None = None,
+                   devices_per_proc: int | None = None,
+                   chunk: int | None = None, slab: int | None = None,
+                   overlap: bool | None = None,
+                   plan: ExecPlan | None = None,
                    out_dir: str | None = None, dist_init: bool = True,
                    force_cpu: bool = True,
                    timeout_s: float = 900.0) -> SweepResult:
     """The multi-process twin of ``sweep.run_sweep`` — always streaming
-    (``chunk`` defaults to the largest bound-safe chunk).  Returns the
+    (a missing ``plan.chunk`` defaults to the largest bound-safe chunk).
+    Execution options ride in ``plan`` (bare kwargs: one deprecation
+    cycle; no plan at all spawns the historical 2 workers).  Returns the
     same ``SweepResult``; ``compile_cache_misses`` is the MAX across
     processes (the per-process compile bill), ``worker_meta`` carries each
     process's slab assignment and walls."""
@@ -673,14 +719,18 @@ def run_dist_sweep(policies: Sequence[str] | None = None,
     scenarios = list(scenarios if scenarios is not None
                      else default_scenarios())
     cfg = cfg or SimConfig()
+    plan, cfg = _resolve_dist_plan(plan, cfg, num_procs=num_procs,
+                                   devices_per_proc=devices_per_proc,
+                                   chunk=chunk, slab=slab, overlap=overlap)
+    chunk = plan.chunk
     if chunk is None:
         chunk = min(cfg.horizon, stats.max_chunk_ticks(cfg.n_containers))
     spec = GridSpec.build(cfg=cfg, scenarios=scenarios, seeds=seeds,
                           policies=policies, n_hosts=n_hosts,
                           n_spine=n_spine, n_leaf=n_leaf, chunk=chunk,
-                          slab=slab, overlap=overlap,
-                          devices_per_proc=devices_per_proc)
-    run = run_spec(spec, num_procs=num_procs, out_dir=out_dir,
+                          slab=plan.slab, overlap=plan.overlap,
+                          devices_per_proc=plan.devices_per_proc)
+    run = run_spec(spec, num_procs=plan.procs, out_dir=out_dir,
                    dist_init=dist_init, force_cpu=force_cpu,
                    timeout_s=timeout_s)
     return SweepResult(
@@ -689,7 +739,8 @@ def run_dist_sweep(policies: Sequence[str] | None = None,
         wall_s=run.wall_s,
         compile_cache_misses=max(
             (m["compile_cache_misses"] for m in run.metas), default=0),
-        n_devices=num_procs * devices_per_proc, worker_meta=run.metas)
+        n_devices=plan.procs * plan.devices_per_proc,
+        worker_meta=run.metas)
 
 
 # ---------------------------------------------------------------------------
@@ -762,12 +813,13 @@ def _launcher_main(argv) -> None:
                 else args.policies.split(","))
     cfg = SimConfig(horizon=args.horizon)
     n_leaf = max(4, args.hosts // 5)
+    plan = ExecPlan(chunk=args.chunk, slab=args.slab,
+                    overlap=not args.no_overlap, procs=args.procs,
+                    devices_per_proc=args.devices_per_proc)
     res = run_dist_sweep(
         policies=policies, seeds=range(args.seeds), cfg=cfg,
         n_hosts=args.hosts, n_spine=max(2, n_leaf // 4), n_leaf=n_leaf,
-        num_procs=args.procs, devices_per_proc=args.devices_per_proc,
-        chunk=args.chunk, slab=args.slab, overlap=not args.no_overlap,
-        out_dir=args.out_dir, dist_init=not args.no_dist_init,
+        plan=plan, out_dir=args.out_dir, dist_init=not args.no_dist_init,
         timeout_s=args.timeout)
     cells = len(res.policies) * len(res.scenarios) * len(res.seeds)
     print(f"# {cells} cells over {args.procs} process(es) x "

@@ -1,0 +1,66 @@
+"""Shared execution-option CLI surface.
+
+Every launcher (``repro.launch.sim`` / ``sweep`` / ``tune``) spells the
+:class:`~repro.core.types.ExecPlan` flags identically through this one
+builder, and ``ExecPlan.from_args`` turns the parsed namespace back into
+a plan — so ``--chunk 16 --slab 64 --delay-kernel off`` means the same
+thing on every entry point and a new execution knob is added in exactly
+one place.
+
+The kernel-selector flags default to ``None`` (= keep the ``SimConfig``
+defaults) rather than ``'auto'``: an unset flag must not *override* a
+config the caller built with explicit selectors.
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def add_exec_args(ap: argparse.ArgumentParser, *, chunk: bool = True,
+                  slab: bool = True, devices: bool = True,
+                  overlap: bool = True, kernels: bool = True,
+                  dist: bool = False):
+    """Attach the ExecPlan flags to ``ap`` (one argument group).
+
+    The keyword switches drop flags that make no sense for a launcher
+    (``repro.launch.sim`` has no grid, so no ``--slab``); dropped flags
+    simply stay absent from the namespace and ``ExecPlan.from_args``
+    falls back to the field defaults.  Returns the argument group.
+    """
+    g = ap.add_argument_group("execution (ExecPlan)")
+    if chunk:
+        g.add_argument("--chunk", type=int, default=None,
+                       help="stream the horizon in chunks of this many "
+                            "ticks with online summaries (O(state) memory; "
+                            "default: stacked per-tick metrics)")
+    if slab:
+        g.add_argument("--slab", type=int, default=None,
+                       help="with --chunk: iterate the grid in slabs of "
+                            "this many cells through one compiled step "
+                            "(default: the whole grid at once)")
+    if devices:
+        g.add_argument("--devices", type=int, default=None,
+                       help="shard the flattened grid over this many "
+                            "devices (default: all local devices)")
+    if overlap:
+        g.add_argument("--no-overlap", action="store_true",
+                       help="with --chunk: gather each slab synchronously "
+                            "instead of one slab behind the async dispatch")
+    if kernels:
+        g.add_argument("--delay-kernel", default=None,
+                       choices=["auto", "on", "off"],
+                       help="fw APSP Pallas kernel (auto: compiled on "
+                            "TPU/GPU, jnp ref on CPU; default: keep the "
+                            "SimConfig selector)")
+        g.add_argument("--waterfill-kernel", default=None,
+                       choices=["auto", "on", "off"],
+                       help="fused waterfilling Pallas kernel (same "
+                            "semantics)")
+    if dist:
+        g.add_argument("--procs", type=int, default=None,
+                       help="spawn this many worker processes over the "
+                            "slab queue (repro.launch.dist; default: "
+                            "in-process)")
+        g.add_argument("--devices-per-proc", type=int, default=None,
+                       help="devices each dist worker claims")
+    return g

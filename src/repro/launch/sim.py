@@ -23,11 +23,12 @@ import argparse
 import json
 import time
 
-from repro.core import (SimConfig, build_paper_hosts, build_paper_network,
-                        get_policy, init_sim, list_policies, paper_workload,
-                        run_sim, scaled_hosts, summarize, to_csv,
-                        trace_workload)
+from repro.core import (ExecPlan, SimConfig, build_paper_hosts,
+                        build_paper_network, get_policy, init_sim,
+                        list_policies, paper_workload, run_sim, scaled_hosts,
+                        summarize, to_csv, trace_workload)
 from repro.core.report import json_clean
+from repro.launch.execargs import add_exec_args
 
 
 def build_once(cfg: SimConfig, bw=None, loss=None, seed=0, workload="paper",
@@ -70,15 +71,16 @@ def parse_weights(arg: str | None) -> dict[str, float] | None:
 
 
 def run_one(policy_name: str, cfg: SimConfig, spec, sim0, params, csv=None,
-            weights=None, chunk=None):
+            weights=None, plan: ExecPlan | None = None):
     from repro.kernels import kernel_backend, resolve_kernel
-    if csv and chunk is not None:
+    plan = ExecPlan() if plan is None else plan
+    if csv and plan.chunk is not None:
         raise ValueError("--csv needs the stacked per-tick series; "
                          "drop --chunk to export one")
     t0 = time.time()
     final, metrics = run_sim(sim0, cfg, get_policy(policy_name, weights),
                              spec.n_hosts, spec.n_nodes, cfg.horizon,
-                             params=params, chunk=chunk)
+                             params=params, plan=plan)
     final.t.block_until_ready()
     rep = summarize(final, metrics)   # metrics: stack OR OnlineSummary
     rep["policy"] = policy_name
@@ -116,10 +118,6 @@ def main() -> None:
                     choices=["paper", "trace"])
     ap.add_argument("--csv", default=None, help="per-tick metrics CSV path "
                     "(stacked mode only — incompatible with --chunk)")
-    ap.add_argument("--chunk", type=int, default=None,
-                    help="stream the horizon in chunks of this many ticks "
-                         "with O(state) online summaries instead of "
-                         "stacking per-tick metrics (long horizons)")
     ap.add_argument("--out", default=None,
                     help="write the summary reports as a JSON list")
     ap.add_argument("--sequential", action="store_true",
@@ -128,15 +126,9 @@ def main() -> None:
     ap.add_argument("--delay-mode", default="path", choices=["path", "fw"],
                     help="delay refresh: ECMP path sum or full APSP "
                          "(the fw_minplus kernel's algebra)")
-    ap.add_argument("--delay-kernel", default="auto",
-                    choices=["auto", "on", "off"],
-                    help="fw APSP Pallas kernel: auto = compiled on "
-                         "TPU/GPU / jnp ref on CPU, on = force kernel "
-                         "(interpreter on CPU), off = jnp ref everywhere")
-    ap.add_argument("--waterfill-kernel", default="auto",
-                    choices=["auto", "on", "off"],
-                    help="fused waterfilling Pallas kernel (same dispatch "
-                         "semantics as --delay-kernel)")
+    # one run = no grid: the slab/devices/dist ExecPlan flags don't apply
+    # (argparse rejects them loudly); --chunk + kernel selectors do
+    add_exec_args(ap, slab=False, devices=False, overlap=False)
     ap.add_argument("--weights", default=None,
                     help="by-name weight overrides for the chosen policy, "
                          "e.g. 'cross_leaf=0.5,row_coloc=0.3' "
@@ -152,9 +144,9 @@ def main() -> None:
                n_jobs=max(10, args.containers // 3)))
     cfg = SimConfig(horizon=args.horizon,
                     batched_placement=not args.sequential,
-                    delay_mode=args.delay_mode,
-                    delay_kernel=args.delay_kernel,
-                    waterfill_kernel=args.waterfill_kernel, **wl)
+                    delay_mode=args.delay_mode, **wl)
+    plan = ExecPlan.from_args(args)
+    cfg = plan.apply_to_config(cfg)
     spec, sim0, params = build_once(cfg, bw=args.bw, loss=args.loss,
                                     seed=args.seed, workload=args.workload,
                                     n_hosts=args.hosts)
@@ -162,7 +154,7 @@ def main() -> None:
     reports = []
     for p in policies:
         rep = json_clean(run_one(p, cfg, spec, sim0, params, csv=args.csv,
-                                 weights=weights, chunk=args.chunk))
+                                 weights=weights, plan=plan))
         reports.append(rep)
         print(json.dumps(rep, indent=None, sort_keys=True))
     if args.out:

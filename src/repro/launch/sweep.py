@@ -33,12 +33,13 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec
 from repro.core import (SimConfig, get_policy, list_policies,
                         sweep_summaries, sweep_table)
 from repro.core import stats
-from repro.core.engine import simulate, simulate_chunk
+from repro.core.engine import resolve_plan, simulate, simulate_chunk
 from repro.core.scenario import (ScenarioSpec, build_scenarios,
                                  default_scenarios)
 from repro.core.scheduling import validate_weights
-from repro.core.types import (OnlineSummary, PolicyParams, RunParams,
-                              SimState, TickMetrics)
+from repro.core.types import (ExecPlan, OnlineSummary, PolicyParams,
+                              RunParams, SimState, TickMetrics)
+from repro.launch.execargs import add_exec_args
 from repro.launch.mesh import compat_mesh
 
 I32 = jnp.int32
@@ -122,6 +123,23 @@ def make_sweep_fn(cfg: SimConfig, n_hosts: int, n_nodes: int, horizon: int,
     """
     mesh = grid_mesh(devices)
     n_dev = 1 if mesh is None else mesh.devices.size
+    grid = _make_grid(cfg, n_hosts, n_nodes, horizon, mesh, n_dev)
+    jitted = jax.jit(grid)
+
+    def fn(sims, pols, rps):
+        _check_topology_uniform(sims)
+        return jitted(sims, pols, rps)
+
+    fn._cache_size = jitted._cache_size
+    fn.n_devices = n_dev
+    return fn
+
+
+def _make_grid(cfg: SimConfig, n_hosts: int, n_nodes: int, horizon: int,
+               mesh, n_dev: int):
+    """The un-jitted [P, S, N]-grid function both ``make_sweep_fn`` (jit)
+    and ``make_grad_fn`` (jit of ``value_and_grad`` through it) trace —
+    one definition, so the differentiated sweep IS the stacked sweep."""
     jtu = jax.tree_util
 
     def cell(sim: SimState, pol: PolicyParams, rp: RunParams):
@@ -173,15 +191,7 @@ def make_sweep_fn(cfg: SimConfig, n_hosts: int, n_nodes: int, horizon: int,
         return jax.tree.map(
             lambda x: x.reshape((P, S, N) + x.shape[1:]), out)
 
-    jitted = jax.jit(grid)
-
-    def fn(sims, pols, rps):
-        _check_topology_uniform(sims)
-        return jitted(sims, pols, rps)
-
-    fn._cache_size = jitted._cache_size
-    fn.n_devices = n_dev
-    return fn
+    return grid
 
 
 def _check_topology_uniform(sims) -> None:
@@ -197,6 +207,137 @@ def _check_topology_uniform(sims) -> None:
                     f"sweep cells disagree on topology leaf {names!r}; "
                     "all scenarios of one grid must share the network "
                     "topology (build_scenarios builds exactly one)")
+
+
+def make_grad_fn(cfg: SimConfig, n_hosts: int, n_nodes: int, horizon: int,
+                 objective: str = "soft_blend", chunk: int | None = None,
+                 devices=None):
+    """The differentiated sweep: ``fn(sims, pols, rps) -> (obj [P],
+    grad [P, NUM_POLICY_WEIGHTS])`` — the per-policy mean surrogate
+    objective over the [S, N] scenario/seed cells, and its gradient in
+    ``PolicyParams.weights`` (docs/autodiff.md).
+
+    Requires ``cfg.soft_placement``: the objective is the softmax
+    expected-cost surrogate accumulated by the soft admit/migration
+    rounds (``stats.soft_objective``); the simulated dynamics stay the
+    hard argmin, so gradients flow through the per-decision score rows.
+    Almost every state-mediated path crosses an integer decision and
+    carries exact zero cotangent — the one exception is the periodic
+    delay refresh, which bakes ``weights[util]``/``weights[cross_leaf]``
+    into the persistent ``net.comm_cost`` cache (a continuous w -> state
+    path, docs/autodiff.md).
+
+    ``chunk=None`` differentiates the SAME grid function ``make_sweep_fn``
+    jits — one ``jax.jit(value_and_grad(...))`` over the whole stacked
+    grid, weights riding the policy batch axis, sharded over ``devices``
+    exactly like the forward sweep.  A ``chunk`` streams the horizon
+    instead (the ``make_stream_fn`` regime): a host loop drives ONE jitted
+    ``value_and_grad`` chunk step (+ one tail compile when ``chunk`` does
+    not divide ``horizon`` — never more, asserted in
+    ``tests/test_autodiff.py``) whose value is the chunk's surrogate
+    NUMERATOR sum; per-cell numerator gradients are summed host-side in
+    f64 and scaled by the final count denominator (piecewise-constant in
+    the weights, so this is the exact objective gradient), memory
+    O(cells x state) at any horizon.  Values match the stacked path at
+    any chunk size; gradients match to f32 summation order EXCEPT the
+    comm_cost-carried ``util``/``cross_leaf`` components, which are
+    truncated-BPTT at chunk boundaries that land while decisions are
+    still being made (boundaries past the admit window see no truncation
+    — pinned exactly in ``tests/test_autodiff.py``).
+    """
+    if not cfg.soft_placement:
+        raise ValueError(
+            "make_grad_fn requires cfg.soft_placement=True — with it off "
+            "the surrogate sums are constant 0.0 and every gradient "
+            "vanishes identically")
+    if objective not in stats.SOFT_OBJECTIVES:
+        raise KeyError(f"unknown soft objective {objective!r}; known: "
+                       f"{list(stats.SOFT_OBJECTIVES)}")
+    mesh = grid_mesh(devices)
+    n_dev = 1 if mesh is None else mesh.devices.size
+    jtu = jax.tree_util
+
+    if chunk is None:
+        grid = _make_grid(cfg, n_hosts, n_nodes, horizon, mesh, n_dev)
+
+        def value(w, sims, rps):
+            _, metrics = grid(sims, PolicyParams(weights=w), rps)
+            num, den = stats.soft_num_den(metrics, objective)
+            per_pol = (num / jnp.maximum(den, 1.0)).mean(axis=(1, 2))
+            # policies are independent cells: d(sum)/dw is the [P, W]
+            # per-policy gradient stack, no cross terms
+            return per_pol.sum(), per_pol
+
+        vg = jax.jit(jax.value_and_grad(value, has_aux=True))
+
+        def fn(sims, pols, rps):
+            _check_topology_uniform(sims)
+            (_, per_pol), g = vg(pols.weights, sims, rps)
+            return per_pol, g
+
+        fn._cache_size = vg._cache_size
+        fn.n_devices = n_dev
+        return fn
+
+    stats.check_chunk(chunk, cfg.n_containers)
+
+    def gstep(w, sims, accs, rps, t0, csz):
+        flat, treedef = jtu.tree_flatten_with_path(sims)
+        sim_axes = jtu.tree_unflatten(
+            treedef, [None if _is_static_leaf(p) else 0 for p, _ in flat])
+
+        def chunk_num(w):
+            def cell(sim, acc, pol, rp):
+                return simulate_chunk(sim, acc, t0, cfg, pol, n_hosts,
+                                      n_nodes, csz, rp)
+            sims2, accs2 = jax.vmap(
+                cell, in_axes=(sim_axes, 0, 0, 0),
+                out_axes=(sim_axes, 0))(sims, accs,
+                                        PolicyParams(weights=w), rps)
+            num, _ = stats.soft_num_den(accs2, objective)   # [B]
+            return num.sum(), (sims2, accs2)
+
+        (_, (sims2, accs2)), g = jax.value_and_grad(
+            chunk_num, has_aux=True)(w)
+        return sims2, accs2, g
+
+    jstep = jax.jit(gstep, static_argnames=("csz",))
+
+    def fn(sims, pols, rps):
+        _check_topology_uniform(sims)
+        P, W = pols.weights.shape
+        S, N = sims.t.shape
+        B = P * S * N
+        idx = np.arange(B)
+        p_i, s_i, n_i = idx // (S * N), (idx // N) % S, idx % N
+        flat_sims, sims_def = jtu.tree_flatten_with_path(sims)
+        sim_flat = jtu.tree_unflatten(
+            sims_def, [x[0, 0] if _is_static_leaf(p) else x[s_i, n_i]
+                       for p, x in flat_sims])
+        w = pols.weights[p_i]                               # [B, W]
+        rp_flat = jax.tree.map(lambda x: x[s_i], rps)
+        online = stats.online_init((B,))
+        gnum = np.zeros((B, W), np.float64)
+        t0 = 0
+        while t0 < horizon:
+            sz = min(chunk, horizon - t0)
+            accs = jax.tree.map(lambda x: jnp.zeros((B,), x.dtype),
+                                stats.acc_init())
+            sim_flat, accs, g = jstep(w, sim_flat, accs, rp_flat,
+                                      jnp.asarray(t0, I32), csz=sz)
+            online = stats.online_fold(online, accs)
+            gnum += np.asarray(g, np.float64)
+            t0 += sz
+        num, den = stats.soft_num_den(online, objective)
+        den = np.maximum(den, 1.0)
+        obj = (num / den).reshape(P, S * N)
+        gobj = (gnum / den[:, None]).reshape(P, S * N, W)
+        return (jnp.asarray(obj.mean(axis=1), jnp.float32),
+                jnp.asarray(gobj.mean(axis=1), jnp.float32))
+
+    fn._cache_size = jstep._cache_size
+    fn.n_devices = 1          # chunked grads run unsharded (single process)
+    return fn
 
 
 def make_stream_fn(cfg: SimConfig, n_hosts: int, n_nodes: int, horizon: int,
@@ -429,30 +570,37 @@ def run_sweep(policies: Sequence[str] | None = None,
               seeds: Sequence[int] = (0,), cfg: SimConfig | None = None,
               n_hosts: int = 20, n_spine: int = 2,
               n_leaf: int = 4, devices=None, chunk: int | None = None,
-              slab: int | None = None, overlap: bool = True) -> SweepResult:
-    """Build the grid and run it as one compiled call (sharded over
-    ``devices`` — default: every local device).
+              slab: int | None = None, overlap: bool | None = None,
+              plan: ExecPlan | None = None) -> SweepResult:
+    """Build the grid and run it as one compiled call.
 
-    ``chunk`` switches to the STREAMING sweep (``make_stream_fn``): the
-    horizon runs in chunks with online summary folds and the grid is
-    iterated in slabs of ``slab`` cells (default: the whole grid) through
-    one compiled step — [P, S, N] summaries without ever holding
-    [P, S, N, T] metrics.  Cell results are bit-identical either way.
-    ``overlap`` (streaming only) gathers each slab's results one slab
-    behind the dispatch so host transfers hide under device compute.
+    Execution options ride in ``plan`` (:class:`~repro.core.types.ExecPlan`
+    — the bare ``devices``/``chunk``/``slab``/``overlap`` kwargs are
+    deprecated, one cycle).  ``plan.devices`` shards the flattened grid
+    (default: every local device).  A ``plan.chunk`` switches to the
+    STREAMING sweep (``make_stream_fn``): the horizon runs in chunks with
+    online summary folds and the grid is iterated in slabs of
+    ``plan.slab`` cells (default: the whole grid) through one compiled
+    step — [P, S, N] summaries without ever holding [P, S, N, T] metrics.
+    Cell results are bit-identical either way.  ``plan.overlap``
+    (streaming only) gathers each slab's results one slab behind the
+    dispatch so host transfers hide under device compute.  The plan's
+    kernel selectors fold into ``cfg`` before compilation.
     """
     policies = list(policies if policies is not None else list_policies())
     scenarios = list(scenarios if scenarios is not None
                      else default_scenarios())
     cfg = cfg or SimConfig()
+    plan, cfg = resolve_plan(plan, cfg, devices=devices, chunk=chunk,
+                             slab=slab, overlap=overlap)
     net_spec, sims, rps = build_scenarios(scenarios, cfg, n_hosts=n_hosts,
                                           n_spine=n_spine, n_leaf=n_leaf,
                                           seeds=seeds)
     pol = stack_policies(policies)
-    if chunk is not None:
+    if plan.chunk is not None:
         fn = make_stream_fn(cfg, net_spec.n_hosts, net_spec.n_nodes,
-                            cfg.horizon, chunk=chunk, slab=slab,
-                            devices=devices, overlap=overlap)
+                            cfg.horizon, chunk=plan.chunk, slab=plan.slab,
+                            devices=plan.devices, overlap=plan.overlap)
         t0 = time.time()
         finals, summary = fn(sims, pol, rps)
         return SweepResult(policies=policies, scenarios=scenarios,
@@ -462,7 +610,7 @@ def run_sweep(policies: Sequence[str] | None = None,
                            compile_cache_misses=fn._cache_size(),
                            n_devices=fn.n_devices)
     fn = make_sweep_fn(cfg, net_spec.n_hosts, net_spec.n_nodes, cfg.horizon,
-                       devices=devices)
+                       devices=plan.devices)
     t0 = time.time()
     finals, metrics = fn(sims, pol, rps)
     jax.tree.leaves(finals)[0].block_until_ready()
@@ -532,7 +680,7 @@ def run_sim_vmapped(sims: SimState, cfg: SimConfig, policy: PolicyParams,
     return cur, online
 
 
-def main() -> None:
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--policies", default="all",
                     help=f"comma-separated subset of {list_policies()} "
@@ -541,52 +689,35 @@ def main() -> None:
                     help="number of seeds (0..n-1) per cell")
     ap.add_argument("--horizon", type=int, default=120)
     ap.add_argument("--hosts", type=int, default=20)
-    ap.add_argument("--devices", type=int, default=None,
-                    help="shard the flattened grid over this many devices "
-                         "(default: all local devices)")
-    ap.add_argument("--chunk", type=int, default=None,
-                    help="stream the horizon in chunks of this many ticks "
-                         "with online summaries (O(state) memory; default: "
-                         "stacked per-tick metrics)")
-    ap.add_argument("--slab", type=int, default=None,
-                    help="with --chunk: iterate the grid in slabs of this "
-                         "many cells through one compiled step (default: "
-                         "the whole grid at once)")
-    ap.add_argument("--no-overlap", action="store_true",
-                    help="with --chunk: gather each slab synchronously "
-                         "instead of one slab behind the async dispatch")
     ap.add_argument("--table", default="avg_runtime",
                     help="summary metric for the grouped table")
     ap.add_argument("--out", default=None,
                     help="write per-cell summary rows as JSON")
     ap.add_argument("--delay-mode", default="path", choices=["path", "fw"],
                     help="delay refresh: ECMP path sum or full APSP")
-    ap.add_argument("--delay-kernel", default="auto",
-                    choices=["auto", "on", "off"],
-                    help="fw APSP Pallas kernel (auto: compiled on TPU/GPU, "
-                         "jnp ref on CPU)")
-    ap.add_argument("--waterfill-kernel", default="auto",
-                    choices=["auto", "on", "off"],
-                    help="fused waterfilling Pallas kernel (same semantics)")
-    args = ap.parse_args()
+    add_exec_args(ap)
+    return ap
+
+
+def main() -> None:
+    args = build_parser().parse_args()
 
     policies = (list_policies() if args.policies == "all"
                 else args.policies.split(","))
-    cfg = SimConfig(horizon=args.horizon, delay_mode=args.delay_mode,
-                    delay_kernel=args.delay_kernel,
-                    waterfill_kernel=args.waterfill_kernel)
+    cfg = SimConfig(horizon=args.horizon, delay_mode=args.delay_mode)
+    plan = ExecPlan.from_args(args)
+    cfg = plan.apply_to_config(cfg)
     n_leaf = max(4, args.hosts // 5)
     res = run_sweep(policies=policies, seeds=range(args.seeds), cfg=cfg,
                     n_hosts=args.hosts, n_spine=max(2, n_leaf // 4),
-                    n_leaf=n_leaf, devices=args.devices, chunk=args.chunk,
-                    slab=args.slab, overlap=not args.no_overlap)
+                    n_leaf=n_leaf, plan=plan)
     cells = len(res.policies) * len(res.scenarios) * len(res.seeds)
     from repro.kernels import kernel_backend, resolve_kernel
     backend = kernel_backend()
-    kernel_note = (f"delay={args.delay_mode}/{args.delay_kernel}"
-                   f"(-> {'kernel' if resolve_kernel(args.delay_kernel) else 'ref'}), "
-                   f"waterfill={args.waterfill_kernel}"
-                   f"(-> {'kernel' if resolve_kernel(args.waterfill_kernel) else 'ref'})")
+    kernel_note = (f"delay={args.delay_mode}/{cfg.delay_kernel}"
+                   f"(-> {'kernel' if resolve_kernel(cfg.delay_kernel) else 'ref'}), "
+                   f"waterfill={cfg.waterfill_kernel}"
+                   f"(-> {'kernel' if resolve_kernel(cfg.waterfill_kernel) else 'ref'})")
     print(f"# {cells} cells ({len(res.policies)} policies x "
           f"{len(res.scenarios)} scenarios x {len(res.seeds)} seeds) in "
           f"{res.wall_s}s, {res.compile_cache_misses} compilation(s), "
@@ -598,8 +729,8 @@ def main() -> None:
         for row in rows:   # self-describing rows: backend + kernel dispatch
             row["backend"] = backend
             row["delay_mode"] = args.delay_mode
-            row["delay_kernel"] = args.delay_kernel
-            row["waterfill_kernel"] = args.waterfill_kernel
+            row["delay_kernel"] = cfg.delay_kernel
+            row["waterfill_kernel"] = cfg.waterfill_kernel
         with open(args.out, "w") as f:
             json.dump(json_clean(rows), f, indent=1)
         print(f"# wrote {args.out}")

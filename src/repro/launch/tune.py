@@ -26,10 +26,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import SimConfig, get_policy, sweep_summaries, tune_table
+from repro.core import stats
+from repro.core.engine import resolve_plan
 from repro.core.scenario import ScenarioSpec, build_scenarios
 from repro.core.scheduling import validate_weights, weight_index
-from repro.core.types import WEIGHT_NAMES, PolicyParams
-from repro.launch.sweep import make_stream_fn, make_sweep_fn
+from repro.core.types import (NUM_POLICY_WEIGHTS, WEIGHT_NAMES, ExecPlan,
+                              PolicyParams)
+from repro.launch.execargs import add_exec_args
+from repro.launch.sweep import make_grad_fn, make_stream_fn, make_sweep_fn
 
 # Default search space: the cost-model weights of the network-aware score
 # plus the co-location / consolidation trade-off — the knobs the paper's
@@ -118,6 +122,27 @@ class TuneResult:
                           top=top, minimize=self.minimize)
 
 
+def _default_scenarios() -> list[ScenarioSpec]:
+    return [ScenarioSpec("baseline"),
+            ScenarioSpec("slow_net", bw=200.0),
+            ScenarioSpec("bursty", arrival="bursty")]
+
+
+def _mean_scores(fn, sims, W, rps, scenarios, seeds, objective):
+    """Oracle-score a weight population: run the compiled sweep with the
+    weights on the policy axis and mean the summary ``objective`` over
+    every (scenario, seed) cell — (scores [W], summary rows)."""
+    n = W.shape[0]
+    finals, metrics = fn(sims, PolicyParams(weights=jnp.asarray(W)), rps)
+    names = [f"w{i:03d}" for i in range(n)]
+    rows = sweep_summaries(finals, metrics, names,
+                           [s.name for s in scenarios], seeds)
+    per = {name: [] for name in names}
+    for r in rows:
+        per[r["policy"]].append(float(r[objective]))
+    return np.asarray([np.mean(per[name]) for name in names]), rows
+
+
 def run_tune(n_samples: int = 16, seeds: Sequence[int] = (0,),
              scenarios: Sequence[ScenarioSpec] | None = None,
              cfg: SimConfig | None = None, n_hosts: int = 20,
@@ -126,8 +151,9 @@ def run_tune(n_samples: int = 16, seeds: Sequence[int] = (0,),
              space: dict[str, tuple[float, float]] | None = None,
              grid: bool = False, seed: int = 0,
              devices=None, reps: int = 1, chunk: int | None = None,
-             slab: int | None = None, overlap: bool = True,
-             procs: int = 1, devices_per_proc: int = 1) -> TuneResult:
+             slab: int | None = None, overlap: bool | None = None,
+             procs: int | None = None, devices_per_proc: int | None = None,
+             plan: ExecPlan | None = None) -> TuneResult:
     """One compiled call over the whole search population.
 
     The per-sample score is the objective's plain mean over every
@@ -148,21 +174,25 @@ def run_tune(n_samples: int = 16, seeds: Sequence[int] = (0,),
     match the stacked search to float precision (integer objectives
     exactly).
 
-    ``procs > 1`` runs the streamed search MULTI-PROCESS through the
-    distributed sweep fabric (``repro.launch.dist``): the weight
+    A ``plan.procs > 1`` runs the streamed search MULTI-PROCESS through
+    the distributed sweep fabric (``repro.launch.dist``): the weight
     population rides the same slab-per-process handout as a policy sweep
     (weights are just the policy batch axis), each process owning
-    ``devices_per_proc`` forced CPU devices locally or one accelerator
-    process slot on a real fleet, and the partial summaries reduced with
-    ``stats.online_merge``.  Requires ``chunk``; scores are bit-identical
-    to the single-process streamed search.
+    ``plan.devices_per_proc`` forced CPU devices locally or one
+    accelerator process slot on a real fleet, and the partial summaries
+    reduced with ``stats.online_merge``.  Requires ``plan.chunk``; scores
+    are bit-identical to the single-process streamed search.
+
+    Execution options ride in ``plan``; the bare ``devices``/``chunk``/
+    ``slab``/``overlap``/``procs``/``devices_per_proc`` kwargs are
+    deprecated (one cycle).
     """
     cfg = cfg or SimConfig()
-    scenarios = list(scenarios if scenarios is not None else [
-        ScenarioSpec("baseline"),
-        ScenarioSpec("slow_net", bw=200.0),
-        ScenarioSpec("bursty", arrival="bursty"),
-    ])
+    plan, cfg = resolve_plan(plan, cfg, devices=devices, chunk=chunk,
+                             slab=slab, overlap=overlap, procs=procs,
+                             devices_per_proc=devices_per_proc)
+    scenarios = list(scenarios if scenarios is not None
+                     else _default_scenarios())
     W = sample_weights(n_samples, seed=seed, base=base, space=space,
                        grid=grid)
     validate_weights(W, "tune samples: ")
@@ -170,23 +200,22 @@ def run_tune(n_samples: int = 16, seeds: Sequence[int] = (0,),
     net_spec, sims, rps = build_scenarios(scenarios, cfg, n_hosts=n_hosts,
                                           n_spine=n_spine, n_leaf=n_leaf,
                                           seeds=seeds)
-    if procs > 1:
-        if chunk is None:
+    if plan.procs > 1:
+        if plan.chunk is None:
             raise ValueError("procs > 1 requires chunk (the distributed "
                              "fabric streams slabs; there is no stacked "
                              "multi-process path)")
         from repro.launch.dist import make_dist_fn
         fn = make_dist_fn(cfg, scenarios, seeds, weights=W,
                           n_hosts=n_hosts, n_spine=n_spine, n_leaf=n_leaf,
-                          num_procs=procs, devices_per_proc=devices_per_proc,
-                          chunk=chunk, slab=slab, overlap=overlap)
-    elif chunk is not None:
+                          plan=plan)
+    elif plan.chunk is not None:
         fn = make_stream_fn(cfg, net_spec.n_hosts, net_spec.n_nodes,
-                            cfg.horizon, chunk=chunk, slab=slab,
-                            devices=devices, overlap=overlap)
+                            cfg.horizon, chunk=plan.chunk, slab=plan.slab,
+                            devices=plan.devices, overlap=plan.overlap)
     else:
         fn = make_sweep_fn(cfg, net_spec.n_hosts, net_spec.n_nodes,
-                           cfg.horizon, devices=devices)
+                           cfg.horizon, devices=plan.devices)
     def ready(x):   # streaming finals are already host-side numpy
         leaf = jax.tree.leaves(x)[0]
         if hasattr(leaf, "block_until_ready"):
@@ -220,8 +249,235 @@ def run_tune(n_samples: int = 16, seeds: Sequence[int] = (0,),
                       n_devices=fn.n_devices)
 
 
+@dataclasses.dataclass
+class GradTuneResult(TuneResult):
+    """A :class:`TuneResult` (final population + ORACLE scores — the
+    ranking/table surface is unchanged) plus the optimizer's trajectory:
+    the overall-best oracle-scored candidate (never worse than the
+    incumbent: the initial population, incumbent row 0 included, is
+    oracle-scored before the first step) and the per-step history of the
+    surrogate/oracle values — the honest view of how well descending the
+    soft surrogate tracks the hard objective (docs/autodiff.md)."""
+
+    method: str = "grad"
+    surrogate: np.ndarray | None = None   # [M] final surrogate per candidate
+    surrogate_name: str | None = None
+    best_oracle: float = float("nan")     # best oracle score ever seen
+    best_oracle_weights: np.ndarray | None = None
+    history: list | None = None           # per-step dicts (step, tau, ...)
+    surrogate_evals: int = 0              # candidate-evals spent on grad steps
+    oracle_evals: int = 0                 # candidate-evals spent on re-scoring
+
+
+def _space_bounds(space: dict[str, tuple[float, float]]):
+    """(searched index array, mask [W], lo [W], hi [W]) — the gradient /
+    sampling machinery only touches the searched dimensions."""
+    idx = np.asarray([weight_index(name) for name in space], np.int64)
+    mask = np.zeros((NUM_POLICY_WEIGHTS,), np.float32)
+    lo = np.full((NUM_POLICY_WEIGHTS,), -np.inf, np.float32)
+    hi = np.full((NUM_POLICY_WEIGHTS,), np.inf, np.float32)
+    mask[idx] = 1.0
+    for name, (a, b) in space.items():
+        lo[weight_index(name)] = a
+        hi[weight_index(name)] = b
+    return idx, mask, lo, hi
+
+
+def _make_oracle(cfg: SimConfig, net_spec, horizon: int, plan: ExecPlan):
+    """The hard-placement scorer the grad/CEM loops re-score against —
+    ``soft_placement`` OFF, so every score is the true simulator's."""
+    hard = dataclasses.replace(cfg, soft_placement=False)
+    if plan.chunk is not None:
+        return make_stream_fn(hard, net_spec.n_hosts, net_spec.n_nodes,
+                              horizon, chunk=plan.chunk, slab=plan.slab,
+                              devices=plan.devices, overlap=plan.overlap)
+    return make_sweep_fn(hard, net_spec.n_hosts, net_spec.n_nodes, horizon,
+                         devices=plan.devices)
+
+
+def run_tune_grad(steps: int = 24, batch: int = 8, lr: float = 0.1,
+                  tau0: float = 1.0, tau_decay: float = 0.85,
+                  tau_min: float = 0.05, eval_every: int = 6,
+                  seeds: Sequence[int] = (0,),
+                  scenarios: Sequence[ScenarioSpec] | None = None,
+                  cfg: SimConfig | None = None, n_hosts: int = 20,
+                  n_spine: int = 2, n_leaf: int = 4,
+                  objective: str = "avg_runtime",
+                  surrogate: str = "soft_blend", base: str = "netaware",
+                  space: dict[str, tuple[float, float]] | None = None,
+                  seed: int = 0,
+                  plan: ExecPlan | None = None) -> GradTuneResult:
+    """Gradient search: descend the DIFFERENTIABLE soft-placement
+    surrogate, trust only the hard oracle.
+
+    A batch of ``batch`` candidates (row 0 = the untouched ``base``
+    incumbent) rides the policy axis of ONE compiled
+    ``jax.value_and_grad`` sweep (``sweep.make_grad_fn``, built from a
+    ``soft_placement=True`` twin of ``cfg``); each step applies plain
+    gradient descent on the searched dimensions only (masked to
+    ``space``, clipped to its bounds).  The softmax temperature anneals
+    ``tau0 -> tau_min`` by ``tau_decay`` per step — ``tau`` is a traced
+    ``RunParams`` field, so annealing never recompiles.
+
+    The surrogate is a guide, not the objective: every ``eval_every``
+    steps (and before the first, and after the last) the CURRENT
+    candidates are re-scored on the hard oracle (``soft_placement=False``
+    — bit-for-bit the production simulator) under the TRUE ``objective``,
+    and the best-ever oracle candidate is tracked.  Because the incumbent
+    is oracle-scored up front, the result never ranks below it.  Both
+    trajectories land in ``history``; ``scores`` is the final
+    population's oracle score so ``table()`` ranks real numbers.
+    """
+    cfg = cfg or SimConfig()
+    plan = ExecPlan() if plan is None else plan
+    cfg = plan.apply_to_config(cfg)
+    if plan.procs > 1:
+        raise ValueError("grad mode is single-process (the oracle rides "
+                         "plan.chunk/devices; procs is random/grid only)")
+    scenarios = list(scenarios if scenarios is not None
+                     else _default_scenarios())
+    space = DEFAULT_SPACE if space is None else space
+    idx, mask, lo, hi = _space_bounds(space)
+    minimize = objective not in MAXIMIZE
+    better = (lambda a, b: a < b) if minimize else (lambda a, b: a > b)
+
+    W = sample_weights(batch, seed=seed, base=base, space=space)
+    validate_weights(W, "tune grad candidates: ")
+    soft = dataclasses.replace(cfg, soft_placement=True)
+    net_spec, sims, rps = build_scenarios(scenarios, soft, n_hosts=n_hosts,
+                                          n_spine=n_spine, n_leaf=n_leaf,
+                                          seeds=seeds)
+    gfn = make_grad_fn(soft, net_spec.n_hosts, net_spec.n_nodes,
+                       cfg.horizon, objective=surrogate, chunk=plan.chunk,
+                       devices=plan.devices)
+    ofn = _make_oracle(cfg, net_spec, cfg.horizon, plan)
+
+    t_start = time.time()
+    history: list[dict[str, Any]] = []
+    surrogate_evals = 0
+    scores, rows = _mean_scores(ofn, sims, W, rps, scenarios, seeds,
+                                objective)
+    oracle_evals = batch
+    k = int(np.nanargmin(scores) if minimize else np.nanargmax(scores))
+    best_score, best_w = float(scores[k]), W[k].copy()
+    tau = float(tau0)
+    for step in range(steps):
+        rps_t = rps._replace(tau=jnp.full_like(rps.tau, tau))
+        obj_s, g = gfn(sims, PolicyParams(weights=jnp.asarray(W)), rps_t)
+        surrogate_evals += batch
+        g = np.asarray(g, np.float32) * mask[None, :]
+        W = np.clip(W - lr * g, lo[None, :], hi[None, :]).astype(np.float32)
+        rec = {"step": step, "tau": round(tau, 6),
+               "surrogate_mean": float(np.mean(np.asarray(obj_s))),
+               "grad_norm": float(np.linalg.norm(g) / max(batch, 1))}
+        if (step + 1) % eval_every == 0 or step == steps - 1:
+            scores, rows = _mean_scores(ofn, sims, W, rps, scenarios,
+                                        seeds, objective)
+            oracle_evals += batch
+            finite = np.isfinite(scores)
+            if finite.any():
+                k = int(np.nanargmin(scores) if minimize
+                        else np.nanargmax(scores))
+                if better(scores[k], best_score):
+                    best_score, best_w = float(scores[k]), W[k].copy()
+            rec["oracle_best"] = (float(np.nanmin(scores)) if minimize
+                                  else float(np.nanmax(scores)))
+        history.append(rec)
+        tau = max(tau * tau_decay, tau_min)
+
+    rps_t = rps._replace(tau=jnp.full_like(rps.tau, tau))
+    final_sur, _ = gfn(sims, PolicyParams(weights=jnp.asarray(W)), rps_t)
+    surrogate_evals += batch
+    return GradTuneResult(
+        weights=W, scores=scores, objective=objective, minimize=minimize,
+        rows=rows, scenarios=scenarios, seeds=tuple(seeds),
+        wall_s=round(time.time() - t_start, 2), steady_s=None,
+        compile_cache_misses=gfn._cache_size() + ofn._cache_size(),
+        n_devices=gfn.n_devices, method="grad",
+        surrogate=np.asarray(final_sur), surrogate_name=surrogate,
+        best_oracle=best_score, best_oracle_weights=best_w,
+        history=history, surrogate_evals=surrogate_evals,
+        oracle_evals=oracle_evals)
+
+
+def run_tune_cem(steps: int = 6, batch: int = 16, elite_frac: float = 0.25,
+                 init_std_frac: float = 0.3, seeds: Sequence[int] = (0,),
+                 scenarios: Sequence[ScenarioSpec] | None = None,
+                 cfg: SimConfig | None = None, n_hosts: int = 20,
+                 n_spine: int = 2, n_leaf: int = 4,
+                 objective: str = "avg_runtime", base: str = "netaware",
+                 space: dict[str, tuple[float, float]] | None = None,
+                 seed: int = 0,
+                 plan: ExecPlan | None = None) -> GradTuneResult:
+    """Cross-entropy search on the HARD oracle (no surrogate): iterate
+    sample -> score -> refit a diagonal Gaussian to the elite fraction.
+    Every population re-enters the one compiled sweep (same shapes), the
+    incumbent is re-injected as row 0 each round, and the best-ever
+    oracle candidate is tracked — the derivative-free arm the grad mode
+    is compared against."""
+    cfg = cfg or SimConfig()
+    plan = ExecPlan() if plan is None else plan
+    cfg = plan.apply_to_config(cfg)
+    scenarios = list(scenarios if scenarios is not None
+                     else _default_scenarios())
+    space = DEFAULT_SPACE if space is None else space
+    idx, _, lo, hi = _space_bounds(space)
+    minimize = objective not in MAXIMIZE
+    better = (lambda a, b: a < b) if minimize else (lambda a, b: a > b)
+
+    base_w = np.asarray(get_policy(base).weights, np.float32)
+    net_spec, sims, rps = build_scenarios(scenarios, cfg, n_hosts=n_hosts,
+                                          n_spine=n_spine, n_leaf=n_leaf,
+                                          seeds=seeds)
+    ofn = _make_oracle(cfg, net_spec, cfg.horizon, plan)
+    rng = np.random.default_rng(seed)
+    mu = base_w[idx].astype(np.float64)
+    sd = (hi[idx] - lo[idx]).astype(np.float64) * init_std_frac
+    n_elite = max(1, int(round(batch * elite_frac)))
+
+    t_start = time.time()
+    history: list[dict[str, Any]] = []
+    oracle_evals = 0
+    best_score, best_w = float("inf") if minimize else -float("inf"), base_w
+    W = scores = rows = None
+    for step in range(steps):
+        W = np.tile(base_w, (batch, 1))
+        W[1:, idx] = np.clip(rng.normal(mu, sd, (batch - 1, idx.size)),
+                             lo[idx], hi[idx])
+        W = W.astype(np.float32)
+        scores, rows = _mean_scores(ofn, sims, W, rps, scenarios, seeds,
+                                    objective)
+        oracle_evals += batch
+        order = np.argsort(scores if minimize else -scores)
+        elite = W[order[:n_elite]][:, idx].astype(np.float64)
+        mu = elite.mean(axis=0)
+        sd = np.maximum(elite.std(axis=0), 1e-3)
+        k = int(order[0])
+        if np.isfinite(scores[k]) and better(scores[k], best_score):
+            best_score, best_w = float(scores[k]), W[k].copy()
+        history.append({"step": step,
+                        "oracle_best": (float(np.nanmin(scores)) if minimize
+                                        else float(np.nanmax(scores))),
+                        "mu": [round(float(v), 4) for v in mu],
+                        "sd": [round(float(v), 4) for v in sd]})
+    return GradTuneResult(
+        weights=W, scores=scores, objective=objective, minimize=minimize,
+        rows=rows, scenarios=scenarios, seeds=tuple(seeds),
+        wall_s=round(time.time() - t_start, 2), steady_s=None,
+        compile_cache_misses=ofn._cache_size(), n_devices=ofn.n_devices,
+        method="cem", surrogate=None, surrogate_name=None,
+        best_oracle=best_score, best_oracle_weights=best_w,
+        history=history, surrogate_evals=0, oracle_evals=oracle_evals)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--method", default="random",
+                    choices=["random", "grid", "grad", "cem"],
+                    help="random/grid = one-shot population ranking; "
+                         "grad = descend the soft-placement surrogate "
+                         "with hard-oracle re-scoring; cem = "
+                         "cross-entropy on the hard oracle")
     ap.add_argument("--samples", type=int, default=16)
     ap.add_argument("--seeds", type=int, default=1,
                     help="number of seeds (0..n-1) per cell")
@@ -233,47 +489,86 @@ def main() -> None:
     ap.add_argument("--base", default="netaware",
                     help="registered policy the search perturbs")
     ap.add_argument("--grid", action="store_true",
-                    help="coordinate-profile grid instead of random draws")
+                    help="(random/grid) coordinate-profile grid instead of "
+                         "random draws")
     ap.add_argument("--seed", type=int, default=0, help="search RNG seed")
-    ap.add_argument("--chunk", type=int, default=None,
-                    help="stream the horizon in chunks with online "
-                         "summaries (O(state) memory)")
-    ap.add_argument("--slab", type=int, default=None,
-                    help="with --chunk: population slab size in cells")
-    ap.add_argument("--no-overlap", action="store_true",
-                    help="with --chunk: synchronous slab gathers")
-    ap.add_argument("--procs", type=int, default=1,
-                    help="with --chunk: run the search across this many "
-                         "jax.distributed processes (repro.launch.dist)")
-    ap.add_argument("--devices-per-proc", type=int, default=1,
-                    help="forced CPU devices per process (--procs)")
+    g = ap.add_argument_group("grad / cem")
+    g.add_argument("--steps", type=int, default=None,
+                   help="optimizer steps (default: 24 grad, 6 cem)")
+    g.add_argument("--batch", type=int, default=None,
+                   help="candidates per step (default: 8 grad, 16 cem)")
+    g.add_argument("--lr", type=float, default=0.1,
+                   help="(grad) gradient-descent step size")
+    g.add_argument("--tau0", type=float, default=1.0,
+                   help="(grad) initial softmax temperature")
+    g.add_argument("--tau-decay", type=float, default=0.85,
+                   help="(grad) per-step temperature decay factor")
+    g.add_argument("--tau-min", type=float, default=0.05,
+                   help="(grad) temperature floor")
+    g.add_argument("--eval-every", type=int, default=6,
+                   help="(grad) hard-oracle re-scoring period in steps")
+    g.add_argument("--surrogate", default="soft_blend",
+                   choices=sorted(stats.SOFT_OBJECTIVES),
+                   help="(grad) differentiable objective to descend")
+    g.add_argument("--elite-frac", type=float, default=0.25,
+                   help="(cem) elite fraction per refit")
+    add_exec_args(ap, dist=True)
     ap.add_argument("--top", type=int, default=10)
     ap.add_argument("--out", default=None,
                     help="write best weights + ranked samples as JSON")
     args = ap.parse_args()
 
     cfg = SimConfig(horizon=args.horizon)
+    plan = ExecPlan.from_args(args)
     n_leaf = max(4, args.hosts // 5)
-    res = run_tune(n_samples=args.samples, seeds=range(args.seeds),
-                   cfg=cfg, n_hosts=args.hosts,
-                   n_spine=max(2, n_leaf // 4), n_leaf=n_leaf,
-                   objective=args.objective, base=args.base,
-                   grid=args.grid, seed=args.seed, chunk=args.chunk,
-                   slab=args.slab, overlap=not args.no_overlap,
-                   procs=args.procs, devices_per_proc=args.devices_per_proc)
-    cells = args.samples * len(res.scenarios) * len(res.seeds)
-    print(f"# {cells} cells ({args.samples} weight samples x "
+    common = dict(seeds=range(args.seeds), cfg=cfg, n_hosts=args.hosts,
+                  n_spine=max(2, n_leaf // 4), n_leaf=n_leaf,
+                  objective=args.objective, base=args.base, seed=args.seed,
+                  plan=plan)
+    if args.method == "grad":
+        res = run_tune_grad(steps=args.steps or 24, batch=args.batch or 8,
+                            lr=args.lr, tau0=args.tau0,
+                            tau_decay=args.tau_decay, tau_min=args.tau_min,
+                            eval_every=args.eval_every,
+                            surrogate=args.surrogate, **common)
+    elif args.method == "cem":
+        res = run_tune_cem(steps=args.steps or 6, batch=args.batch or 16,
+                           elite_frac=args.elite_frac, **common)
+    else:
+        res = run_tune(n_samples=args.samples,
+                       grid=(args.method == "grid" or args.grid), **common)
+
+    n_cand = res.weights.shape[0]
+    cells = n_cand * len(res.scenarios) * len(res.seeds)
+    print(f"# {args.method}: {cells} cells/eval ({n_cand} candidates x "
           f"{len(res.scenarios)} scenarios x {len(res.seeds)} seeds) in "
           f"{res.wall_s}s, {res.compile_cache_misses} compilation(s), "
           f"{res.n_devices} device(s)")
+    if isinstance(res, GradTuneResult):
+        arrow = "min" if res.minimize else "max"
+        print(f"# best oracle {res.objective} ({arrow}): "
+              f"{res.best_oracle:.4f} after {res.oracle_evals} oracle + "
+              f"{res.surrogate_evals} surrogate evals")
+        if res.method == "grad" and res.history:
+            taus = [h["tau"] for h in res.history]
+            print(f"# tau annealed {taus[0]:g} -> {taus[-1]:g} "
+                  f"({res.surrogate_name} surrogate)")
     print(res.table(args.top))
     if args.out:
         from repro.core.report import json_clean
-        out = {"objective": res.objective,
+        out = {"method": args.method,
+               "objective": res.objective,
                "best_sample": res.best,
                "best_weights": res.best_weights(),
                "scores": json_clean(list(map(float, res.scores))),
                "weights": [list(map(float, w)) for w in res.weights]}
+        if isinstance(res, GradTuneResult):
+            out["best_oracle"] = res.best_oracle
+            if res.best_oracle_weights is not None:
+                out["best_oracle_weights"] = dict(
+                    zip(WEIGHT_NAMES,
+                        map(float, res.best_oracle_weights)))
+            out["history"] = res.history
         with open(args.out, "w") as f:
             json.dump(json_clean(out), f, indent=1)
         print(f"# wrote {args.out}")

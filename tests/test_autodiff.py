@@ -1,0 +1,283 @@
+"""Differentiable soft placement (SimConfig.soft_placement).
+
+The contract under test, in order of importance:
+  * soft placement NEVER changes the simulation — final state and every
+    hard metric are bit-for-bit identical to ``soft_placement=False``
+    for all six built-in policies (the surrogate only ADDS observables);
+  * ``jax.grad`` through the compiled sweep matches central differences;
+  * the chunked (streamed) gradient equals the stacked gradient in <= 2
+    compilations — every state-mediated path crosses an integer
+    decision, so no cross-chunk adjoint exists to lose;
+  * as ``tau -> 0`` the softmax relaxation anneals to the hard argmin;
+  * at equal hard-oracle budget, gradient tuning beats random search.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (SimConfig, build_paper_hosts, build_paper_network,
+                        get_policy, init_sim, list_policies, paper_workload,
+                        run_sim, stats)
+from repro.core.scenario import ScenarioSpec, build_scenarios
+from repro.core.scheduling import soft_assign, weight_index
+from repro.core.types import PolicyParams
+from repro.launch.sweep import make_grad_fn, make_sweep_fn
+from repro.launch.tune import run_tune, run_tune_grad
+
+
+def small_cfg(**kw):
+    kw.setdefault("n_jobs", 10)
+    kw.setdefault("n_tasks", 40)
+    kw.setdefault("n_containers", 40)
+    kw.setdefault("horizon", 30)
+    return SimConfig(arrival_window=10.0, placements_per_tick=16,
+                     migrations_per_tick=2, **kw)
+
+
+SOFT_FIELDS = ("soft_comm", "soft_util", "soft_n", "soft_mig", "soft_mig_n")
+
+
+# --------------------------------------------------------------------------
+# soft_placement=False must be the PR-8 simulator, and soft_placement=True
+# must not perturb it
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", list_policies())
+def test_soft_flag_never_changes_dynamics(policy):
+    """Hard run vs soft run: identical final state, identical hard
+    metrics, for every built-in policy — the relaxation is observability,
+    not dynamics."""
+    cfg = small_cfg()
+    soft = dataclasses.replace(cfg, soft_placement=True)
+    hosts = build_paper_hosts()
+    spec, net = build_paper_network(cfg)
+    sim0 = init_sim(hosts, paper_workload(cfg, seed=3), net, seed=3)
+    pol = get_policy(policy)
+    f_hard, m_hard = run_sim(sim0, cfg, pol, spec.n_hosts, spec.n_nodes,
+                             cfg.horizon)
+    f_soft, m_soft = run_sim(sim0, soft, pol, spec.n_hosts, spec.n_nodes,
+                             cfg.horizon)
+    for a, b in zip(jax.tree.leaves(f_hard), jax.tree.leaves(f_soft)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for name in m_hard._fields:
+        if name in SOFT_FIELDS:
+            continue
+        np.testing.assert_array_equal(np.asarray(getattr(m_hard, name)),
+                                      np.asarray(getattr(m_soft, name)),
+                                      err_msg=name)
+    # and the soft run actually measured something
+    assert float(np.asarray(m_soft.soft_n).sum()) > 0
+    assert float(np.asarray(m_hard.soft_n).sum()) == 0.0
+
+
+def test_tau_never_changes_dynamics():
+    """tau only scales the surrogate softmax: wildly different
+    temperatures produce bit-identical states (else annealing would be
+    re-running a different simulator every step)."""
+    cfg = small_cfg(soft_placement=True)
+    hosts = build_paper_hosts()
+    spec, net = build_paper_network(cfg)
+    sim0 = init_sim(hosts, paper_workload(cfg, seed=5), net, seed=5)
+    pol = get_policy("netaware")
+    outs = []
+    for tau in (0.05, 5.0):
+        params = cfg.run_params()._replace(tau=jnp.float32(tau))
+        f, m = run_sim(sim0, cfg, pol, spec.n_hosts, spec.n_nodes,
+                       cfg.horizon, params=params)
+        outs.append((f, m))
+    (f0, m0), (f1, m1) = outs
+    for a, b in zip(jax.tree.leaves(f0), jax.tree.leaves(f1)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the surrogate DID move with tau (it is tau's only consumer)
+    assert not np.allclose(np.asarray(m0.soft_comm).sum(),
+                           np.asarray(m1.soft_comm).sum())
+
+
+# --------------------------------------------------------------------------
+# the relaxation itself
+# --------------------------------------------------------------------------
+
+def test_soft_assign_anneals_to_hard_argmin():
+    row = jnp.asarray([3.0, 1.0, 2.0, 0.5], jnp.float32)
+    feas = jnp.asarray([True, True, True, False])
+    one_hot = soft_assign(row, feas, jnp.float32(1e-4))
+    np.testing.assert_allclose(np.asarray(one_hot), [0.0, 1.0, 0.0, 0.0],
+                               atol=1e-6)
+    warm = np.asarray(soft_assign(row, feas, jnp.float32(10.0)))
+    assert warm[3] == 0.0                      # infeasible stays exact 0
+    assert np.all(warm[:3] > 0.1)              # near-uniform when hot
+    np.testing.assert_allclose(warm.sum(), 1.0, rtol=1e-6)
+    # all-infeasible: all-zero, not uniform, and NaN-free under grad
+    none = soft_assign(row, jnp.zeros((4,), bool), jnp.float32(1.0))
+    np.testing.assert_array_equal(np.asarray(none), 0.0)
+    g = jax.grad(lambda r: soft_assign(r, feas, jnp.float32(0.5)).sum())(row)
+    assert np.isfinite(np.asarray(g)).all()
+
+
+def test_annealing_converges_run_level():
+    """Whole-run surrogate sums converge as tau -> 0 (successive halvings
+    approach a fixed point) and that limit is NOT the hot-tau value."""
+    cfg = small_cfg(soft_placement=True)
+    hosts = build_paper_hosts()
+    spec, net = build_paper_network(cfg)
+    sim0 = init_sim(hosts, paper_workload(cfg, seed=5), net, seed=5)
+    pol = get_policy("netaware")
+
+    def surrogate(tau):
+        params = cfg.run_params()._replace(tau=jnp.float32(tau))
+        _, m = run_sim(sim0, cfg, pol, spec.n_hosts, spec.n_nodes,
+                       cfg.horizon, params=params)
+        return float(np.asarray(m.soft_comm).sum())
+
+    v = {tau: surrogate(tau) for tau in (2.0, 1e-2, 1e-4, 2e-5)}
+    np.testing.assert_allclose(v[1e-4], v[2e-5], rtol=1e-4)   # converged
+    lim = v[2e-5]
+    assert abs(v[1e-2] - lim) <= abs(v[2.0] - lim)            # monotone-ish
+    assert abs(v[2.0] - lim) > 1e-3            # annealing actually moved
+
+
+# --------------------------------------------------------------------------
+# jax.grad through the compiled sweep
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def grad_setup():
+    cfg = small_cfg(soft_placement=True)
+    scen = [ScenarioSpec("baseline"), ScenarioSpec("slow_net", bw=200.0)]
+    net_spec, sims, rps = build_scenarios(scen, cfg, seeds=(0,))
+    return cfg, net_spec, sims, rps
+
+
+def test_grad_matches_central_differences(grad_setup):
+    """Directional derivative vs central differences THROUGH the compiled
+    sweep: batch [w, w+eps*d, w-eps*d] on the policy axis, so one call
+    yields the gradient and both FD probes from the same executable.
+
+    The surrogate is piecewise-smooth: the hard argmin trajectory is
+    locally constant in w, and FD is only valid on a piece.  Two
+    precautions make the probe land on one: the base point adds random
+    offsets to the searched row weights (the built-ins' clean weights sit
+    ON tie boundaries — identical idle hosts score exactly equal, and
+    ANY perturbation flips the tie-break), and eps shrinks until all
+    three runs produce the SAME final state (no decision flipped).  The
+    direction stays off util/cross_leaf: those feed the continuous
+    ``net.comm_cost`` refresh, so final states can never be bit-equal
+    along them (the chunked-grad test covers that channel)."""
+    cfg, net_spec, sims, rps = grad_setup
+    gfn = make_grad_fn(cfg, net_spec.n_hosts, net_spec.n_nodes, cfg.horizon,
+                       objective="soft_blend")
+    swp = make_sweep_fn(cfg, net_spec.n_hosts, net_spec.n_nodes,
+                        cfg.horizon)
+    dims = [weight_index(n) for n in
+            ("row_comm", "row_coloc", "row_worst_fit", "row_cross_leaf")]
+    rng = np.random.default_rng(11)
+    w = np.asarray(get_policy("netaware").weights, np.float32).copy()
+    w[dims] += rng.uniform(0.05, 0.4, len(dims)).astype(np.float32)
+    d = np.zeros_like(w)
+    d[dims] = rng.normal(size=len(dims)).astype(np.float32)
+    d /= np.linalg.norm(d)
+
+    def same_trajectory(W):
+        finals, _ = swp(sims, PolicyParams(weights=jnp.asarray(W)), rps)
+        return all((np.asarray(x)[0] == np.asarray(x)[1]).all()
+                   and (np.asarray(x)[0] == np.asarray(x)[2]).all()
+                   for x in jax.tree.leaves(finals))
+
+    for eps in (2e-2, 1e-2, 5e-3, 2e-3, 1e-3):
+        W = np.stack([w, w + eps * d, w - eps * d]).astype(np.float32)
+        if same_trajectory(W):
+            break
+    else:
+        pytest.fail("no flip-free eps found for the FD probe")
+    vals, grads = gfn(sims, PolicyParams(weights=jnp.asarray(W)), rps)
+    vals = np.asarray(vals, np.float64)
+    fd = (vals[1] - vals[2]) / (2 * eps)
+    analytic = float(np.asarray(grads)[0] @ d)
+    assert abs(analytic) > 1e-6                # a real, nonzero derivative
+    np.testing.assert_allclose(analytic, fd, rtol=1e-2, atol=1e-5)
+    assert gfn._cache_size() == 1
+
+
+def test_chunked_grad_matches_stacked(grad_setup):
+    """Streaming the horizon must not change the gradient: every
+    decision-mediated state path crosses an integer argmin and carries
+    zero cotangent, so the per-chunk gradients sum to the stacked one.
+
+    The ONE exception (docs/autodiff.md): the periodic delay refresh
+    bakes weights[util]/weights[cross_leaf] into the persistent
+    ``net.comm_cost`` cache, a continuous path the chunked gradient
+    truncates at chunk boundaries (truncated-BPTT semantics).  So: a
+    boundary after the admit window is exact on ALL components; a
+    boundary inside it is exact on every component EXCEPT those two.
+    Values are exact either way, in <= 2 compilations (main + tail)."""
+    cfg, net_spec, sims, rps = grad_setup
+    W = np.stack([np.asarray(get_policy("netaware").weights),
+                  np.asarray(get_policy("jobgroup").weights)])
+    pols = PolicyParams(weights=jnp.asarray(W))
+    gfn_s = make_grad_fn(cfg, net_spec.n_hosts, net_spec.n_nodes,
+                         cfg.horizon, objective="soft_blend")
+    v_s, g_s = gfn_s(sims, pols, rps)
+    g_s = np.asarray(g_s)
+
+    # boundaries at 10/20 — past the 10-tick admit window: exact
+    gfn_c = make_grad_fn(cfg, net_spec.n_hosts, net_spec.n_nodes,
+                         cfg.horizon, objective="soft_blend", chunk=10)
+    v_c, g_c = gfn_c(sims, pols, rps)
+    np.testing.assert_allclose(np.asarray(v_s), np.asarray(v_c), rtol=1e-5)
+    np.testing.assert_allclose(g_s, np.asarray(g_c), rtol=1e-4, atol=1e-7)
+    assert gfn_c._cache_size() == 1            # 30 = 3 x 10, no tail
+
+    # boundaries at 8/16/24 — mid-window: truncated ONLY on the two
+    # comm-cost cache weights, exact everywhere else + a ragged tail
+    gfn_t = make_grad_fn(cfg, net_spec.n_hosts, net_spec.n_nodes,
+                         cfg.horizon, objective="soft_blend", chunk=8)
+    v_t, g_t = gfn_t(sims, pols, rps)
+    np.testing.assert_allclose(np.asarray(v_s), np.asarray(v_t), rtol=1e-5)
+    cache_dims = [weight_index("util"), weight_index("cross_leaf")]
+    exact = np.ones(g_s.shape[1], bool)
+    exact[cache_dims] = False
+    np.testing.assert_allclose(g_s[:, exact], np.asarray(g_t)[:, exact],
+                               rtol=1e-4, atol=1e-7)
+    assert gfn_t._cache_size() <= 2
+    assert np.isfinite(np.asarray(g_t)).all()
+
+
+def test_grad_fn_rejects_hard_config_and_unknown_objective(grad_setup):
+    cfg, net_spec, *_ = grad_setup
+    hard = dataclasses.replace(cfg, soft_placement=False)
+    with pytest.raises(ValueError, match="soft_placement"):
+        make_grad_fn(hard, net_spec.n_hosts, net_spec.n_nodes, cfg.horizon)
+    with pytest.raises(KeyError):
+        make_grad_fn(cfg, net_spec.n_hosts, net_spec.n_nodes, cfg.horizon,
+                     objective="avg_runtime")
+    assert set(stats.SOFT_OBJECTIVES) >= {"soft_blend", "soft_comm",
+                                          "soft_util"}
+
+
+# --------------------------------------------------------------------------
+# the point of it all: gradient tuning beats random search
+# --------------------------------------------------------------------------
+
+def test_grad_tune_beats_random_at_equal_oracle_budget():
+    """slow_net avg_runtime, 12 hard-oracle evaluations each: descending
+    the soft surrogate finds strictly better weights than 12 uniform
+    draws (both populations include the netaware incumbent, so neither
+    can rank below it)."""
+    cfg = small_cfg()
+    scen = [ScenarioSpec("slow_net", bw=200.0)]
+    g = run_tune_grad(steps=6, batch=4, eval_every=3, lr=0.3, cfg=cfg,
+                      scenarios=scen, seeds=(0,), objective="avg_runtime",
+                      seed=0)
+    assert g.oracle_evals == 12
+    r = run_tune(n_samples=g.oracle_evals, cfg=cfg, scenarios=scen,
+                 seeds=(0,), objective="avg_runtime", seed=0)
+    assert np.isfinite(g.best_oracle)
+    assert g.best_oracle < float(r.scores[r.best])
+    # surrogate + trajectory reporting came along
+    assert g.surrogate is not None and g.surrogate.shape == (4,)
+    assert [h["tau"] for h in g.history] == sorted(
+        [h["tau"] for h in g.history], reverse=True)
+    assert g.best_oracle_weights is not None

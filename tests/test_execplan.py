@@ -1,0 +1,239 @@
+"""ExecPlan API: one execution-options object, uniform across entry
+points, with exactly one deprecation cycle for the old bare kwargs and
+unchanged jit-cache-key semantics (the plan is resolved at the call
+boundary — kernel selectors fold into the static SimConfig, tau and
+weights stay traced)."""
+import argparse
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SimConfig, get_policy, run_sim
+from repro.core.engine import resolve_plan
+from repro.core.scenario import ScenarioSpec, build_scenario, build_scenarios
+from repro.core.types import ExecPlan, PolicyParams
+from repro.launch.execargs import add_exec_args
+from repro.launch import sweep as sweep_mod
+from repro.launch.dist import _resolve_dist_plan
+from repro.launch.sweep import make_sweep_fn, run_sweep
+
+
+def small_cfg(**kw):
+    base = dict(n_jobs=10, n_tasks=40, n_containers=40, horizon=24,
+                arrival_window=10.0, placements_per_tick=16,
+                migrations_per_tick=2)
+    base.update(kw)
+    return SimConfig(**base)
+
+
+# --------------------------------------------------------------------------
+# the dataclass itself
+# --------------------------------------------------------------------------
+
+def test_plan_validation_and_defaults():
+    p = ExecPlan()
+    assert p.chunk is None and p.slab is None and p.devices is None
+    assert p.overlap and p.procs == 1 and p.devices_per_proc == 1
+    with pytest.raises(ValueError):
+        ExecPlan(chunk=0)
+    with pytest.raises(ValueError):
+        ExecPlan(slab=-1)
+    with pytest.raises(ValueError):
+        ExecPlan(delay_kernel="pallas")
+    # devices: a count, a sequence (coerced to tuple for hashing), or None
+    assert ExecPlan(devices=2).devices == 2
+    assert isinstance(ExecPlan(devices=[0, 1]).devices, tuple)
+
+
+def test_apply_to_config_folds_kernel_selectors_only():
+    cfg = small_cfg()
+    out = ExecPlan(delay_kernel="off", waterfill_kernel="on") \
+        .apply_to_config(cfg)
+    assert out.delay_kernel == "off" and out.waterfill_kernel == "on"
+    assert out.horizon == cfg.horizon
+    # None selectors keep the caller's config verbatim (same hashable key)
+    assert ExecPlan(chunk=8).apply_to_config(cfg) == cfg
+
+
+# --------------------------------------------------------------------------
+# resolve_plan: one deprecation cycle, loud conflicts
+# --------------------------------------------------------------------------
+
+def test_resolve_plan_deprecation_cycle():
+    cfg = small_cfg()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        plan, cfg2 = resolve_plan(None, cfg, chunk=8, slab=None)
+    assert plan.chunk == 8
+    assert [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    # plan AND legacy kwarg together: never silently prefer one
+    with pytest.raises(TypeError, match="not both"):
+        resolve_plan(ExecPlan(chunk=8), cfg, chunk=8)
+    # plan-only and kwargless paths stay silent
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        p1, _ = resolve_plan(ExecPlan(chunk=8), cfg, chunk=None)
+        p0, _ = resolve_plan(None, cfg, chunk=None)
+    assert p1.chunk == 8 and p0 == ExecPlan()
+
+
+def test_run_sim_plan_equals_legacy_kwarg():
+    cfg = small_cfg()
+    spec, net = __import__("repro.core", fromlist=["build_paper_network"]) \
+        .build_paper_network(cfg, n_hosts=8, n_leaf=4)
+    from repro.core import build_paper_hosts, init_sim, paper_workload
+    from repro.core import scaled_hosts
+    sim0 = init_sim(scaled_hosts(8, 4), paper_workload(cfg, seed=0), net,
+                    seed=0)
+    pol = get_policy("firstfit")
+    with pytest.deprecated_call():
+        f_old, m_old = run_sim(sim0, cfg, pol, spec.n_hosts, spec.n_nodes,
+                               cfg.horizon, chunk=8)
+    f_new, m_new = run_sim(sim0, cfg, pol, spec.n_hosts, spec.n_nodes,
+                           cfg.horizon, plan=ExecPlan(chunk=8))
+    for a, b in zip(jax.tree.leaves(f_old), jax.tree.leaves(f_new)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(m_old), jax.tree.leaves(m_new)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_run_sweep_plan_equals_legacy_kwarg():
+    cfg = small_cfg()
+    with pytest.deprecated_call():
+        old = run_sweep(["firstfit", "round"], seeds=(0,),
+                        scenarios=[ScenarioSpec("baseline")], cfg=cfg,
+                        n_hosts=8, n_leaf=4, chunk=8)
+    new = run_sweep(["firstfit", "round"], seeds=(0,),
+                    scenarios=[ScenarioSpec("baseline")], cfg=cfg,
+                    n_hosts=8, n_leaf=4, plan=ExecPlan(chunk=8))
+    old_rows, new_rows = old.summaries(), new.summaries()
+    assert ([r["policy"] for r in old_rows]
+            == [r["policy"] for r in new_rows])
+    for ro, rn in zip(old_rows, new_rows):
+        for k, v in ro.items():
+            if isinstance(v, float) and np.isnan(v):
+                assert np.isnan(rn[k]), k
+            elif isinstance(v, (int, float)):
+                assert rn[k] == pytest.approx(v, rel=1e-6), k
+
+
+def test_dist_plan_keeps_historical_default():
+    """No plan + no kwargs must still mean the historical 2-process
+    launch, NOT ExecPlan's in-process procs=1 default."""
+    cfg = small_cfg()
+    plan, _ = _resolve_dist_plan(None, cfg)
+    assert plan.procs == 2 and plan.devices_per_proc == 1
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        plan2, _ = _resolve_dist_plan(None, cfg, num_procs=3, chunk=6)
+    assert plan2.procs == 3 and plan2.chunk == 6
+    assert [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    with pytest.raises(TypeError):
+        _resolve_dist_plan(ExecPlan(), cfg, num_procs=3)
+    # the dist fabric has no stacked path: a plan without chunk is caught
+    # at make_dist_fn time (run_tune/run_dist_sweep supply a default)
+    from repro.launch.dist import make_dist_fn
+    with pytest.raises(ValueError, match="chunk"):
+        make_dist_fn(cfg, [ScenarioSpec("baseline")], (0,),
+                     policies=["firstfit"], plan=ExecPlan(procs=2))
+
+
+# --------------------------------------------------------------------------
+# jit-cache-key semantics
+# --------------------------------------------------------------------------
+
+def test_traced_knobs_never_recompile_static_knobs_do():
+    """tau / bw / weights ride RunParams or PolicyParams (traced: zero
+    recompiles); kernel selectors fold into SimConfig (static: a new
+    executable) — the plan never becomes a jit argument itself."""
+    cfg = small_cfg(soft_placement=True)
+    net_spec, sims, rps = build_scenarios([ScenarioSpec("baseline")], cfg,
+                                          n_hosts=8, n_spine=2, n_leaf=4,
+                                          seeds=(0,))
+    fn = make_sweep_fn(cfg, net_spec.n_hosts, net_spec.n_nodes, cfg.horizon)
+    pol = PolicyParams(weights=jnp.asarray(
+        np.asarray(get_policy("netaware").weights)[None, :]))
+    fn(sims, pol, rps)
+    assert fn._cache_size() == 1
+    fn(sims, pol, rps._replace(tau=jnp.full_like(rps.tau, 0.25)))
+    fn(sims, pol, rps._replace(bw_mbps=jnp.full_like(rps.bw_mbps, 200.0)))
+    w2 = jax.tree.map(lambda x: x * 1.5, pol)
+    fn(sims, w2, rps)
+    assert fn._cache_size() == 1               # all traced: one executable
+    # a kernel selector is a DIFFERENT static config -> different program
+    cfg_off = ExecPlan(waterfill_kernel="off").apply_to_config(cfg)
+    assert hash(cfg_off) != hash(cfg)
+    assert dataclasses.asdict(cfg_off) != dataclasses.asdict(cfg)
+
+
+def test_plan_is_hashable_and_frozen():
+    p = ExecPlan(chunk=8, devices=(0, 1))
+    assert hash(p) == hash(ExecPlan(chunk=8, devices=(0, 1)))
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        p.chunk = 16
+
+
+# --------------------------------------------------------------------------
+# the shared CLI surface
+# --------------------------------------------------------------------------
+
+def test_add_exec_args_roundtrip():
+    ap = argparse.ArgumentParser()
+    add_exec_args(ap, dist=True)
+    ns = ap.parse_args(["--chunk", "16", "--slab", "64", "--devices", "2",
+                        "--no-overlap", "--delay-kernel", "off",
+                        "--waterfill-kernel", "on", "--procs", "3",
+                        "--devices-per-proc", "2"])
+    plan = ExecPlan.from_args(ns)
+    assert plan == ExecPlan(chunk=16, slab=64, devices=2, overlap=False,
+                            delay_kernel="off", waterfill_kernel="on",
+                            procs=3, devices_per_proc=2)
+    # unset flags mean "keep defaults", including the kernel selectors
+    # (None, NOT 'auto' — they must not clobber a caller-built config)
+    empty = ExecPlan.from_args(ap.parse_args([]))
+    assert empty == ExecPlan()
+    assert empty.delay_kernel is None
+
+
+def test_every_launcher_spells_exec_flags_identically():
+    """sim/sweep/tune accept the same --chunk/--delay-kernel spellings;
+    flags that make no sense for a launcher are absent, so argparse
+    rejects them loudly instead of ignoring them."""
+    sim_ap = argparse.ArgumentParser()
+    add_exec_args(sim_ap, slab=False, devices=False, overlap=False)
+    full_ap = argparse.ArgumentParser()
+    add_exec_args(full_ap, dist=True)
+    for ap in (sim_ap, full_ap):
+        ns = ap.parse_args(["--chunk", "8", "--delay-kernel", "auto"])
+        assert ExecPlan.from_args(ns).chunk == 8
+    with pytest.raises(SystemExit):
+        sim_ap.parse_args(["--slab", "8"])     # no grid -> no slab
+    with pytest.raises(SystemExit):
+        sim_ap.parse_args(["--procs", "2"])    # no dist either
+    # the real sweep parser is built from the same helper
+    ns = sweep_mod.build_parser().parse_args(
+        ["--chunk", "8", "--slab", "4", "--waterfill-kernel", "off"])
+    plan = ExecPlan.from_args(ns)
+    assert (plan.chunk, plan.slab, plan.waterfill_kernel) == (8, 4, "off")
+
+
+def test_grid_spec_carries_plan_fields(tmp_path):
+    """The dist launcher's GridSpec JSON contract is built from the plan:
+    chunk/slab/overlap/devices_per_proc land in the spec the workers
+    parse (schema unchanged from the pre-plan fabric)."""
+    from repro.launch.dist import GridSpec
+    cfg = small_cfg()
+    spec = GridSpec.build(cfg=cfg, scenarios=[ScenarioSpec("baseline")],
+                          seeds=(0,), policies=["firstfit"], n_hosts=8,
+                          n_spine=2, n_leaf=4, chunk=6, slab=2,
+                          overlap=False, devices_per_proc=2)
+    path = tmp_path / "grid.json"
+    spec.save(str(path))
+    back = GridSpec.load(str(path))
+    assert back.chunk == 6 and back.slab == 2
+    assert back.overlap is False and back.devices_per_proc == 2
+    assert back.sim_config() == cfg

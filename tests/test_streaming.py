@@ -203,7 +203,12 @@ def test_online_fold_beats_naive_f32_at_long_horizons():
             n_migrating=zeros_i, new_arrivals=zeros_i, decisions=zeros_i,
             migrations=zeros_i, util_variance=jnp.zeros((), jnp.float32),
             mean_util=jnp.zeros((), jnp.float32), active_flows=zeros_i,
-            mean_flow_rate=jnp.zeros((), jnp.float32))
+            mean_flow_rate=jnp.zeros((), jnp.float32),
+            soft_comm=jnp.zeros((), jnp.float32),
+            soft_util=jnp.zeros((), jnp.float32),
+            soft_n=jnp.zeros((), jnp.float32),
+            soft_mig=jnp.zeros((), jnp.float32),
+            soft_mig_n=jnp.zeros((), jnp.float32))
         ms = jax.vmap(lambda v: m._replace(mean_util=v))(block)
         acc, _ = jax.lax.scan(body, acc, ms)
         return acc

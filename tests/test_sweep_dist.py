@@ -84,7 +84,10 @@ def _rand_summary(rng, shape):
         sum_active_flows=i(n * 2), sum_arrivals=i(n // 2),
         sum_decisions=i(n // 3), sum_migrations=i(n // 5),
         peak_running=i(n % 7), peak_deployed=i(n % 5),
-        peak_overloaded=i(n % 3), peak_inactive=i(n % 11))
+        peak_overloaded=i(n % 3), peak_inactive=i(n % 11),
+        sum_soft_comm=f(xs[0] * 2), sum_soft_util=f(xs[1] * 2),
+        sum_soft_n=f(n // 2), sum_soft_mig=f(xs[0] * (n > 0)),
+        sum_soft_mig_n=f(n // 4))
 
 
 def test_online_merge_disjoint_support_is_exact_identity():
@@ -122,8 +125,9 @@ def test_online_merge_overlapping_matches_direct_welford():
         return OnlineSummary(
             *(np.asarray(x, t) for x, t in zip(
                 [len(vals), 0, sum(vals), 0, mean, m2,
-                 0, 0, 0, 0, 0, 0, 0, 0],
-                [np.int64] + [np.float64] * 5 + [np.int64] * 8)))
+                 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0],
+                [np.int64] + [np.float64] * 5 + [np.int64] * 8
+                + [np.float64] * 5)))
     for split in (1, 13, 36):
         merged = stats.online_merge(welford(xs[:split]), welford(xs[split:]))
         ref = welford(xs)
