@@ -76,6 +76,7 @@ def headline(bench: dict) -> dict:
     tg = bench.get("tune_grad") or {}
     lh = bench.get("longhorizon") or {}
     sd = bench.get("sweep_dist") or {}
+    tl = bench.get("telescope") or {}
     return {
         "backend": bench.get("backend"),
         "device": bench.get("device"),
@@ -93,6 +94,8 @@ def headline(bench: dict) -> dict:
         "dist_overlap_ratio": sd.get("overlap_ratio"),
         "dist_parallel_ratio": sd.get("dist_parallel_ratio"),
         "dist_finals_match": sd.get("finals_match"),
+        "telescope_speedup": tl.get("telescope_speedup"),
+        "telescope_bitwise_equal": tl.get("finals_bitwise_equal"),
     }
 
 

@@ -71,6 +71,15 @@ must itself demonstrate the grad-beats-random claim, so a refresh cannot
 silently drop it.  The compile-bound cold wall stays out of the skew
 pack.
 
+ISSUE 10 (event-horizon telescoping) adds the ``telescope`` gate: the
+quick run's macro-tick arm must stay bit-identical to the per-tick path
+(``finals_bitwise_equal``, absolute — exactness is the feature), the
+within-run on/off ``telescope_speedup`` (machine-independent) must not
+fall more than ``tol`` below the committed one, and the committed
+baseline must itself demonstrate the >= 3x acceptance claim so a refresh
+cannot silently drop it.  The ON-side ticks/s joins the skew-normalized
+pack (same backend only).
+
 ``tol`` defaults to 0.30 — headroom for per-metric CI noise on top of the
 skew correction; the gate is one-sided, so getting faster never fails.
 Override with ``BENCH_TOL``.
@@ -356,6 +365,68 @@ def check(quick: dict, base: dict, tol: float) -> list[str]:
                         f"{got} < committed {ref} - {tol:.0%} — the "
                         f"overlapped slab driver stopped hiding gathers")
 
+    # -- telescoping: exactness + within-run speedup (ISSUE 10) -------------
+    # finals_bitwise_equal and telescope_speedup are computed inside ONE
+    # run on ONE machine (off vs on through the same vmapped driver), so
+    # both are machine-independent: equality gates absolutely, the
+    # speedup gates one-sided against the committed one, and the
+    # committed baseline must itself demonstrate the >= 3x acceptance.
+    # Only the ON-side ticks_per_s joins the skew-normalized pack.
+    tl = quick.get("telescope") or {}
+    ref_tl = base.get("telescope")
+    SPEEDUP_FLOOR = 3.0
+    if ref_tl is None:
+        failures.append(
+            "committed BENCH_engine.json has no 'telescope' entry; re-run "
+            "the full bench to record the macro-tick engine reference "
+            "(ISSUE 10)")
+    else:
+        if not ref_tl.get("finals_bitwise_equal"):
+            failures.append(
+                "committed telescope baseline does not demonstrate bitwise "
+                "equality of telescoped vs per-tick finals; the exactness "
+                "claim is ungated — re-run the full bench")
+        if (ref_tl.get("telescope_speedup") or 0) < SPEEDUP_FLOOR:
+            failures.append(
+                f"committed telescope baseline does not demonstrate the "
+                f">= {SPEEDUP_FLOOR}x acceptance speedup "
+                f"(telescope_speedup {ref_tl.get('telescope_speedup')}); "
+                f"the claim is ungated — re-run the full bench")
+        if not tl:
+            failures.append("no 'telescope' entry in the quick run")
+        else:
+            grid = ("n_hosts", "n_containers", "horizon", "seeds", "chunk",
+                    "delay_update_interval")
+            if any(tl.get(k) != ref_tl.get(k) for k in grid):
+                failures.append(
+                    f"telescope grid {[tl.get(k) for k in grid]} != "
+                    f"committed {[ref_tl.get(k) for k in grid]}")
+            else:
+                if not tl.get("finals_bitwise_equal"):
+                    failures.append(
+                        "regression: telescoped finals are no longer "
+                        "bit-identical to the per-tick path (telescope "
+                        "finals_bitwise_equal is false)")
+                got = tl.get("telescope_speedup")
+                ref = ref_tl.get("telescope_speedup")
+                if got and ref and got < ref * (1.0 - tol):
+                    failures.append(
+                        f"regression: within-run telescope_speedup {got} < "
+                        f"committed {ref} - {tol:.0%} — the macro-tick "
+                        f"engine stopped skipping quiescent ticks")
+                if backends_differ(tl, ref_tl):
+                    print(f"note: skipping cross-backend telescope "
+                          f"throughput comparison: quick ran on "
+                          f"{tl.get('backend')!r}, committed on "
+                          f"{ref_tl.get('backend')!r}")
+                elif tl.get("on_ticks_per_s", 0) > 0 \
+                        and ref_tl.get("on_ticks_per_s", 0) > 0:
+                    ratios.append((
+                        f"telescope on_ticks_per_s "
+                        f"({tl['on_ticks_per_s']} vs committed "
+                        f"{ref_tl['on_ticks_per_s']})",
+                        tl["on_ticks_per_s"] / ref_tl["on_ticks_per_s"]))
+
     # -- one-sided gate on skew-normalized ratios ---------------------------
     if ratios:
         skew = statistics.median(r for _, r in ratios)
@@ -432,6 +503,7 @@ def main() -> int:
     sw = quick.get("sweep", {})
     tn = quick.get("tune", {})
     tg = quick.get("tune_grad", {})
+    tl = quick.get("telescope", {})
     print(f"quick bench: {len(quick.get('points', []))} points, "
           f"sparse_speedup={quick.get('sparse_speedup')}, "
           f"sweep {sw.get('cells')} cells in {sw.get('sweep_steady_s')}s "
@@ -440,7 +512,9 @@ def main() -> int:
           f"tune {tn.get('cells')} cells in {tn.get('tune_cold_s')}s "
           f"({tn.get('compile_cache_misses')} compile), "
           f"tune_grad {tg.get('grad_vs_random')}x vs random / "
-          f"{tg.get('grad_vs_incumbent')}x vs incumbent")
+          f"{tg.get('grad_vs_incumbent')}x vs incumbent, "
+          f"telescope {tl.get('telescope_speedup')}x "
+          f"(bitwise equal: {tl.get('finals_bitwise_equal')})")
     if failures:
         for msg in failures:
             print(f"REGRESSION: {msg}", file=sys.stderr)

@@ -60,6 +60,15 @@ search.  Gated numbers (``grad_vs_random``, the 2-executable compile
 bill) are within-run and machine-independent; the cold wall stays out of
 the skew-normalized pack.
 
+ISSUE 10 (event-horizon telescoping) adds the ``telescope`` entry: the
+sparse-event long-horizon point (4h/16c, 30k ticks, 8 seeds, refresh
+interval 100) through the vmapped streaming driver with the macro-tick
+engine on vs off.  Gated numbers: ``finals_bitwise_equal`` (must be true
+— telescoping is an exact transform, docs/events.md), the within-run
+``telescope_speedup`` (the ISSUE 10 >= 3x acceptance), and the ON-side
+``ticks_per_s`` in the skew-normalized ratio pack.  Both modes measure
+the same grid, so quick CI runs gate like-for-like.
+
     PYTHONPATH=src python -m benchmarks.engine_bench [--quick]
 """
 from __future__ import annotations
@@ -97,6 +106,13 @@ TUNE_GRAD_SMOKE = dict(n_hosts=20, n_containers=40, horizon=30, steps=6,
 # gather actually cycle
 DIST_SMOKE = dict(n_hosts=20, n_containers=120, horizon=40, chunk=20,
                   slab=6)
+# the telescoping point (ISSUE 10): a tiny fleet at a LONG horizon with a
+# sparse event stream (1 placement/tick, refresh every 100 ticks) — the
+# regime the macro-tick engine exists for, quiescent tail included.  Both
+# modes measure the same grid; the off arm dominates the wall (~tens of
+# seconds of per-tick streaming on CPU).
+TELESCOPE_SMOKE = dict(n_hosts=4, n_containers=16, horizon=30_000, seeds=8,
+                       chunk=4096, interval=100)
 
 
 def _timed(f) -> float:
@@ -333,6 +349,95 @@ def measure_tune_grad_point(n_hosts: int, n_containers: int, horizon: int,
     }
 
 
+def measure_telescope_point(n_hosts: int, n_containers: int, horizon: int,
+                            seeds: int, chunk: int, interval: int) -> dict:
+    """Event-horizon telescoping (ISSUE 10): the vmapped streaming run at
+    a sparse-event long horizon, macro-tick engine off vs on.
+
+    The off arm is the PR 7 chunked per-tick path; the on arm is
+    ``engine.simulate_telescoped`` through the same driver
+    (``run_sim_vmapped(telescope=True)``).  Tracked numbers:
+
+    * ``finals_bitwise_equal`` — telescoping is an exact transform; the
+      final states must agree to the bit (hard gate);
+    * ``telescope_speedup``   — within-run off/on wall ratio (the >= 3x
+      ISSUE 10 acceptance; machine-independent);
+    * ``on_ticks_per_s``      — the ON-side throughput for the
+      skew-normalized ratio pack;
+    * ``n_full_ticks_seed0``  — how many ticks actually ran as full ticks
+      on seed 0 (``with_stats``), i.e. how much telescoping there was.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import (SimConfig, build_paper_network, get_policy,
+                            init_sim, paper_workload, scaled_hosts)
+    from repro.core import stats
+    from repro.core.engine import simulate_telescoped
+    from repro.launch.sweep import run_sim_vmapped
+
+    cfg = SimConfig(n_jobs=max(4, n_containers // 3), n_tasks=n_containers,
+                    n_containers=n_containers, horizon=horizon,
+                    placements_per_tick=1, migrations_per_tick=1,
+                    waterfill_rounds=2, delay_update_interval=interval)
+    hosts = scaled_hosts(n_hosts, 2)
+    spec, net = build_paper_network(cfg, n_hosts=n_hosts, n_spine=2,
+                                    n_leaf=2)
+    pol = get_policy("firstfit")
+    params = cfg.run_params()
+    sim_list = [init_sim(hosts, paper_workload(cfg, seed=s), net, seed=s)
+                for s in range(seeds)]
+    sims = jax.tree.map(lambda *xs: jnp.stack(xs), *sim_list)
+
+    def timed(telescope: bool):
+        def run():
+            return run_sim_vmapped(sims, cfg, pol, spec.n_hosts,
+                                   spec.n_nodes, horizon, params=params,
+                                   chunk=chunk, telescope=telescope)
+        f, s = run()                                  # compile + warm
+        jax.tree.leaves(f)[0].block_until_ready()
+        t0 = time.time()
+        f, s = run()
+        jax.tree.leaves(f)[0].block_until_ready()
+        return time.time() - t0, f, s
+
+    off_t, off_f, off_s = timed(False)
+    on_t, on_f, on_s = timed(True)
+
+    def close(a, b):
+        return all(np.allclose(np.asarray(x), np.asarray(y),
+                               rtol=3e-6, atol=1e-6)
+                   for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+    import functools
+    n_full_fn = jax.jit(functools.partial(
+        simulate_telescoped, cfg=cfg, policy=pol, n_hosts=spec.n_hosts,
+        n_nodes=spec.n_nodes, chunk=horizon, params=params,
+        with_stats=True))
+    _, _, n_full = n_full_fn(sim_list[0], stats.acc_init(),
+                             jnp.zeros((), jnp.int32))
+    total_ticks = horizon * seeds
+    return {
+        "n_hosts": n_hosts,
+        "n_containers": n_containers,
+        "horizon": horizon,
+        "seeds": seeds,
+        "chunk": chunk,
+        "delay_update_interval": interval,
+        "policy": "firstfit",
+        "off_wall_s": round(off_t, 2),
+        "on_wall_s": round(on_t, 2),
+        "off_ticks_per_s": round(total_ticks / max(off_t, 1e-9), 1),
+        "on_ticks_per_s": round(total_ticks / max(on_t, 1e-9), 1),
+        "telescope_speedup": round(off_t / max(on_t, 1e-9), 2),
+        "finals_bitwise_equal": _trees_bitwise_equal(off_f, on_f),
+        "summary_close": close(off_s, on_s),
+        "n_full_ticks_seed0": int(n_full),
+        "full_tick_fraction": round(int(n_full) / horizon, 4),
+    }
+
+
 def _trees_bitwise_equal(a, b) -> bool:
     """Leaf-by-leaf byte equality (NaN-safe: same bits compare equal)."""
     import jax
@@ -519,6 +624,10 @@ def bench_engine(quick: bool = False):
     # the same smoke grid so the CI quick gate has a like-for-like
     # committed twin (bit-identity + compile bill + overlap ratio)
     sweep_dist = measure_dist_point(**DIST_SMOKE)
+    # the telescoping arm (ISSUE 10): measured in BOTH modes on the same
+    # sparse-event long-horizon grid — the gated numbers (bitwise
+    # equality, the within-run on/off speedup) are machine-independent
+    telescope = measure_telescope_point(**TELESCOPE_SMOKE)
     from benchmarks.longhorizon_bench import measure_longhorizon
     longhorizon = measure_longhorizon(quick=quick)
     backend = jax.default_backend()
@@ -526,6 +635,7 @@ def bench_engine(quick: bool = False):
     tune["backend"] = backend
     tune_grad["backend"] = backend
     sweep_dist["backend"] = backend
+    telescope["backend"] = backend
     out = {
         "bench": "engine_tick_throughput",
         "backend": backend,
@@ -537,6 +647,7 @@ def bench_engine(quick: bool = False):
         "tune": tune,
         "tune_grad": tune_grad,
         "sweep_dist": sweep_dist,
+        "telescope": telescope,
         "longhorizon": longhorizon,
     }
     if sweep_quick is not None:
@@ -588,6 +699,14 @@ def bench_engine(quick: bool = False):
          f"overlap {sweep_dist['overlap_ratio']}x, 2-proc parallel "
          f"{sweep_dist['dist_parallel_ratio']}x, compiles/process <= "
          f"{max(a['compile_cache_misses'] for a in sweep_dist['arms'].values())}"),
+        (f"telescope @ {telescope['horizon']} ticks x "
+         f"{telescope['seeds']} seeds (refresh interval "
+         f"{telescope['delay_update_interval']})",
+         f"on {telescope['on_ticks_per_s']} vs off "
+         f"{telescope['off_ticks_per_s']} ticks/s = "
+         f"{telescope['telescope_speedup']}x, bitwise equal: "
+         f"{telescope['finals_bitwise_equal']}, full ticks seed0: "
+         f"{telescope['n_full_ticks_seed0']}/{telescope['horizon']}"),
         (f"longhorizon streaming @ {longhorizon['horizon']} ticks x "
          f"{longhorizon['seeds']} seeds",
          f"{longhorizon['stream']['max_rss_mb']} MB peak RSS, "

@@ -20,20 +20,21 @@ from __future__ import annotations
 
 import functools
 import warnings
-from typing import Tuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import network, scheduling, stats
+from repro.core import network, scheduling, stats, workload
 from repro.core.datacenter import SimConfig
 from repro.kernels import resolve_kernel
 from repro.core.scheduling import BIG, INT_BIG, feasible_hosts
 from repro.core.types import (
     F_COMM, F_HOST_UTIL, STATUS_COMMUNICATING, STATUS_COMPLETED,
     STATUS_INACTIVE, STATUS_MIGRATING, STATUS_RUNNING, STATUS_UNBORN,
-    STATUS_WAITING, W_CROSS_LEAF, W_UTIL, ContainerState, ExecPlan, HostState,
-    NetState, PolicyParams, RunParams, SchedState, SimState, TickMetrics,
+    STATUS_WAITING, W_CROSS_LEAF, W_MIG_ENABLE, W_UTIL, ContainerState,
+    ExecPlan, HostState, NetState, PolicyParams, RunParams, SchedState,
+    SimState, TickMetrics,
 )
 
 I32 = jnp.int32
@@ -596,26 +597,62 @@ def phase_cost(sim: SimState) -> SimState:
 # ---------------------------------------------------------------------------
 # The tick and the scan driver
 # ---------------------------------------------------------------------------
-def make_tick(cfg: SimConfig, policy: PolicyParams, params: RunParams,
-              n_hosts: int, n_nodes: int):
-    """Build the jit-able tick function ``(sim, _) -> (sim', metrics)``.
+class TickInfo(NamedTuple):
+    """Side-channel outputs of one full tick the telescoping driver needs
+    to judge quiescence (docs/events.md) — the frozen flow rates and the
+    flow inputs ``phase_flows`` consumed, so the next tick's rates are
+    provably the same values without re-running waterfilling."""
+    comm_rates: jnp.ndarray     # f32[C] this tick's comm allocation
+    mig_rates: jnp.ndarray      # f32[C] this tick's migration allocation
+    flow_active: jnp.ndarray    # bool[2C]
+    all_rates: jnp.ndarray      # f32[2C]
+    mid_status: jnp.ndarray     # container fields phase_flows read
+    mid_host: jnp.ndarray       #   (captured post-schedule, pre-flows)
+    mid_peer: jnp.ndarray
+    mid_mig_dst: jnp.ndarray
+    refreshed: jnp.ndarray      # bool: delay refresh fired this tick
 
-    ``policy`` and ``params`` are traced pytrees closed over by the tick —
-    the whole point of the policy-as-data split: a different policy id,
-    weight vector, or runtime knob is new *data* through the SAME compiled
-    tick, and a batch axis on either sweeps them under ``vmap``.
 
-    The Pallas kernel flags are resolved HERE, once, at trace time
-    (``repro.kernels.resolve_kernel``: compiled kernel on TPU/GPU, jnp
-    reference on CPU under 'auto') — they are static config, part of the
-    jit cache key via ``cfg``, never traced values.
-    """
+def make_refresh_fn(cfg: SimConfig, policy: PolicyParams, params: RunParams,
+                    n_hosts: int, n_nodes: int):
+    """The periodic delay-matrix rebuild as a ``net -> net`` branch fn —
+    ONE definition for the per-tick cond and the telescoping driver's
+    hoisted boundary cond, so both compile the identical XLA region."""
     use_fw_kernel = resolve_kernel(cfg.delay_kernel)
+
+    def refresh(net):
+        return network.update_delay_matrix(
+            net, n_hosts, n_nodes, mode=cfg.delay_mode,
+            use_kernel=use_fw_kernel, q_coef=params.queue_coef,
+            util_weight=policy.weights[W_UTIL],
+            cross_leaf_ms=policy.weights[W_CROSS_LEAF])
+
+    return refresh
+
+
+def make_tick_ext(cfg: SimConfig, policy: PolicyParams, params: RunParams,
+                  n_hosts: int, n_nodes: int, refresh: bool = True):
+    """Build the extended tick ``(sim, tt) -> (sim', metrics, TickInfo)``.
+
+    The scan drivers wrap it through :func:`make_tick` (dropping the
+    info); the telescoping driver consumes the info directly.  Both paths
+    trace the IDENTICAL phase sequence — that is what keeps a telescoped
+    full tick bit-for-bit equal to a scanned one.
+
+    ``refresh=False`` statically drops the periodic delay-refresh cond:
+    the telescoping driver segments its chunk at the refresh boundaries
+    and applies the refresh OUTSIDE the tick through a real ``lax.cond``
+    (the boundary clock is unbatched there — see ``simulate_telescoped``),
+    so its in-loop ticks must not carry a second, select-lowered copy.
+    ``stats.collect`` reads nothing the refresh writes (``net`` leaves
+    only), so hoisting the refresh past it is bit-exact.
+    """
     use_wf_kernel = cfg.sparse_flows and resolve_kernel(cfg.waterfill_kernel)
 
-    def tick(sim: SimState, tt: jnp.ndarray) -> Tuple[SimState, TickMetrics]:
+    def tick_ext(sim: SimState, tt: jnp.ndarray):
         sim, n_arrived = phase_arrive(sim)
         sim, soft = phase_schedule_soft(sim, cfg, policy, params)
+        mid = sim.containers          # the state phase_flows consumes
         sim, comm_rates, mig_rates, flow_active, all_rates = \
             phase_flows(sim, cfg, use_kernel=use_wf_kernel)
         sim = phase_communicate(sim, cfg, comm_rates)
@@ -625,13 +662,6 @@ def make_tick(cfg: SimConfig, policy: PolicyParams, params: RunParams,
         sim = phase_cost(sim)
 
         # paper ``update_delay_matrix`` process: periodic refresh
-        def refresh(net):
-            return network.update_delay_matrix(
-                net, n_hosts, n_nodes, mode=cfg.delay_mode,
-                use_kernel=use_fw_kernel, q_coef=params.queue_coef,
-                util_weight=policy.weights[W_UTIL],
-                cross_leaf_ms=policy.weights[W_CROSS_LEAF])
-
         # The predicate reads the scan's tick counter ``tt`` (== sim.t at
         # every step), NOT the carried clock: the carry is batched under a
         # vmapped sweep, and a batched predicate turns ``lax.cond`` into a
@@ -639,14 +669,56 @@ def make_tick(cfg: SimConfig, policy: PolicyParams, params: RunParams,
         # O(H^2) refresh on every tick (measured ~1.6x per cell at
         # 500h/3000c).  ``tt`` comes from an unbatched xs, so the cond
         # survives every vmap and the refresh stays periodic.
-        every = jnp.mod(tt, cfg.delay_update_interval) == 0
-        sim = sim._replace(
-            net=jax.lax.cond(every, refresh, lambda n: n, sim.net))
+        # ``delay_update_interval == 0`` = refresh once at t=0, then
+        # frozen: a static branch, because ``mod(tt, 0)`` is undefined and
+        # static-topology runs should not re-enter the O(H^2) rebuild at
+        # all.
+        if not refresh:
+            every = jnp.asarray(False)
+        elif cfg.delay_update_interval == 0:
+            every = tt == 0
+        else:
+            every = jnp.mod(tt, cfg.delay_update_interval) == 0
+        if refresh:
+            sim = sim._replace(
+                net=jax.lax.cond(every,
+                                 make_refresh_fn(cfg, policy, params,
+                                                 n_hosts, n_nodes),
+                                 lambda n: n, sim.net))
 
         m = stats.collect(sim, n_arrived, sim.sched.decisions,
                           sim.sched.migrations, params,
                           flow_active, all_rates, soft=soft)
         sim = sim._replace(t=sim.t + 1.0)
+        info = TickInfo(comm_rates=comm_rates, mig_rates=mig_rates,
+                        flow_active=flow_active, all_rates=all_rates,
+                        mid_status=mid.status, mid_host=mid.host,
+                        mid_peer=mid.comm_peer, mid_mig_dst=mid.mig_dst,
+                        refreshed=every)
+        return sim, m, info
+
+    return tick_ext
+
+
+def make_tick(cfg: SimConfig, policy: PolicyParams, params: RunParams,
+              n_hosts: int, n_nodes: int):
+    """Build the jit-able tick function ``(sim, _) -> (sim', metrics)``.
+
+    ``policy`` and ``params`` are traced pytrees closed over by the tick —
+    the whole point of the policy-as-data split: a different policy id,
+    weight vector, or runtime knob is new *data* through the SAME compiled
+    tick, and a batch axis on either sweeps them under ``vmap``.
+
+    The Pallas kernel flags are resolved at trace time in
+    :func:`make_tick_ext` (``repro.kernels.resolve_kernel``: compiled
+    kernel on TPU/GPU, jnp reference on CPU under 'auto') — they are
+    static config, part of the jit cache key via ``cfg``, never traced
+    values.
+    """
+    tick_ext = make_tick_ext(cfg, policy, params, n_hosts, n_nodes)
+
+    def tick(sim: SimState, tt: jnp.ndarray) -> Tuple[SimState, TickMetrics]:
+        sim, m, _ = tick_ext(sim, tt)
         return sim, m
 
     return tick
@@ -707,15 +779,299 @@ def simulate_chunk(sim: SimState, acc, t0: jnp.ndarray, cfg: SimConfig,
     return sim, acc
 
 
+# ---------------------------------------------------------------------------
+# Telescoping (macro-tick) driver: closed-form advancement over quiescent
+# intervals (docs/events.md)
+# ---------------------------------------------------------------------------
+def _event_horizon(sim: SimState, cfg: SimConfig, info: TickInfo,
+                   t: jnp.ndarray, t_end: jnp.ndarray,
+                   speed: jnp.ndarray) -> jnp.ndarray:
+    """Closed-form event horizon after the full tick at ``t``: the first
+    tick index that could be a non-quiescent event, as an f32 bound on the
+    cheap-tick indices (cheap ticks allowed while ``t' < horizon``).
+
+    Exact components (integer / monotone arithmetic):
+    * segment end ``t_end`` — the telescoping driver segments its chunk at
+      the ``delay_update_interval`` refresh boundaries, so the next
+      refresh (and the chunk end) both arrive through this cap;
+    * next container arrival — ``ceil`` of the min pending ``submit_t``
+      (``phase_arrive`` fires at the first integer tick >= submit).
+
+    Estimated components (ceil-divisions of remaining work by the frozen
+    rates — the per-tick path subtracts the rate REPEATEDLY in f32, so
+    these can be off by a tick either way from rounding):
+    * earliest comm / migration flow finish;
+    * earliest comm trigger or completion of a running container.
+
+    The estimates are only a bound: the telescoping loop re-checks the
+    exact one-step predicates (the same comparisons the per-tick phases
+    make) before every cheap tick, so an overestimate stops early on the
+    exact check and an underestimate merely costs one extra full tick.
+    Equality with the per-tick path never rests on the divisions.
+    """
+    ct = sim.containers
+    inf = jnp.float32(jnp.inf)
+
+    def ceil_ticks(remaining, rate, mask):
+        k = jnp.ceil(remaining / jnp.maximum(rate, 1e-30))
+        return jnp.where(mask & (rate > 0), k, inf).min()
+
+    comm = ct.status == STATUS_COMMUNICATING
+    mig = ct.status == STATUS_MIGRATING
+    running = ct.status == STATUS_RUNNING
+    t_f = t.astype(F32)
+    # arrivals after the full tick at t: phase_arrive at tick ti fires on
+    # submit_t <= ti, so the first arrival event is ceil(min pending
+    # submit).  Queried against t (NOT the post-tick clock t+1): a submit
+    # inside (t, t+1] arrives at the very next tick.
+    horizon = jnp.minimum(t_end.astype(F32),
+                          jnp.ceil(workload.next_arrival_after(ct, t_f)))
+    horizon = jnp.minimum(
+        horizon, t_f + ceil_ticks(ct.comm_bytes_left, info.comm_rates, comm))
+    horizon = jnp.minimum(
+        horizon, t_f + ceil_ticks(ct.mig_bytes_left, info.mig_rates, mig))
+    horizon = jnp.minimum(
+        horizon, t_f + ceil_ticks(ct.next_comm_at - ct.run_at, speed,
+                                  running & (ct.n_comms_left > 0)))
+    horizon = jnp.minimum(
+        horizon, t_f + ceil_ticks(ct.duration - ct.run_at, speed,
+                                  running & (ct.n_comms_left <= 0)))
+    return horizon
+
+
+def simulate_telescoped(sim: SimState, acc, t0: jnp.ndarray, cfg: SimConfig,
+                        policy: PolicyParams, n_hosts: int, n_nodes: int,
+                        chunk: int, params: RunParams,
+                        with_stats: bool = False):
+    """:func:`simulate_chunk` twin with event-horizon tick telescoping.
+
+    Each macro step runs ONE full tick, then — if the resulting state is
+    *quiescent* (nothing schedulable, no migration trigger armed, no
+    stalled flow, and the tick changed none of the inputs waterfilling
+    reads, so the frozen rates provably carry forward) — advances up to
+    the closed-form event horizon in cheap ticks: only the linear O(C+H)
+    updates a quiescent full tick would make (work progress at frozen
+    rates and speeds, busy/comm clocks, cost), each applying the SAME f32
+    operations in the SAME order, so the final state is bit-for-bit the
+    per-tick path's.  The dt skipped ticks' metrics — constant over the
+    interval by construction — fold in closed form through
+    ``stats.acc_update_weighted`` (dt-weighted Kahan, weighted Welford):
+    integer sums/counts/peaks exact, float means to ~1 ulp.
+
+    Under a vmapped sweep ``dt`` is per-cell: the while loops run until
+    every lane's clock reaches the segment end (``max(t)`` across the
+    batch), finished lanes riding along masked.  The chunk is SEGMENTED
+    at the ``delay_update_interval`` refresh boundaries — every lane
+    stops there (the event horizon is capped by the segment end), so the
+    lanes re-synchronize at each boundary and the periodic delay refresh
+    applies through a real ``lax.cond`` on an UNBATCHED boundary clock.
+    That is a bitwise requirement, not a nicety: a batched predicate
+    lowers the cond to a select whose branch fuses into the loop body,
+    and XLA's fusion-dependent f32 contraction measurably shifted
+    ``delay_matrix`` (~1 ulp) against the per-tick path; a real cond
+    branch is its own XLA region and compiles identically in both
+    drivers.  ``delay_update_interval=0`` (refresh once at t=0, then
+    frozen) collapses the chunk to one segment.  docs/events.md walks
+    the exactness argument and the honest list of what forces dt=1.
+
+    ``cfg.soft_placement`` is rejected: ``lax.while_loop`` has no
+    reverse-mode autodiff, so the surrogate's gradient path cannot thread
+    a telescoped run — use the chunked scan for grad work.
+    ``with_stats`` additionally returns the number of FULL ticks executed
+    (i32; ``horizon - n_full`` ticks were telescoped) for benches/tests.
+    """
+    if cfg.soft_placement:
+        raise ValueError(
+            "telescope + soft_placement is unsupported: the surrogate "
+            "exists for jax.grad, and lax.while_loop (the telescoping "
+            "driver) has no reverse-mode autodiff — run grad work through "
+            "the chunked scan (ExecPlan(chunk=...)) instead")
+    sim = jax.lax.cond(
+        t0 == 0,
+        lambda s: s._replace(net=network.apply_link_params(
+            s.net, params.bw_mbps, params.loss)),
+        lambda s: s, sim)
+    tick_ext = make_tick_ext(cfg, policy, params, n_hosts, n_nodes,
+                             refresh=False)
+    refresh_fn = make_refresh_fn(cfg, policy, params, n_hosts, n_nodes)
+    K = cfg.delay_update_interval
+    H = sim.hosts.cap.shape[0]
+    t_end = t0 + chunk
+    zero_i = jnp.zeros((), I32)
+    # Topology leaves no phase ever writes (the sweep keeps them UNBATCHED
+    # through its vmap for the fast-path gathers, sweep.py's
+    # STATIC_TOPOLOGY_LEAVES).  The batched-cond while_loop select-masks
+    # every carry leaf, which would swap in lane-batched copies and flip
+    # the delay-refresh gathers to batched indices — a different f32
+    # reduction order than the per-tick path, breaking bitwise equality.
+    # Pin them to the closed-over inputs each step: values are identical
+    # either way, the gathers keep unbatched operands, and the returned
+    # state's topology leaves stay unbatched through the vmap.
+    net0, leaf0 = sim.net, sim.hosts.leaf
+
+    def pin(s):
+        return s._replace(
+            hosts=s.hosts._replace(leaf=leaf0),
+            net=s.net._replace(link_u=net0.link_u, link_v=net0.link_v,
+                               path_links=net0.path_links,
+                               path_nlinks=net0.path_nlinks))
+
+    def advance(sim, acc, t, info, blocked, seg_end):
+        """Quiescence test + cheap-tick advancement after the full tick
+        at ``t``: returns ``(sim, acc, t2)`` with ``t2`` in
+        ``(t, seg_end]``.  ``blocked`` forces dt=1 when the caller just
+        applied the boundary delay refresh — the rebuilt fabric means the
+        frozen rates do not provably carry forward."""
+        ct = sim.containers
+        st = ct.status
+        # Quiescence: the tick's own post-flow phases changed none of the
+        # inputs waterfilling reads and no refresh touched the fabric, so
+        # the frozen rates ARE the next tick's rates; nothing is waiting
+        # for the scheduler; the migration trigger cannot arm (hosts.used
+        # is constant over the interval); no active flow is stalling
+        # (stalls increment retry every tick).
+        quiet = ((st == info.mid_status).all()
+                 & (ct.host == info.mid_host).all()
+                 & (ct.comm_peer == info.mid_peer).all()
+                 & (ct.mig_dst == info.mid_mig_dst).all()
+                 & ~blocked)
+        quiet &= ~((st == STATUS_INACTIVE) | (st == STATUS_WAITING)).any()
+        util = sim.hosts.used / jnp.maximum(sim.hosts.cap, 1e-6)
+        quiet &= ~((policy.weights[W_MIG_ENABLE] > 0)
+                   & (util.max(axis=1) > params.overload_threshold).any())
+        quiet &= ~(info.flow_active
+                   & (info.all_rates < cfg.stall_rate_floor)).any()
+
+        # Per-interval constants (statuses and placement are frozen).
+        comm = st == STATUS_COMMUNICATING
+        mig = st == STATUS_MIGRATING
+        running = st == STATUS_RUNNING
+        speed = sim.hosts.speed[jnp.clip(ct.host, 0, H - 1), ct.ctype]
+        comm_f = comm.astype(F32)
+        busy_f = (sim.hosts.n_containers > 0).astype(F32)
+        cost_q = (sim.hosts.price * busy_f).sum()
+        horizon = _event_horizon(sim, cfg, info, t, seg_end, speed)
+        comm_rates, mig_rates = info.comm_rates, info.mig_rates
+
+        def cheap_cond(c):
+            s, ti = c
+            cc = s.containers
+            ok = ti.astype(F32) < horizon
+            # exact one-step event predicates — the comparisons the
+            # per-tick phases would make at tick ti, on the live state
+            ok &= ~(comm & (cc.comm_bytes_left - comm_rates <= 0.0)).any()
+            ok &= ~(mig & (cc.mig_bytes_left - mig_rates <= 0.0)).any()
+            new_run = cc.run_at + speed
+            ok &= ~(running & (cc.n_comms_left > 0)
+                    & (new_run >= cc.next_comm_at)).any()
+            ok &= ~(running & (cc.n_comms_left <= 0)
+                    & (new_run >= cc.duration)).any()
+            return quiet & ok
+
+        def cheap_body(c):
+            s, ti = c
+            cc = s.containers
+            # exactly the f32 updates a quiescent full tick makes, in the
+            # per-tick operation order (phase_communicate / phase_migrate
+            # clamp through maximum(new_left, 0); phase_execute adds the
+            # speed gather; phase_cost re-adds the same cost scalar)
+            conts = cc._replace(
+                comm_bytes_left=jnp.maximum(
+                    jnp.where(comm, cc.comm_bytes_left - comm_rates,
+                              cc.comm_bytes_left), 0.0),
+                mig_bytes_left=jnp.maximum(
+                    jnp.where(mig, cc.mig_bytes_left - mig_rates,
+                              cc.mig_bytes_left), 0.0),
+                comm_time=cc.comm_time + comm_f,
+                run_at=jnp.where(running, cc.run_at + speed, cc.run_at),
+                retry=jnp.where(comm | mig, 0, cc.retry),
+            )
+            hosts = s.hosts._replace(busy_time=s.hosts.busy_time + busy_f)
+            sched = s.sched._replace(decisions=zero_i, migrations=zero_i)
+            s = s._replace(containers=conts, hosts=hosts, sched=sched,
+                           total_cost=s.total_cost + cost_q,
+                           t=s.t + 1.0)
+            return s, ti + 1
+
+        sim, t2 = jax.lax.while_loop(cheap_cond, cheap_body, (sim, t + 1))
+        dt = t2 - (t + 1)
+        # the skipped ticks' metrics, constant over the interval: no
+        # arrivals/decisions/migrations, frozen flows, same state counts
+        m_q = stats.collect(sim, zero_i, zero_i, zero_i, params,
+                            info.flow_active, info.all_rates)
+        acc = stats.acc_update_weighted(acc, m_q, dt)
+        return sim, acc, t2
+
+    def macro_of(seg_end):
+        def macro(carry):
+            sim, acc, t, n_full = carry
+            sim = pin(sim)
+            sim, m, info = tick_ext(sim, t)
+            acc = stats.acc_update(acc, m)
+            sim, acc, t2 = advance(sim, acc, t, info, jnp.asarray(False),
+                                   seg_end)
+            return sim, acc, t2, n_full + 1
+        return macro
+
+    def run_segment(carry, seg_start, seg_end, refresh_due):
+        """One refresh-bounded segment ``[seg_start, seg_end)``.  Every
+        lane enters at exactly ``seg_start`` — the previous segment's
+        event horizon was capped there — so the first tick runs on the
+        UNBATCHED boundary clock and the delay refresh applies through a
+        real ``lax.cond``: the same insulated XLA branch region the
+        per-tick path compiles (see the docstring's bitwise argument)."""
+        sim, acc, n_full = carry
+        sim = pin(sim)
+        sim, m, info = tick_ext(sim, seg_start)
+        sim = sim._replace(net=jax.lax.cond(refresh_due, refresh_fn,
+                                            lambda n: n, sim.net))
+        acc = stats.acc_update(acc, m)
+        sim, acc, t2 = advance(sim, acc, seg_start, info, refresh_due,
+                               seg_end)
+        sim, acc, _, n_full = jax.lax.while_loop(
+            lambda c: c[2] < seg_end, macro_of(seg_end),
+            (sim, acc, t2, n_full + 1))
+        return sim, acc, n_full
+
+    if K == 0:
+        # one segment: refresh once at t=0 (first chunk only), then the
+        # fabric is frozen for the whole run — the documented fast path
+        sim, acc, n_full = run_segment((sim, acc, zero_i), t0, t_end,
+                                       t0 == 0)
+    else:
+        # chunk//K + 2 boundary-aligned segments cover [t0, t_end) for
+        # ANY t0: a partial head segment up to the next multiple of K,
+        # then K-sized segments; trailing empties are skipped below
+        n_seg = chunk // K + 2
+
+        def seg_step(carry, s):
+            start = jnp.where(s == 0, t0, (t0 // K + s) * K)
+            end = jnp.minimum((t0 // K + s + 1) * K, t_end)
+            due = jnp.mod(start, K) == 0
+            # real cond — s and t0 stay unbatched under the sweep's
+            # vmap, so empty segments (start past t_end) skip entirely
+            return jax.lax.cond(start < end,
+                                lambda c: run_segment(c, start, end, due),
+                                lambda c: c, carry), None
+
+        (sim, acc, n_full), _ = jax.lax.scan(
+            seg_step, (sim, acc, zero_i), jnp.arange(n_seg, dtype=I32))
+    sim = pin(sim)
+    if with_stats:
+        return sim, acc, n_full
+    return sim, acc
+
+
 @functools.lru_cache(maxsize=None)
-def _chunk_step_jit():
+def _chunk_step_jit(telescope: bool = False):
     """The jitted per-chunk step, built lazily so the donation decision can
     read the active backend: donating the (state, accumulator) carry lets
     XLA reuse their buffers across chunks, but CPU does not implement
-    donation and would warn on every compile."""
+    donation and would warn on every compile.  ``telescope`` swaps the
+    scan for the macro-tick driver — same signature, same carry."""
+    fn = simulate_telescoped if telescope else simulate_chunk
     def step(sim, acc, t0, policy, params, cfg, n_hosts, n_nodes, chunk):
-        return simulate_chunk(sim, acc, t0, cfg, policy, n_hosts, n_nodes,
-                              chunk, params)
+        return fn(sim, acc, t0, cfg, policy, n_hosts, n_nodes, chunk, params)
     donate = (0, 1) if jax.default_backend() != "cpu" else ()
     return jax.jit(step, static_argnames=("cfg", "n_hosts", "n_nodes",
                                           "chunk"),
@@ -724,7 +1080,8 @@ def _chunk_step_jit():
 
 def run_sim_chunked(sim0: SimState, cfg: SimConfig, policy: PolicyParams,
                     n_hosts: int, n_nodes: int, horizon: int, chunk: int,
-                    params: RunParams | None = None):
+                    params: RunParams | None = None,
+                    telescope: bool = False):
     """Streaming ``run_sim``: host loop over jit-per-chunk steps with a
     donated carry; returns (final state, ``OnlineSummary``).
 
@@ -732,12 +1089,14 @@ def run_sim_chunked(sim0: SimState, cfg: SimConfig, policy: PolicyParams,
     f64/i64 totals (``stats.online_fold``), so integer sums stay exact and
     float sums hold ~f32-ulp accuracy out to arbitrary horizons —
     ``check_chunk`` bounds the chunk size so no i32 sum can overflow
-    within one chunk.  Final state is bit-for-bit the stacked path's
-    (tests/test_streaming.py); only the metrics representation differs.
+    within one chunk (the dt-weighted telescoping folds total exactly what
+    the repeated folds would, so the same bound covers both drivers).
+    Final state is bit-for-bit the stacked path's (tests/test_streaming.py
+    / test_telescope.py); only the metrics representation differs.
     """
     params = cfg.run_params() if params is None else params
     stats.check_chunk(chunk, int(sim0.containers.status.shape[-1]))
-    step, donated = _chunk_step_jit()
+    step, donated = _chunk_step_jit(telescope)
     # donation consumes the caller's buffers on the first chunk — keep
     # sim0 valid for reuse (launch/sim.py shares one built state across
     # every policy run)
@@ -807,6 +1166,14 @@ def run_sim(sim0: SimState, cfg: SimConfig, policy: PolicyParams,
     memory at any horizon.  ``report.summarize`` accepts either form.
     The bare ``chunk=`` kwarg is deprecated (one cycle).
 
+    A ``plan.telescope`` routes the run through the macro-tick driver
+    (:func:`simulate_telescoped`): quiescent intervals advance in cheap
+    linear ticks up to the closed-form event horizon, metrics fold
+    dt-weighted.  Telescoped runs always report an ``OnlineSummary``
+    (skipped ticks have no per-tick rows to stack); without ``plan.chunk``
+    the whole horizon runs as one span.  Final state stays bit-for-bit
+    the per-tick path's; docs/events.md.
+
     Only ``cfg`` (after the plan's kernel selectors fold in), the shape
     arguments, and the chunk size are static.  ``policy`` (a weight
     vector) and ``params`` (bw/loss/queue/threshold knobs, defaulting from
@@ -816,6 +1183,10 @@ def run_sim(sim0: SimState, cfg: SimConfig, policy: PolicyParams,
     """
     plan, cfg = resolve_plan(plan, cfg, chunk=chunk)
     params = cfg.run_params() if params is None else params
+    if plan.telescope:
+        return run_sim_chunked(sim0, cfg, policy, n_hosts, n_nodes, horizon,
+                               plan.chunk or horizon, params=params,
+                               telescope=True)
     if plan.chunk is not None:
         return run_sim_chunked(sim0, cfg, policy, n_hosts, n_nodes, horizon,
                                plan.chunk, params=params)

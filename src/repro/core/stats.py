@@ -18,6 +18,7 @@ second (``save_stats`` process).  Two collection modes share one
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -181,6 +182,68 @@ def acc_update(acc: SummaryAcc, m: TickMetrics) -> SummaryAcc:
         sum_soft_mig=ssm, c_soft_mig=csm,
         sum_soft_mig_n=ssmn, c_soft_mig_n=csmn,
     )
+
+
+def acc_update_weighted(acc: SummaryAcc, m: TickMetrics,
+                        dt: jnp.ndarray) -> SummaryAcc:
+    """Fold ``dt`` identical ticks' metrics into the accumulator at once.
+
+    The telescoping engine's closed-form fold (docs/events.md): over a
+    quiescent interval the per-tick metrics are constant by construction,
+    so ``dt`` repeated :func:`acc_update` calls collapse to one weighted
+    update — Kahan steps absorb ``dt * x`` in one compensation, the
+    Welford pair takes Chan's merge of a group of ``dt`` equal values
+    (within-group M2 is exactly 0), integer sums add ``dt * v`` (exact in
+    i32 under the same ``max_chunk_ticks`` bound: the weighted total
+    equals the repeated total), and peaks are idempotent under repeats.
+    Integer sums/counts/peaks match the repeated folds bit-for-bit; the
+    float sums and moments agree to ~1 ulp (tests/test_telescope.py).
+
+    ``dt == 0`` is an exact no-op — every field keeps its old value
+    bitwise (a Kahan step with x = 0 would still fold the compensation
+    term into the sum), so the engine can call this unconditionally after
+    an interval that telescoped zero ticks.
+    """
+    w = dt.astype(F32)
+    su, cu = _kahan(acc.sum_util_var, acc.c_util_var, w * m.util_variance)
+    sm, cm = _kahan(acc.sum_mean_util, acc.c_mean_util, w * m.mean_util)
+    sf, cf = _kahan(acc.sum_flow_rate, acc.c_flow_rate, w * m.mean_flow_rate)
+    ssc, csc = _kahan(acc.sum_soft_comm, acc.c_soft_comm, w * m.soft_comm)
+    ssu, csu = _kahan(acc.sum_soft_util, acc.c_soft_util, w * m.soft_util)
+    ssn, csn = _kahan(acc.sum_soft_n, acc.c_soft_n, w * m.soft_n)
+    ssm, csm = _kahan(acc.sum_soft_mig, acc.c_soft_mig, w * m.soft_mig)
+    ssmn, csmn = _kahan(acc.sum_soft_mig_n, acc.c_soft_mig_n,
+                        w * m.soft_mig_n)
+    n = acc.n_ticks + dt.astype(I32)
+    nf = jnp.maximum(n.astype(F32), 1.0)
+    delta = m.mean_util - acc.w_mean_util
+    # ratio-first like online_merge: w/nf is exactly 1.0 on an empty acc,
+    # so the first fold lands mean_util bitwise.
+    w_mean = acc.w_mean_util + delta * (w / nf)
+    w_m2 = acc.w_m2_util + delta * delta * (acc.n_ticks.astype(F32) * w / nf)
+    new = SummaryAcc(
+        n_ticks=n,
+        sum_util_var=su, c_util_var=cu,
+        sum_mean_util=sm, c_mean_util=cm,
+        sum_flow_rate=sf, c_flow_rate=cf,
+        w_mean_util=w_mean, w_m2_util=w_m2,
+        sum_active_flows=(acc.sum_active_flows
+                          + dt * m.active_flows.astype(I32)),
+        sum_arrivals=acc.sum_arrivals + dt * m.new_arrivals.astype(I32),
+        sum_decisions=acc.sum_decisions + dt * m.decisions.astype(I32),
+        sum_migrations=acc.sum_migrations + dt * m.migrations.astype(I32),
+        peak_running=jnp.maximum(acc.peak_running, m.n_running),
+        peak_deployed=jnp.maximum(acc.peak_deployed, m.n_deployed),
+        peak_overloaded=jnp.maximum(acc.peak_overloaded, m.n_overloaded),
+        peak_inactive=jnp.maximum(acc.peak_inactive, m.n_inactive),
+        sum_soft_comm=ssc, c_soft_comm=csc,
+        sum_soft_util=ssu, c_soft_util=csu,
+        sum_soft_n=ssn, c_soft_n=csn,
+        sum_soft_mig=ssm, c_soft_mig=csm,
+        sum_soft_mig_n=ssmn, c_soft_mig_n=csmn,
+    )
+    keep = dt > 0
+    return jax.tree.map(lambda old, upd: jnp.where(keep, upd, old), acc, new)
 
 
 def online_init(batch_shape: tuple = ()) -> OnlineSummary:

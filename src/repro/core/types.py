@@ -378,6 +378,9 @@ class ExecPlan:
     #                                     (sequence, or a count of local
     #                                     devices); None = all local devices
     overlap: bool = True                # overlap slab gather behind compute
+    telescope: bool = False             # macro-tick engine: advance dt >= 1
+    #                                     ticks per step over quiescent
+    #                                     intervals (docs/events.md)
     procs: int = 1                      # worker processes (launch.dist)
     devices_per_proc: int = 1           # devices each dist worker claims
 
@@ -433,6 +436,7 @@ class ExecPlan:
             waterfill_kernel=getattr(args, "waterfill_kernel", None),
             devices=getattr(args, "devices", None),
             overlap=(not getattr(args, "no_overlap", False)),
+            telescope=bool(getattr(args, "telescope", False)),
             procs=get("procs", defaults.procs),
             devices_per_proc=get("devices_per_proc",
                                  defaults.devices_per_proc),

@@ -17,7 +17,22 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.datacenter import SimConfig
-from repro.core.types import ContainerState, empty_containers
+from repro.core.types import STATUS_UNBORN, ContainerState, empty_containers
+
+
+def next_arrival_after(containers: ContainerState,
+                       t: jnp.ndarray) -> jnp.ndarray:
+    """Earliest pending submit time strictly after tick ``t`` (f32 scalar,
+    +inf when every slot has arrived).
+
+    The telescoping engine's arrival component of the event horizon
+    (docs/events.md): padded slots carry ``submit_t = inf`` and arrived
+    slots have left STATUS_UNBORN, so the min over the still-unborn mask
+    IS the next ``phase_arrive`` event.  Pure masked reduction — batches
+    under the sweep vmap for free.
+    """
+    pending = (containers.status == STATUS_UNBORN) & (containers.submit_t > t)
+    return jnp.min(jnp.where(pending, containers.submit_t, jnp.inf))
 
 
 def _assign_jobs_tasks(rng: np.random.Generator, n_jobs: int, n_tasks: int,

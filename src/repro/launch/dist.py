@@ -109,6 +109,14 @@ def _resolve_dist_plan(plan: ExecPlan | None, cfg: SimConfig,
             overlap=used.get("overlap", True),
             procs=used.get("num_procs", 2),
             devices_per_proc=used.get("devices_per_proc", 1))
+    if plan.telescope:
+        # the GridSpec worker contract has no telescope field — passing
+        # it through would silently run workers per-tick while the caller
+        # believes they telescope
+        raise ValueError(
+            "telescope is not threaded through the multi-process fabric "
+            "yet — drop procs (the in-process sweep telescopes) or drop "
+            "telescope")
     return plan, plan.apply_to_config(cfg)
 
 

@@ -33,6 +33,11 @@ def add_exec_args(ap: argparse.ArgumentParser, *, chunk: bool = True,
                        help="stream the horizon in chunks of this many "
                             "ticks with online summaries (O(state) memory; "
                             "default: stacked per-tick metrics)")
+        g.add_argument("--telescope", action="store_true",
+                       help="macro-tick engine: advance dt >= 1 ticks per "
+                            "step over quiescent intervals, folding skipped "
+                            "ticks' metrics in closed form (docs/events.md; "
+                            "bit-identical final state, no per-tick series)")
     if slab:
         g.add_argument("--slab", type=int, default=None,
                        help="with --chunk: iterate the grid in slabs of "

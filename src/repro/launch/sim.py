@@ -77,6 +77,10 @@ def run_one(policy_name: str, cfg: SimConfig, spec, sim0, params, csv=None,
     if csv and plan.chunk is not None:
         raise ValueError("--csv needs the stacked per-tick series; "
                          "drop --chunk to export one")
+    if csv and plan.telescope:
+        raise ValueError("--csv needs the stacked per-tick series; "
+                         "telescoping skips quiescent ticks and keeps only "
+                         "online summaries — drop --telescope to export one")
     t0 = time.time()
     final, metrics = run_sim(sim0, cfg, get_policy(policy_name, weights),
                              spec.n_hosts, spec.n_nodes, cfg.horizon,

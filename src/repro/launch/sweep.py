@@ -33,7 +33,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec
 from repro.core import (SimConfig, get_policy, list_policies,
                         sweep_summaries, sweep_table)
 from repro.core import stats
-from repro.core.engine import resolve_plan, simulate, simulate_chunk
+from repro.core.engine import (resolve_plan, simulate, simulate_chunk,
+                               simulate_telescoped)
 from repro.core.scenario import (ScenarioSpec, build_scenarios,
                                  default_scenarios)
 from repro.core.scheduling import validate_weights
@@ -342,7 +343,7 @@ def make_grad_fn(cfg: SimConfig, n_hosts: int, n_nodes: int, horizon: int,
 
 def make_stream_fn(cfg: SimConfig, n_hosts: int, n_nodes: int, horizon: int,
                    chunk: int, slab: int | None = None, devices=None,
-                   overlap: bool = True):
+                   overlap: bool = True, telescope: bool = False):
     """The streaming sweep: the same [P, S, N] grid as ``make_sweep_fn``,
     but iterated in device-multiple SLABS of cells through ONE compiled
     slab-chunk step, with per-tick metrics folded into ``SummaryAcc``
@@ -391,6 +392,11 @@ def make_stream_fn(cfg: SimConfig, n_hosts: int, n_nodes: int, horizon: int,
     mesh = grid_mesh(devices)
     n_dev = 1 if mesh is None else mesh.devices.size
     jtu = jax.tree_util
+    # the telescoped cell is signature-identical to simulate_chunk — the
+    # macro-tick engine slots into the SAME slab/chunk/overlap machinery,
+    # each vmapped lane telescoping independently (per-cell dt; the inner
+    # while_loop runs until every lane's horizon, select-masked per lane)
+    cell_fn = simulate_telescoped if telescope else simulate_chunk
 
     def step(sims, accs, pols, rps, t0, csz):
         if mesh is not None:
@@ -403,8 +409,8 @@ def make_stream_fn(cfg: SimConfig, n_hosts: int, n_nodes: int, horizon: int,
             accs, pols, rps = jax.tree.map(shard, (accs, pols, rps))
 
         def cell(sim, acc, pol, rp):
-            return simulate_chunk(sim, acc, t0, cfg, pol, n_hosts, n_nodes,
-                                  csz, rp)
+            return cell_fn(sim, acc, t0, cfg, pol, n_hosts, n_nodes,
+                           csz, rp)
 
         flat, treedef = jtu.tree_flatten_with_path(sims)
         sim_axes = jtu.tree_unflatten(
@@ -584,8 +590,14 @@ def run_sweep(policies: Sequence[str] | None = None,
     step — [P, S, N] summaries without ever holding [P, S, N, T] metrics.
     Cell results are bit-identical either way.  ``plan.overlap``
     (streaming only) gathers each slab's results one slab behind the
-    dispatch so host transfers hide under device compute.  The plan's
-    kernel selectors fold into ``cfg`` before compilation.
+    dispatch so host transfers hide under device compute.
+    ``plan.telescope`` swaps the streaming cell for the macro-tick engine
+    (``engine.simulate_telescoped``, docs/events.md): each lane advances
+    dt >= 1 ticks per step over quiescent intervals with closed-form
+    summary folds — finals stay bit-identical, summaries exact to the
+    documented fold precision; without a ``plan.chunk`` the whole horizon
+    runs as one chunk.  The plan's kernel selectors fold into ``cfg``
+    before compilation.
     """
     policies = list(policies if policies is not None else list_policies())
     scenarios = list(scenarios if scenarios is not None
@@ -597,10 +609,14 @@ def run_sweep(policies: Sequence[str] | None = None,
                                           n_spine=n_spine, n_leaf=n_leaf,
                                           seeds=seeds)
     pol = stack_policies(policies)
-    if plan.chunk is not None:
+    if plan.chunk is not None or plan.telescope:
+        # telescoping rides the streaming path (there is no per-tick series
+        # to stack); without an explicit chunk the whole horizon is one
+        # macro-stepped chunk
         fn = make_stream_fn(cfg, net_spec.n_hosts, net_spec.n_nodes,
-                            cfg.horizon, chunk=plan.chunk, slab=plan.slab,
-                            devices=plan.devices, overlap=plan.overlap)
+                            cfg.horizon, chunk=plan.chunk or cfg.horizon,
+                            slab=plan.slab, devices=plan.devices,
+                            overlap=plan.overlap, telescope=plan.telescope)
         t0 = time.time()
         finals, summary = fn(sims, pol, rps)
         return SweepResult(policies=policies, scenarios=scenarios,
@@ -630,13 +646,15 @@ def _run_sim_vmapped_jit(sims, cfg, policy, params, n_hosts, n_nodes,
 
 
 @functools.lru_cache(maxsize=None)
-def _vmapped_chunk_step_jit():
+def _vmapped_chunk_step_jit(telescope: bool = False):
     """Jitted seed-batched chunk step (lazy: the donation decision reads
     the backend, exactly like ``engine._chunk_step_jit``)."""
+    fn = simulate_telescoped if telescope else simulate_chunk
+
     def step(sims, accs, t0, policy, params, cfg, n_hosts, n_nodes, chunk):
         return jax.vmap(
-            lambda s, a: simulate_chunk(s, a, t0, cfg, policy, n_hosts,
-                                        n_nodes, chunk, params))(sims, accs)
+            lambda s, a: fn(s, a, t0, cfg, policy, n_hosts,
+                            n_nodes, chunk, params))(sims, accs)
     donate = (0, 1) if jax.default_backend() != "cpu" else ()
     return jax.jit(step, static_argnames=("cfg", "n_hosts", "n_nodes",
                                           "chunk"),
@@ -646,7 +664,7 @@ def _vmapped_chunk_step_jit():
 def run_sim_vmapped(sims: SimState, cfg: SimConfig, policy: PolicyParams,
                     n_hosts: int, n_nodes: int, horizon: int,
                     params: RunParams | None = None,
-                    chunk: int | None = None):
+                    chunk: int | None = None, telescope: bool = False):
     """Seed-batched single-policy run (leading axis on every SimState leaf)
     — the degenerate 1x1xN sweep, kept as a convenience for benchmarks.
     Jitted at module level so repeat calls hit the warm cache (keyed on
@@ -657,14 +675,20 @@ def run_sim_vmapped(sims: SimState, cfg: SimConfig, policy: PolicyParams,
     (finals, [N, T] stacked metrics), O(batch x state) memory at any
     horizon.  ``t0`` stays unbatched through the vmap, so the periodic
     delay-refresh cond survives exactly as in the stacked path.
+
+    ``telescope`` swaps the chunk cell for the macro-tick engine
+    (``engine.simulate_telescoped``, docs/events.md) — per-lane dt,
+    finals bit-identical; implies the streaming path (whole horizon as
+    one chunk when ``chunk`` is None).
     """
     params = cfg.run_params() if params is None else params
-    if chunk is None:
+    if chunk is None and not telescope:
         return _run_sim_vmapped_jit(sims, cfg, policy, params, n_hosts,
                                     n_nodes, horizon)
+    chunk = chunk or horizon
     N = sims.t.shape[0]
     stats.check_chunk(chunk, int(sims.containers.status.shape[-1]))
-    step, donated = _vmapped_chunk_step_jit()
+    step, donated = _vmapped_chunk_step_jit(telescope)
     cur = jax.tree.map(jnp.array, sims) if donated else sims
     online = stats.online_init((N,))
     t0 = 0

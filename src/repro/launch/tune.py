@@ -205,14 +205,19 @@ def run_tune(n_samples: int = 16, seeds: Sequence[int] = (0,),
             raise ValueError("procs > 1 requires chunk (the distributed "
                              "fabric streams slabs; there is no stacked "
                              "multi-process path)")
+        if plan.telescope:
+            raise ValueError("telescope is not threaded through the "
+                             "multi-process fabric yet — drop procs or "
+                             "telescope")
         from repro.launch.dist import make_dist_fn
         fn = make_dist_fn(cfg, scenarios, seeds, weights=W,
                           n_hosts=n_hosts, n_spine=n_spine, n_leaf=n_leaf,
                           plan=plan)
-    elif plan.chunk is not None:
+    elif plan.chunk is not None or plan.telescope:
         fn = make_stream_fn(cfg, net_spec.n_hosts, net_spec.n_nodes,
-                            cfg.horizon, chunk=plan.chunk, slab=plan.slab,
-                            devices=plan.devices, overlap=plan.overlap)
+                            cfg.horizon, chunk=plan.chunk or cfg.horizon,
+                            slab=plan.slab, devices=plan.devices,
+                            overlap=plan.overlap, telescope=plan.telescope)
     else:
         fn = make_sweep_fn(cfg, net_spec.n_hosts, net_spec.n_nodes,
                            cfg.horizon, devices=plan.devices)
@@ -287,10 +292,15 @@ def _make_oracle(cfg: SimConfig, net_spec, horizon: int, plan: ExecPlan):
     """The hard-placement scorer the grad/CEM loops re-score against —
     ``soft_placement`` OFF, so every score is the true simulator's."""
     hard = dataclasses.replace(cfg, soft_placement=False)
-    if plan.chunk is not None:
+    if plan.chunk is not None or plan.telescope:
+        # soft placement is OFF here, so the oracle may telescope even
+        # though the surrogate descent itself stays per-tick (while_loop
+        # has no reverse-mode autodiff — docs/events.md)
         return make_stream_fn(hard, net_spec.n_hosts, net_spec.n_nodes,
-                              horizon, chunk=plan.chunk, slab=plan.slab,
-                              devices=plan.devices, overlap=plan.overlap)
+                              horizon, chunk=plan.chunk or horizon,
+                              slab=plan.slab, devices=plan.devices,
+                              overlap=plan.overlap,
+                              telescope=plan.telescope)
     return make_sweep_fn(hard, net_spec.n_hosts, net_spec.n_nodes, horizon,
                          devices=plan.devices)
 

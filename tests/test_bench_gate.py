@@ -33,6 +33,7 @@ def quick_from(base):
         "tune_grad": copy.deepcopy(base["tune_grad"]),
         "sweep_dist": copy.deepcopy(base["sweep_dist"]),
         "longhorizon": lh,
+        "telescope": copy.deepcopy(base["telescope"]),
     }
 
 
@@ -77,6 +78,14 @@ def test_committed_baseline_has_the_gate_inputs():
     assert tg["grad_vs_random"] >= 1.0, tg
     assert tg["grad_vs_incumbent"] >= 1.0, tg
     assert tg["oracle_evals"] > 0 and tg["surrogate_evals"] > 0
+    # PR 10 acceptance: the committed telescope entry must demonstrate
+    # bit-identical telescoped finals AND the >= 3x sparse-point speedup
+    tl = base.get("telescope")
+    assert tl, "full bench must record the telescope entry"
+    assert tl["finals_bitwise_equal"] is True
+    assert tl["summary_close"] is True
+    assert tl["telescope_speedup"] >= 3.0, tl
+    assert 0.0 < tl["full_tick_fraction"] < 1.0, tl
 
 
 def test_gate_passes_on_matching_run():
@@ -536,6 +545,116 @@ def test_gate_keeps_tune_grad_wall_out_of_the_ratio_pack():
     assert check(quick, base, TOL) == []
 
 
+# -- the tick-telescoping gate (PR 10) --------------------------------------
+
+def test_gate_fails_without_committed_telescope():
+    base = load_base()
+    quick = quick_from(base)
+    del base["telescope"]
+    failures = check(quick, base, TOL)
+    assert any("telescope" in m and "re-run the full bench" in m
+               for m in failures), failures
+
+
+def test_gate_fails_without_telescope_entry():
+    base = load_base()
+    quick = quick_from(base)
+    del quick["telescope"]
+    failures = check(quick, base, TOL)
+    assert any("no 'telescope' entry in the quick run" in m
+               for m in failures), failures
+
+
+def test_gate_fails_when_telescope_equality_breaks():
+    """Bitwise equality of telescoped vs per-tick finals is THE exactness
+    claim — a quick run losing it must fail regardless of wall-clock."""
+    base = load_base()
+    quick = quick_from(base)
+    quick["telescope"]["finals_bitwise_equal"] = False
+    failures = check(quick, base, TOL)
+    assert any("bit-identical" in m and "telescope" in m
+               for m in failures), failures
+
+
+def test_gate_fails_when_baseline_lost_telescope_equality():
+    """A baseline refresh recording finals_bitwise_equal=false must fail
+    loudly — the exactness claim would be ungated from then on."""
+    base = load_base()
+    quick = quick_from(base)
+    base["telescope"]["finals_bitwise_equal"] = False
+    failures = check(quick, base, TOL)
+    assert any("ungated" in m and "equality" in m for m in failures), failures
+
+
+def test_gate_fails_when_baseline_lost_telescope_speedup():
+    """A baseline refresh below the >= 3x acceptance floor (e.g. someone
+    moved the bench point into a dense-event regime) must fail — the
+    headline perf claim would be ungated."""
+    base = load_base()
+    quick = quick_from(base)
+    base["telescope"]["telescope_speedup"] = 2.4
+    failures = check(quick, base, TOL)
+    assert any("ungated" in m and "3" in m and "speedup" in m
+               for m in failures), failures
+
+
+def test_gate_fails_on_telescope_speedup_regression():
+    """telescope_speedup is within-run (off vs on through the same vmapped
+    driver on the same box) so machine skew cancels; falling >tol below
+    the committed ratio means quiescent ticks stopped telescoping."""
+    base = load_base()
+    quick = quick_from(base)
+    quick["telescope"]["telescope_speedup"] = round(
+        base["telescope"]["telescope_speedup"] * (1 - TOL - 0.2), 2)
+    failures = check(quick, base, TOL)
+    assert any("within-run telescope_speedup" in m for m in failures), failures
+
+
+def test_gate_fails_on_telescope_grid_mismatch():
+    base = load_base()
+    quick = quick_from(base)
+    quick["telescope"]["horizon"] += 1
+    failures = check(quick, base, TOL)
+    assert any("telescope grid" in m for m in failures), failures
+
+
+def test_gate_skips_cross_backend_telescope_throughput():
+    """on_ticks_per_s across backends is meaningless — skip with a note;
+    the within-run speedup and equality gates still apply."""
+    base = load_base()
+    quick = quick_from(base)
+    base["telescope"]["backend"] = "gpu"
+    quick["telescope"]["backend"] = "cpu"
+    quick["telescope"]["on_ticks_per_s"] = round(
+        base["telescope"]["on_ticks_per_s"] * 0.01, 2)
+    failures = check(quick, base, TOL)
+    assert not any("on_ticks_per_s" in m for m in failures), failures
+
+
+def test_gate_telescope_ticks_joins_the_ratio_pack():
+    """The ON-side throughput is skew-normalized with the other wall-clock
+    metrics: dropping it far below the pack fails."""
+    base = load_base()
+    quick = quick_from(base)
+    quick["telescope"]["on_ticks_per_s"] = round(
+        base["telescope"]["on_ticks_per_s"] * (1 - TOL - 0.25), 2)
+    failures = check(quick, base, TOL)
+    assert any("telescope on_ticks_per_s" in m for m in failures), failures
+
+
+def test_gate_keeps_telescope_walls_out_of_the_ratio_pack():
+    """The raw off/on walls are single-machine absolutes (the OFF side is
+    deliberately slow); inflating both 100x must not fail — only the
+    within-run speedup, equality, and the ON throughput ratio gate."""
+    base = load_base()
+    quick = quick_from(base)
+    quick["telescope"]["off_wall_s"] = round(
+        quick["telescope"]["off_wall_s"] * 100, 2)
+    quick["telescope"]["on_wall_s"] = round(
+        quick["telescope"]["on_wall_s"] * 100, 2)
+    assert check(quick, base, TOL) == []
+
+
 # -- the perf-history archive (PR 8) ----------------------------------------
 
 def test_archive_appends_and_dedups(tmp_path):
@@ -564,6 +683,9 @@ def test_archive_appends_and_dedups(tmp_path):
         # PR 9: the headline row tracks the differentiable-tuning claim
         assert "tune_grad_vs_random" in row
         assert "tune_grad_best_oracle" in row
+        # PR 10: the headline row tracks the telescoping claim
+        assert "telescope_speedup" in row
+        assert "telescope_bitwise_equal" in row
 
 
 def test_committed_history_has_rows():

@@ -1,0 +1,334 @@
+"""Macro-tick telescoping acceptance: telescoped == per-tick (PR 10).
+
+The tentpole property — ``ExecPlan.telescope`` must be a pure execution
+change, never a dynamics change:
+
+* final state bit-for-bit equal to the per-tick path, for ALL six
+  registered policies, stacked and chunked, and under the sweep vmap;
+* integer summary keys (sums, counts, peaks) EXACTLY equal;
+* float summary keys equal to ~f32-ulp (dt-weighted Kahan/Welford folds);
+* a single dt-weighted ``SummaryAcc`` fold equals dt repeated unit folds
+  (bit-exact integers, ~1-ulp float means), across chunk boundaries and
+  under vmap;
+* ``delay_update_interval=0`` ("refresh once at t=0, then frozen") is
+  bitwise the periodic refresh when the refresh is idempotent;
+* the engine actually telescopes (full-tick count << horizon on a
+  quiescent-tail config) — a speedup claim needs skipped ticks to exist.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (SimConfig, get_policy, list_policies, run_sim,
+                        summarize)
+from repro.core import stats
+from repro.core.engine import simulate_telescoped
+from repro.core.scenario import ScenarioSpec, build_scenario, build_scenarios
+from repro.core.types import ExecPlan, OnlineSummary, TickMetrics
+from repro.launch.sweep import run_sim_vmapped, run_sweep
+
+from test_streaming import (assert_rows_match, assert_trees_bitwise_equal,
+                            build_small, small_cfg)
+
+I32 = jnp.int32
+F32 = jnp.float32
+
+SEEDS = (0, 3)
+
+
+# ---------------------------------------------------------------------------
+# weighted SummaryAcc folds (satellite: fold correctness in isolation)
+# ---------------------------------------------------------------------------
+
+def synth_metrics(seed=0):
+    """One fully-populated TickMetrics sample (scalar leaves)."""
+    rng = np.random.default_rng(seed)
+    i = lambda v: jnp.asarray(v, I32)
+    f = lambda v: jnp.asarray(v, F32)
+    return TickMetrics(
+        t=f(7.0), n_overloaded=i(2), n_inactive=i(1), n_running=i(9),
+        n_deployed=i(11), n_communicating=i(4), n_waiting=i(3),
+        n_completed=i(5), n_migrating=i(1), new_arrivals=i(0),
+        decisions=i(0), migrations=i(0),
+        util_variance=f(rng.uniform(0.0, 0.2)),
+        mean_util=f(rng.uniform(0.2, 0.9)), active_flows=i(6),
+        mean_flow_rate=f(rng.uniform(1.0, 50.0)),
+        soft_comm=f(rng.uniform(0.0, 2.0)), soft_util=f(rng.uniform(0, 1)),
+        soft_n=f(3.0), soft_mig=f(rng.uniform(0, 1)), soft_mig_n=f(2.0))
+
+
+def unit_folds(acc, m, dt):
+    for _ in range(dt):
+        acc = stats.acc_update(acc, m)
+    return acc
+
+
+def assert_acc_close(weighted, repeated, rtol=1e-5):
+    wd, rd = weighted._asdict(), repeated._asdict()
+    for name, a in wd.items():
+        a, b = np.asarray(a), np.asarray(rd[name])
+        if name.startswith("c_"):
+            continue   # Kahan compensation is summation-order detail;
+            #            what must agree is the RECOVERED total below
+        if name.startswith("sum_") and ("c_" + name[4:]) in wd:
+            a = a.astype(np.float64) + np.asarray(wd["c_" + name[4:]],
+                                                  np.float64)
+            b = b.astype(np.float64) + np.asarray(rd["c_" + name[4:]],
+                                                  np.float64)
+            np.testing.assert_allclose(a, b, rtol=rtol, atol=1e-7,
+                                       err_msg=name)
+        elif a.dtype.kind == "i":
+            assert (a == b).all(), (name, a, b)
+        else:
+            np.testing.assert_allclose(a, b, rtol=rtol, atol=1e-7,
+                                       err_msg=name)
+
+
+@pytest.mark.parametrize("dt", [1, 2, 7, 100])
+def test_weighted_fold_equals_unit_folds(dt):
+    """ONE dt-weighted fold == dt repeated unit folds: integer sums and
+    peaks bit-exact, Kahan sums and Welford moments to ~1 ulp."""
+    m = synth_metrics()
+    # start from a non-trivial accumulator so the Welford merge sees an
+    # existing (n, mean, m2) — the dt=constant merge must be order-exact
+    acc0 = unit_folds(stats.acc_init(), synth_metrics(seed=9), 3)
+    weighted = stats.acc_update_weighted(acc0, m, jnp.asarray(dt, I32))
+    repeated = unit_folds(acc0, m, dt)
+    assert_acc_close(weighted, repeated)
+
+
+def test_weighted_fold_dt_zero_is_bitwise_noop():
+    acc0 = unit_folds(stats.acc_init(), synth_metrics(seed=4), 2)
+    out = stats.acc_update_weighted(acc0, synth_metrics(), jnp.asarray(0, I32))
+    assert_trees_bitwise_equal(acc0, out)
+
+
+def test_weighted_fold_across_chunk_boundary():
+    """Splitting one quiescent interval across two accumulators joined by
+    the host ``online_fold`` matches the single-accumulator fold — the
+    streaming chunk boundary mid-interval changes nothing."""
+    m = synth_metrics(seed=2)
+    one = stats.online_fold(
+        stats.online_init(),
+        stats.acc_update_weighted(stats.acc_init(), m, jnp.asarray(10, I32)))
+    split = stats.online_init()
+    for dt in (4, 6):
+        acc = stats.acc_update_weighted(stats.acc_init(), m,
+                                        jnp.asarray(dt, I32))
+        split = stats.online_fold(split, acc)
+    for name, a, b in zip(one._fields, one, split):
+        a, b = np.asarray(a), np.asarray(b)
+        if a.dtype.kind == "i":
+            assert (a == b).all(), name
+        else:
+            np.testing.assert_allclose(a, b, rtol=1e-6, err_msg=name)
+
+
+def test_weighted_fold_under_vmap():
+    """Batched dt (the sweep's per-cell horizon): each lane folds exactly
+    as its unbatched twin, dt=0 lanes included."""
+    m = synth_metrics(seed=5)
+    dts = jnp.asarray([0, 1, 3, 11], I32)
+    accs = jax.vmap(lambda dt: stats.acc_update_weighted(
+        stats.acc_init(), m, dt))(dts)
+    for k, dt in enumerate(np.asarray(dts)):
+        lane = jax.tree.map(lambda x: x[k], accs)
+        assert_acc_close(lane, unit_folds(stats.acc_init(), m, int(dt)))
+
+
+# ---------------------------------------------------------------------------
+# tentpole: telescoped == per-tick, all policies, stacked/chunked/vmapped
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", list_policies())
+def test_telescope_equals_stacked_all_policies(policy):
+    cfg = small_cfg()
+    net_spec, sim0, rp = build_small(cfg)
+    pol = get_policy(policy)
+    f_st, m_st = run_sim(sim0, cfg, pol, net_spec.n_hosts, net_spec.n_nodes,
+                         cfg.horizon, params=rp)
+    f_tl, os_tl = run_sim(sim0, cfg, pol, net_spec.n_hosts, net_spec.n_nodes,
+                          cfg.horizon, params=rp,
+                          plan=ExecPlan(telescope=True))
+    assert isinstance(os_tl, OnlineSummary)
+    assert int(os_tl.n_ticks) == cfg.horizon
+    assert_trees_bitwise_equal(f_st, f_tl)
+    assert_rows_match(summarize(f_st, m_st), summarize(f_tl, os_tl))
+
+
+@pytest.mark.parametrize("chunk", [17, 64])
+def test_telescope_chunked(chunk):
+    """Telescoping under non-dividing and > horizon chunk sizes: chunk
+    boundaries land mid-quiescent-interval and must only split the fold."""
+    cfg = small_cfg()
+    net_spec, sim0, rp = build_small(cfg)
+    pol = get_policy("netaware")
+    f_st, m_st = run_sim(sim0, cfg, pol, net_spec.n_hosts, net_spec.n_nodes,
+                         cfg.horizon, params=rp)
+    f_tl, os_tl = run_sim(sim0, cfg, pol, net_spec.n_hosts, net_spec.n_nodes,
+                          cfg.horizon, params=rp,
+                          plan=ExecPlan(telescope=True, chunk=chunk))
+    assert int(os_tl.n_ticks) == cfg.horizon
+    assert_trees_bitwise_equal(f_st, f_tl)
+    assert_rows_match(summarize(f_st, m_st), summarize(f_tl, os_tl))
+
+
+def test_telescope_longer_horizon_quiescent_tail():
+    """A horizon long past the last completion: the all-idle tail must
+    telescope without drifting state or miscounting summary ticks."""
+    cfg = small_cfg(horizon=200)
+    net_spec, sim0, rp = build_small(cfg)
+    pol = get_policy("firstfit")
+    f_st, m_st = run_sim(sim0, cfg, pol, net_spec.n_hosts, net_spec.n_nodes,
+                         cfg.horizon, params=rp)
+    f_tl, os_tl = run_sim(sim0, cfg, pol, net_spec.n_hosts, net_spec.n_nodes,
+                          cfg.horizon, params=rp,
+                          plan=ExecPlan(telescope=True, chunk=64))
+    assert int(os_tl.n_ticks) == cfg.horizon
+    assert_trees_bitwise_equal(f_st, f_tl)
+    assert_rows_match(summarize(f_st, m_st), summarize(f_tl, os_tl))
+
+
+def test_telescope_vmapped_equals_stacked():
+    """Per-lane dt under the sweep vmap (the batched while_loop runs to
+    max(t) with finished lanes select-masked): every lane bit-exact."""
+    cfg = small_cfg()
+    net_spec, sims, rps = build_scenarios([ScenarioSpec("baseline")], cfg,
+                                          n_hosts=8, n_spine=2, n_leaf=4,
+                                          seeds=(0, 1, 2))
+    sims1 = jax.tree.map(lambda x: x[0], sims)
+    rp1 = jax.tree.map(lambda x: x[0], rps)
+    pol = get_policy("jobgroup")
+    f_st, m_st = run_sim_vmapped(sims1, cfg, pol, net_spec.n_hosts,
+                                 net_spec.n_nodes, cfg.horizon, rp1)
+    f_tl, os_tl = run_sim_vmapped(sims1, cfg, pol, net_spec.n_hosts,
+                                  net_spec.n_nodes, cfg.horizon, rp1,
+                                  chunk=13, telescope=True)
+    assert_trees_bitwise_equal(f_st, f_tl)
+    ref = stats.online_from_metrics(m_st)
+    for name in OnlineSummary._fields:
+        a = np.asarray(getattr(ref, name))
+        b = np.asarray(getattr(os_tl, name))
+        if a.dtype.kind == "i":
+            assert (a == b).all(), name
+        else:
+            np.testing.assert_allclose(a, b, rtol=3e-6, err_msg=name)
+
+
+def test_telescope_sweep_equals_stacked_sweep():
+    """Full grid, telescoped slabs: finals bit-exact, summary rows
+    int-exact / float to f32 ulp, and still at most main + tail compiles."""
+    cfg = small_cfg()
+    scens = [ScenarioSpec("baseline"), ScenarioSpec("slow_net", bw=200.0)]
+    kw = dict(scenarios=scens, seeds=SEEDS, cfg=cfg, n_hosts=8, n_spine=2,
+              n_leaf=4)
+    st = run_sweep(policies=["firstfit", "netaware"], **kw)
+    tl = run_sweep(policies=["firstfit", "netaware"],
+                   plan=ExecPlan(telescope=True, chunk=17, slab=5), **kw)
+    assert tl.metrics is None and isinstance(tl.summary, OnlineSummary)
+    assert tl.compile_cache_misses <= 2   # main chunk + tail
+    assert_trees_bitwise_equal(st.finals, tl.finals)
+    for a, b in zip(st.summaries(), tl.summaries()):
+        assert_rows_match(a, b)
+
+
+def test_telescope_sweep_without_chunk():
+    """``ExecPlan(telescope=True)`` alone rides the streaming path with
+    the whole horizon as one chunk."""
+    cfg = small_cfg()
+    kw = dict(scenarios=[ScenarioSpec("baseline")], seeds=(0,), cfg=cfg,
+              n_hosts=8, n_spine=2, n_leaf=4)
+    st = run_sweep(policies=["firstfit"], **kw)
+    tl = run_sweep(policies=["firstfit"], plan=ExecPlan(telescope=True), **kw)
+    assert tl.metrics is None and isinstance(tl.summary, OnlineSummary)
+    assert_trees_bitwise_equal(st.finals, tl.finals)
+    for a, b in zip(st.summaries(), tl.summaries()):
+        assert_rows_match(a, b)
+
+
+def test_telescope_actually_telescopes():
+    """The speedup claim needs skipped ticks to exist: on a config with a
+    long quiescent tail the full-tick count must be a small fraction of
+    the horizon (``with_stats`` exposes it)."""
+    cfg = small_cfg(horizon=400, delay_update_interval=100)
+    net_spec, sim0, rp = build_small(cfg)
+    acc = stats.acc_init()
+    _, _, n_full = simulate_telescoped(
+        sim0, acc, jnp.asarray(0, I32), cfg, get_policy("firstfit"),
+        net_spec.n_hosts, net_spec.n_nodes, cfg.horizon, rp,
+        with_stats=True)
+    assert int(n_full) < cfg.horizon // 2, int(n_full)
+
+
+def test_telescope_rejects_soft_placement():
+    """The macro step is a ``lax.while_loop`` — no reverse-mode autodiff,
+    and the soft surrogate's per-tick sums are exactly what telescoping
+    skips.  Loud error, not silent dt=1."""
+    cfg = small_cfg(soft_placement=True)
+    net_spec, sim0, rp = build_small(cfg)
+    with pytest.raises(ValueError, match="soft_placement"):
+        simulate_telescoped(sim0, stats.acc_init(), jnp.asarray(0, I32),
+                            cfg, get_policy("netaware"), net_spec.n_hosts,
+                            net_spec.n_nodes, cfg.horizon, rp)
+
+
+def test_csv_with_telescope_rejected():
+    """launch/sim.py must refuse --csv under telescoping the same way it
+    refuses --csv with --chunk — skipped ticks have no per-tick rows."""
+    from repro.launch.sim import run_one
+    with pytest.raises(ValueError, match="telescop"):
+        run_one("firstfit", small_cfg(), None, None, None, csv="x.csv",
+                plan=ExecPlan(telescope=True))
+
+
+# ---------------------------------------------------------------------------
+# satellite: delay_update_interval=0 — refresh once at t=0, then frozen
+# ---------------------------------------------------------------------------
+
+def test_frozen_refresh_oracle_matches_periodic():
+    """frozen == periodic when every refresh is idempotent: constant
+    bw/loss (baseline scenario), ``queue_coef=0`` (no utilization term in
+    the link delay) and zeroed util/cross-leaf comm-cost weights (every
+    built-in carries the ``weight_vector`` defaults, so override them by
+    name) make each periodic rebuild recompute the same matrix —
+    interval=0 must then be bitwise the interval=K run."""
+    rp_kw = dict(queue_coef=jnp.asarray(0.0, F32))
+    pol = get_policy("firstfit", dict(util=0.0, cross_leaf=0.0))
+    results = []
+    for interval in (10, 0):
+        cfg = small_cfg(delay_update_interval=interval)
+        net_spec, sim0, rp = build_small(cfg)
+        rp = rp._replace(**rp_kw)
+        results.append(run_sim(sim0, cfg, pol,
+                               net_spec.n_hosts, net_spec.n_nodes,
+                               cfg.horizon, params=rp))
+    (f_per, m_per), (f_fr, m_fr) = results
+    assert_trees_bitwise_equal(f_per, f_fr)
+    assert_rows_match(summarize(f_per, m_per), summarize(f_fr, m_fr))
+
+
+def test_frozen_refresh_telescopes_bitwise():
+    """interval=0 under telescoping: the horizon loses its refresh
+    component entirely and the run still matches per-tick bitwise."""
+    cfg = small_cfg(delay_update_interval=0)
+    net_spec, sim0, rp = build_small(cfg)
+    pol = get_policy("netaware")
+    f_st, m_st = run_sim(sim0, cfg, pol, net_spec.n_hosts, net_spec.n_nodes,
+                         cfg.horizon, params=rp)
+    f_tl, os_tl = run_sim(sim0, cfg, pol, net_spec.n_hosts, net_spec.n_nodes,
+                          cfg.horizon, params=rp,
+                          plan=ExecPlan(telescope=True))
+    assert_trees_bitwise_equal(f_st, f_tl)
+    assert_rows_match(summarize(f_st, m_st), summarize(f_tl, os_tl))
+
+
+def test_frozen_refresh_smoke_still_simulates():
+    """interval=0 with the DEFAULT queue_coef is a behavior change by
+    design (delays freeze at their t=0 values); it must still run and
+    complete work."""
+    cfg = small_cfg(delay_update_interval=0)
+    net_spec, sim0, rp = build_small(cfg)
+    f, m = run_sim(sim0, cfg, get_policy("netaware"), net_spec.n_hosts,
+                   net_spec.n_nodes, cfg.horizon, params=rp)
+    assert summarize(f, m)["n_completed"] > 0
